@@ -1,0 +1,115 @@
+"""Figures 6, 7(a), 7(b), 8: data/query-characteristic sweeps.
+
+Each ``fig*`` function reproduces the paper's parameter sweep and returns
+rows; ``main`` prints them. Plots are intentionally tables (headless env).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.aqp import flights_queries as fq
+
+
+def fig6_selectivity() -> List[Dict]:
+    """F-q1 wall time / blocks fetched vs origin-airport selectivity,
+    for all four bounder configurations."""
+    f = common.frame()
+    ds = common.dataset()
+    counts = np.bincount(ds.columns["origin"],
+                         minlength=common.N_AIRPORTS)
+    # pick airports spanning the selectivity range (Zipf law)
+    order = np.argsort(-counts)
+    picks = [order[0], order[len(order) // 8], order[len(order) // 3],
+             order[2 * len(order) // 3]]
+    rows = []
+    for airport in picks:
+        sel = counts[airport] / ds.n_rows
+        for label, bounder, rt in common.BOUNDER_ABLATION:
+            q = fq.f_q1(airport=int(airport), eps=0.5, bounder=bounder,
+                        rangetrim=rt)
+            res, t = common.timed(f.run, q, sampling="active_peek",
+                                  start_block=0)
+            rows.append(dict(fig="6", airport=int(airport),
+                             selectivity=float(sel), approach=label,
+                             wall_s=t, blocks=int(res.blocks_fetched)))
+    return rows
+
+
+def fig7a_epsilon() -> List[Dict]:
+    """Requested max relative error vs achieved relative error (F-q1)."""
+    f = common.frame()
+    truth = common.exact_group_avg("dep_delay", "origin")[0]
+    rows = []
+    for eps in [2.0, 1.0, 0.5, 0.25, 0.1]:
+        for label, bounder, rt in common.BOUNDER_ABLATION:
+            q = fq.f_q1(airport=0, eps=eps, bounder=bounder, rangetrim=rt)
+            res, t = common.timed(f.run, q, sampling="active_peek",
+                                  start_block=0)
+            achieved = abs(res.estimate[0] - truth) / abs(truth)
+            rows.append(dict(fig="7a", eps=eps, approach=label,
+                             achieved_rel_err=float(achieved),
+                             within_request=bool(achieved <= eps),
+                             blocks=int(res.blocks_fetched)))
+    return rows
+
+
+def fig7b_threshold() -> List[Dict]:
+    """Blocks fetched vs HAVING threshold (F-q2); spikes when the
+    threshold nears a group aggregate."""
+    f = common.frame()
+    aggs = sorted(common.exact_group_avg("dep_delay", "airline").values())
+    # thresholds: far below, near a middle aggregate, exactly between two
+    mid = len(aggs) // 2
+    ths = [aggs[0] - 5.0, aggs[mid] - 2.0, aggs[mid] + 0.05,
+           0.5 * (aggs[mid] + aggs[mid + 1]), aggs[-1] + 5.0]
+    rows = []
+    for thresh in ths:
+        for label, bounder, rt in [("hoeffding", "hoeffding_serfling",
+                                    False),
+                                   ("bernstein+rt", "bernstein", True)]:
+            q = fq.f_q2(thresh=float(thresh), bounder=bounder,
+                        rangetrim=rt)
+            res, t = common.timed(f.run, q, sampling="active_peek",
+                                  start_block=0)
+            rows.append(dict(fig="7b", thresh=float(thresh),
+                             approach=label, wall_s=t,
+                             blocks=int(res.blocks_fetched)))
+    return rows
+
+
+def fig8_min_dep_time() -> List[Dict]:
+    """Blocks fetched vs $min_dep_time (F-q3) for all bounders."""
+    f = common.frame()
+    rows = []
+    for mdt in [0.0, 8 * 60, 16 * 60, 22 * 60 + 50]:
+        for label, bounder, rt in common.BOUNDER_ABLATION:
+            q = fq.f_q3(min_dep_time=float(mdt), bounder=bounder,
+                        rangetrim=rt)
+            res, t = common.timed(f.run, q, sampling="active_peek",
+                                  start_block=0)
+            rows.append(dict(fig="8", min_dep_time=float(mdt),
+                             approach=label, wall_s=t,
+                             blocks=int(res.blocks_fetched)))
+    return rows
+
+
+def main():
+    for fn in (fig6_selectivity, fig7a_epsilon, fig7b_threshold,
+               fig8_min_dep_time):
+        rows = fn()
+        print(f"\n== {fn.__name__} ==")
+        keys = [k for k in rows[0] if k != "fig"]
+        print(" ".join(f"{k:>16s}" for k in keys))
+        for r in rows:
+            print(" ".join(
+                f"{r[k]:16.4f}" if isinstance(r[k], float)
+                else f"{str(r[k]):>16s}" for k in keys))
+    return True
+
+
+if __name__ == "__main__":
+    main()

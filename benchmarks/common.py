@@ -1,0 +1,68 @@
+"""Shared fixtures for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.aqp import EngineConfig, FastFrame, build_scramble
+from repro.data import flights
+
+N_ROWS = 2_000_000
+BLOCK_ROWS = 1024
+N_AIRPORTS = 120
+N_AIRLINES = 14
+SEED = 7
+
+
+@functools.lru_cache(maxsize=1)
+def dataset():
+    return flights.generate(n_rows=N_ROWS, n_airports=N_AIRPORTS,
+                            n_airlines=N_AIRLINES, seed=SEED)
+
+
+@functools.lru_cache(maxsize=1)
+def frame() -> FastFrame:
+    ds = dataset()
+    sc = build_scramble(ds.columns, catalog=ds.catalog,
+                        block_rows=BLOCK_ROWS, seed=SEED + 1)
+    f = FastFrame(sc, EngineConfig(round_blocks=64, lookahead_blocks=1024))
+    # pre-build the indexes so benchmarks measure queries, not index builds
+    f.bitmap("origin")
+    f.bitmap("airline")
+    return f
+
+
+@functools.lru_cache(maxsize=8)
+def exact_group_avg(value_col: str, group_col: str,
+                    filter_col: Optional[str] = None,
+                    filter_op: str = "gt",
+                    filter_val: float = 0.0) -> Dict[int, float]:
+    ds = dataset()
+    v = ds.columns[value_col].astype(np.float64)
+    g = ds.columns[group_col]
+    mask = np.ones_like(v, dtype=bool)
+    if filter_col is not None:
+        c = ds.columns[filter_col]
+        mask = c > filter_val if filter_op == "gt" else c == filter_val
+    out = {}
+    for code in np.unique(g[mask]):
+        out[int(code)] = float(v[(g == code) & mask].mean())
+    return out
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+BOUNDER_ABLATION = [
+    ("hoeffding", "hoeffding_serfling", False),
+    ("hoeffding+rt", "hoeffding_serfling", True),
+    ("bernstein", "bernstein", False),
+    ("bernstein+rt", "bernstein", True),
+]

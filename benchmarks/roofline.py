@@ -1,0 +1,152 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Per (arch x shape x mesh) cell, computes:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw        (fusion-boundary
+                    traffic proxy from the HLO parse — an upper bound; the
+                    analytic floor is also reported)
+  collective term = collective_bytes_per_device / link_bw
+plus MODEL_FLOPS (analytic 6*N_active*D + attention/scan terms) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+All dry-run HLO numbers are per-device (post-SPMD module); the brief's
+"chips x" denominators cancel accordingly.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Analytic useful FLOPs (GLOBAL, whole step).
+
+    train: 3x forward (fwd + 2x bwd); prefill: 1x forward over the prompt;
+    decode: 1x forward for one token (incl. cache attention reads).
+    """
+    cfg = get(arch_id)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        tokens = B * S
+        # matmul params (exclude embedding gather; include lm_head)
+        n_act = cfg.active_param_count()
+        flops = 2.0 * n_act * tokens
+        # attention quadratic term: 2 einsums x 2 flops x causal half
+        if cfg.family == "encdec":
+            half = S // 2
+            attn_dims = cfg.n_heads * cfg.head_dim
+            enc = 2 * 2 * B * half * half * attn_dims * cfg.enc_layers
+            dec = 2 * 2 * B * (half * half / 2) * attn_dims * cfg.n_layers
+            cross = 2 * 2 * B * half * half * attn_dims * cfg.n_layers
+            flops += enc + dec + cross
+        elif cfg.family == "ssm":
+            # state expansion ops ~ 6 * T * d_inner * n per layer
+            flops += 6.0 * tokens * cfg.d_inner * cfg.ssm_state \
+                * cfg.n_layers
+        else:
+            n_attn_layers = (cfg.n_layers if cfg.family != "hybrid"
+                             else cfg.n_layers // cfg.hybrid_attn_period)
+            attn_dims = cfg.n_heads * cfg.head_dim
+            flops += 2 * 2 * B * (S * S / 2) * attn_dims * n_attn_layers
+            if cfg.family == "hybrid":
+                flops += 6.0 * tokens * cfg.d_inner * cfg.ssm_state \
+                    * cfg.n_layers
+        if shape.kind == "train":
+            flops *= 3.0
+        return flops
+    # decode: B tokens, plus attention over the full cache
+    n_act = cfg.active_param_count()
+    flops = 2.0 * n_act * B
+    if cfg.family == "ssm":
+        flops += 6.0 * B * cfg.d_inner * cfg.ssm_state * cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.hybrid_attn_period
+        w = min(S, cfg.sliding_window or S)
+        flops += 2 * 2 * B * w * cfg.n_heads * cfg.head_dim * n_attn
+        flops += 6.0 * B * cfg.d_inner * cfg.ssm_state * cfg.n_layers
+    elif cfg.family == "encdec":
+        flops += 2 * 2 * B * (S + cfg.decode_memory_len) \
+            * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    else:
+        flops += 2 * 2 * B * S * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    return flops
+
+
+def analyze_record(r: Dict) -> Optional[Dict]:
+    if not r.get("ok"):
+        return None
+    h = r["hlo_cost"]
+    n_dev = r["n_devices"]
+    comp = h["flops"] / PEAK_FLOPS
+    mem = h["bytes_accessed"] / HBM_BW
+    coll = h["collective_bytes"] / LINK_BW
+    mf_global = model_flops(r["arch"], r["shape"])
+    mf_pd = mf_global / n_dev
+    dom = max([("compute", comp), ("memory", mem),
+               ("collective", coll)], key=lambda kv: kv[1])[0]
+    ideal = mf_pd / PEAK_FLOPS
+    bound = max(comp, mem, coll)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dom,
+        "model_flops_global": mf_global,
+        "model_flops_per_dev": mf_pd,
+        "useful_ratio": mf_pd / max(h["flops"], 1.0),
+        "roofline_fraction": ideal / max(bound, 1e-30),
+        "peak_gb": r["memory"].get("peak_bytes_per_device", 0) / 1e9,
+        "hlo_flops_per_dev": h["flops"],
+        "hlo_bytes_per_dev": h["bytes_accessed"],
+        "coll_bytes_per_dev": h["collective_bytes"],
+    }
+
+
+def build_table(results_path="benchmarks/results/dryrun.json",
+                mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in json.loads(Path(results_path).read_text()):
+        if r.get("mesh") != mesh:
+            continue
+        a = analyze_record(r)
+        if a:
+            rows.append(a)
+    return sorted(rows, key=lambda x: (x["arch"], x["shape"]))
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | comp (s) | mem (s) | coll (s) | bound | "
+           "MODEL_FLOPS/dev | useful | roofline | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['model_flops_per_dev']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_gb']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = build_table(mesh=mesh)
+        print(f"\n### Roofline — mesh {mesh} ({len(rows)} cells)\n")
+        print(to_markdown(rows))
+    out = {m: build_table(mesh=m) for m in ("16x16", "2x16x16")}
+    Path("benchmarks/results/roofline.json").write_text(
+        json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark driver (deliverable (d)): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV per the harness contract, plus the
+human-readable tables, and persists JSON under benchmarks/results/.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    from benchmarks import (bench_bounders, bench_figures, bench_kernels,
+                            bench_sampling)
+
+    out = {}
+    csv = []
+
+    print("\n================ Table 5: bounder ablation ================")
+    t0 = time.perf_counter()
+    rows = bench_bounders.main()
+    out["table5_bounders"] = rows
+    for r in rows:
+        csv.append((f"t5/{r['query']}/{r['approach']}",
+                    r["wall_s"] * 1e6, r["speedup"]))
+
+    print("\n================ Table 6: sampling strategies ==============")
+    rows = bench_sampling.main()
+    out["table6_sampling"] = rows
+    for r in rows:
+        csv.append((f"t6/{r['query']}/{r['strategy']}",
+                    r["wall_s"] * 1e6, r["speedup_vs_scan"]))
+
+    print("\n================ Figures 6 / 7a / 7b / 8 ===================")
+    for fn in (bench_figures.fig6_selectivity, bench_figures.fig7a_epsilon,
+               bench_figures.fig7b_threshold,
+               bench_figures.fig8_min_dep_time):
+        rows = fn()
+        out[fn.__name__] = rows
+        print(f"-- {fn.__name__}: {len(rows)} points")
+        for r in rows:
+            key = [f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+                   for k, v in r.items() if k in ("selectivity", "eps",
+                                                  "thresh", "min_dep_time")]
+            csv.append((f"{r['fig']}/{r['approach']}/{','.join(key)}",
+                        r.get("wall_s", 0.0) * 1e6,
+                        r.get("blocks", r.get("achieved_rel_err", 0))))
+
+    print("\n================ Kernel microbenchmarks ====================")
+    rows = bench_kernels.main()
+    out["kernels"] = rows
+    for r in rows:
+        csv.append((f"kern/{r['kernel']}/{r['rows']}x{r['groups']}",
+                    r["us_per_call"], r["rows_per_s"]))
+
+    Path("benchmarks/results").mkdir(parents=True, exist_ok=True)
+    Path("benchmarks/results/bench.json").write_text(
+        json.dumps(out, indent=1, default=float))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"\ntotal bench wall: {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Repo-root conftest: make the `benchmarks` package importable when the
+suite runs as ``PYTHONPATH=src pytest tests/`` (tests reference the
+benchmark harness, e.g. the roofline model)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))

@@ -1,0 +1,57 @@
+"""ApproxEval: the paper's technique as a framework feature.
+
+Trains a tiny LM for a few steps, then evaluates it with CI-guaranteed
+early stopping: evaluation halts as soon as the loss CI is tighter than
+the target width — typically after a small fraction of the eval set, with
+a 1-delta certificate (Bernstein+RangeTrim underneath).
+
+  PYTHONPATH=src python examples/approx_eval_llm.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.configs.base import ShapeConfig
+from repro.data import tokens as data_tokens
+from repro.evalx import ApproxEval
+from repro.models import build
+from repro.train import OptConfig, build_train_step, init_state
+
+cfg = dataclasses.replace(
+    get("qwen3_0_6b", reduced=True), param_dtype="float32",
+    compute_dtype="float32", remat=False)
+model = build(cfg)
+ocfg = OptConfig.for_arch(cfg, lr=5e-3, warmup_steps=10, total_steps=100)
+state = init_state(model, jax.random.PRNGKey(0), ocfg)
+step = jax.jit(build_train_step(model, ocfg))
+shape = ShapeConfig("ex", 64, 8, "train")
+for i in range(30):
+    batch = {k: jnp.asarray(v)
+             for k, v in data_tokens.train_batch(cfg, shape, i).items()}
+    state, metrics = step(state, batch)
+print(f"trained 30 steps, final loss {float(metrics['loss']):.3f}")
+
+scramble = data_tokens.make_eval_scramble(cfg, n_examples=4096, seq_len=64)
+
+
+@jax.jit
+def loss_fn(batch):
+    logits, _ = model.forward(state["params"], batch)
+    targets = batch["targets"]
+    mask = targets >= 0
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(targets, 0)[..., None], axis=-1)[..., 0]
+    return (logz - picked), mask
+
+
+ev = ApproxEval(lambda b: loss_fn({k: jnp.asarray(v) for k, v in b.items()}),
+                vocab=cfg.vocab_padded, delta=1e-9)
+rep = ev.run(scramble.batches(batch_size=32), scramble.n_examples,
+             target_width=0.4)
+print(f"eval loss in [{rep.lo:.4f}, {rep.hi:.4f}] (width target 0.4)")
+print(f"used {rep.examples_used}/{rep.total_examples} examples "
+      f"({rep.fraction_used:.1%}) -> early stop: {rep.stopped_early}")

@@ -1,0 +1,10 @@
+"""Run the paper's full F-q1..F-q9 query suite (Figure 5) and print the
+speedup-vs-exact table (Table 5 analogue at this dataset scale).
+
+  PYTHONPATH=src:. python examples/flights_queries.py
+"""
+
+from benchmarks import bench_bounders
+
+if __name__ == "__main__":
+    bench_bounders.main()

@@ -1,0 +1,15 @@
+"""End-to-end training driver (deliverable (b)): delegates to the
+production launcher with a CPU-sized config. For the full assigned archs
+use ``python -m repro.launch.train --arch <id>`` on real hardware.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = ["--smoke", "--steps", "200", "--ckpt-every", "50",
+            "--eval-every", "100"] + sys.argv[1:]
+    main(argv)

@@ -1,0 +1,5 @@
+"""repro — Rapid Approximate Aggregation with Distribution-Sensitive
+Interval Guarantees (Macke et al., 2020), built as a multi-pod JAX
+framework. See DESIGN.md for the system map."""
+
+__version__ = "0.1.0"

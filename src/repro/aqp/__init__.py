@@ -1,0 +1,13 @@
+"""repro.aqp — FastFrame: the sampling-optimized column store + OptStop
+query engine (paper §4)."""
+
+from repro.aqp.bitmap import BlockBitmap, build_bitmap, pack_mask
+from repro.aqp.engine import EngineConfig, FastFrame
+from repro.aqp.query import AggQuery, Expression, Filter, QueryResult
+from repro.aqp.scramble import Scramble, build_scramble
+
+__all__ = [
+    "AggQuery", "BlockBitmap", "EngineConfig", "Expression", "FastFrame",
+    "Filter", "QueryResult", "Scramble", "build_bitmap", "build_scramble",
+    "pack_mask",
+]

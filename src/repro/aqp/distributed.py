@@ -1,0 +1,100 @@
+"""Distributed FastFrame scan rounds: shard_map + collectives.
+
+The scramble's block axis is sharded over the flattened data-parallel
+domain (``("pod", "data")`` on the production mesh).  Each device scans its
+local blocks with the Pallas group-aggregation kernel, yielding per-group
+partial states; the tiny per-group reduction then crosses the mesh:
+
+  * ``count / dsum / dsq``  ->  psum    (shifted-moment form is additive)
+  * ``vmin / vmax``         ->  pmin / pmax   (RangeTrim extremes)
+  * ``hist``                ->  psum    (Anderson/DKW CDF state)
+
+The collective payload is O(groups), i.e. bytes, while the scan moves the
+actual data through the MXU — the engine stays scan-throughput-bound at any
+pod count, which is the paper's single-node story preserved at scale
+(DESIGN.md §2.2). The host driver (``repro.aqp.engine``) then evaluates
+bounds exactly as in the single-device path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.state import MomentState
+from repro.kernels import ops as kops
+
+
+def _state_to_raw(st: MomentState, center) -> Tuple[jax.Array, ...]:
+    """Welford state -> additive (count, dsum, dsq) about ``center``."""
+    dsum = (st.mean - center) * st.count
+    dsq = st.m2 + jnp.where(st.count > 0, dsum * dsum /
+                            jnp.maximum(st.count, 1.0), 0.0)
+    return st.count, dsum, dsq
+
+
+def _raw_to_state(count, dsum, dsq, vmin, vmax, center) -> MomentState:
+    safe = jnp.maximum(count, 1.0)
+    mean = center + dsum / safe
+    m2 = jnp.maximum(dsq - dsum * dsum / safe, 0.0)
+    empty = count == 0
+    return MomentState(
+        count=count,
+        mean=jnp.where(empty, 0.0, mean),
+        m2=jnp.where(empty, 0.0, m2),
+        vmin=vmin, vmax=vmax,
+    )
+
+
+def make_distributed_round(mesh: Mesh, dp_axes: Sequence[str],
+                           num_groups: int, center: float,
+                           impl: Optional[str] = None,
+                           with_hist: bool = False,
+                           hist_bins: int = 1024,
+                           hist_range: Tuple[float, float] = (0.0, 1.0)):
+    """Build the jitted one-round scan function for a mesh.
+
+    Inputs (sharded over ``dp_axes`` on their leading axis):
+      values, gids, mask: (rows,) row-major flattened blocks.
+    Output: replicated merged MomentState (num_groups,) [+ hist].
+    """
+    dp = tuple(dp_axes)
+    spec = P(dp)
+
+    def round_fn(values, gids, mask):
+        st = kops.grouped_moments(values, gids, mask, num_groups, center,
+                                  impl=impl)
+        count, dsum, dsq = _state_to_raw(st, center)
+        count = jax.lax.psum(count, dp)
+        dsum = jax.lax.psum(dsum, dp)
+        dsq = jax.lax.psum(dsq, dp)
+        vmin = jax.lax.pmin(st.vmin, dp)
+        vmax = jax.lax.pmax(st.vmax, dp)
+        out = _raw_to_state(count, dsum, dsq, vmin, vmax, center)
+        if not with_hist:
+            return out
+        h = kops.grouped_hist(values, gids, mask, num_groups,
+                              hist_range[0], hist_range[1],
+                              nbins=hist_bins, impl=impl)
+        return out, jax.lax.psum(h.hist, dp)
+
+    sharded = shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=(jax.tree.map(lambda _: P(), MomentState(0, 0, 0, 0, 0))
+                   if not with_hist else
+                   (jax.tree.map(lambda _: P(), MomentState(0, 0, 0, 0, 0)),
+                    P())),
+        check_rep=False)
+    return jax.jit(sharded)
+
+
+def shard_rows(mesh: Mesh, dp_axes: Sequence[str], *arrays):
+    """Place row-major arrays with their leading axis sharded over dp."""
+    sharding = NamedSharding(mesh, P(tuple(dp_axes)))
+    return tuple(jax.device_put(a, sharding) for a in arrays)

@@ -1,0 +1,459 @@
+"""FastFrame query engine: OptStop rounds + active scanning over a scramble.
+
+Per round (Algorithm 5 at block granularity, §4.2/§4.3):
+  1. advance the scan cursor through the shuffled block order, using the
+     static predicate bitmap and the (group-bitmap AND active-mask) lookahead
+     kernel to *skip* blocks that cannot help any active view;
+  2. fetch the selected blocks and fold them into the per-group mergeable
+     moment states (``repro.kernels.grouped_moments`` — the Pallas hot path);
+  3. re-evaluate per-view CIs at delta_k = (6/pi^2) delta_view / k^2 with the
+     Theorem-3 ``N+`` upper bound standing in for the unknown view size;
+  4. intersect with the running interval, update the active mask from the
+     query's stopping condition, and stop when no view is active.
+
+Soundness bookkeeping beyond the paper's prose:
+  * ``tainted`` views: a view that occurred in an *activity-skipped* block
+    no longer sees a clean scan prefix, so its CI is frozen at the last
+    clean value (always valid — Theorem 4's intersection is anytime). Only
+    inactive views can be tainted (a block is skipped iff it contains no
+    active view), so the freeze coincides with the deactivation freeze.
+  * ``exact`` views: once every block containing a view has been processed
+    the aggregate is exact regardless of sampling history; the interval
+    collapses to a point. This also guarantees termination for any
+    stopping condition.
+  * The Exact baseline intentionally performs a full sequential sweep with
+    no bitmap skipping (the paper's strawman).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp.bitmap import BlockBitmap, build_bitmap, pack_mask
+from repro.aqp.query import AggQuery, Expression, QueryResult
+from repro.aqp.scramble import Scramble
+from repro.core import count_sum
+from repro.core.bounders import get_bounder
+from repro.core.optstop import delta_schedule
+from repro.core.state import (Stats, init_hist, init_moments_host,
+                              merge_moments_host, to_host)
+from repro.kernels import ops as kops
+
+_ALPHA = count_sum.ALPHA_DEFAULT
+
+
+def _unpack_words(words: np.ndarray, cardinality: int) -> np.ndarray:
+    """(B, W) uint32 -> (B, C) bool presence matrix."""
+    u8 = words.astype("<u4").view(np.uint8)
+    bits = np.unpackbits(u8.reshape(words.shape[0], -1), axis=1,
+                         bitorder="little")
+    return bits[:, :cardinality].astype(bool)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    round_blocks: int = 64          # processed-block budget per round
+    lookahead_blocks: int = 1024    # ActivePeek batch (paper §4.3)
+    sync_lookahead_blocks: int = 32 # ActiveSync batch (cache-unfriendly)
+    cover_cap_factor: int = 64      # max covered positions per round
+    hist_bins: int = 1024
+    alpha: float = _ALPHA
+    impl: Optional[str] = None      # kernel impl: pallas | interpret | ref
+
+
+class FastFrame:
+    """Sampling-optimized in-memory column store (paper §4)."""
+
+    def __init__(self, scramble: Scramble, config: EngineConfig = None):
+        self.scramble = scramble
+        self.config = config or EngineConfig()
+        self._bitmaps: Dict[str, BlockBitmap] = {}
+        self._static_cache: Dict[Tuple, np.ndarray] = {}
+        self._valid_counts = scramble.valid.sum(axis=1).astype(np.int64)
+
+    # -- index plumbing ------------------------------------------------------
+
+    def bitmap(self, column: str) -> BlockBitmap:
+        if column not in self._bitmaps:
+            self._bitmaps[column] = build_bitmap(self.scramble, column)
+        return self._bitmaps[column]
+
+    def _composite_group(self, cols: Tuple[str, ...]) -> Tuple[str, int]:
+        """Synthesize (and cache) a composite group-code column."""
+        if len(cols) == 1:
+            return cols[0], self.scramble.categorical[cols[0]]
+        name = "__grp_" + "_".join(cols)
+        if name not in self.scramble.columns:
+            card = 1
+            codes = np.zeros_like(self.scramble.columns[cols[0]],
+                                  dtype=np.int64)
+            for c in cols:
+                cc = self.scramble.categorical[c]
+                codes = codes * cc + self.scramble.columns[c]
+                card *= cc
+            self.scramble.columns[name] = codes.astype(np.int32)
+            self.scramble.categorical[name] = card
+        return name, self.scramble.categorical[name]
+
+    def _static_ok(self, q: AggQuery) -> Tuple[np.ndarray, int]:
+        """Block-level predicate prefilter from categorical eq/isin filters
+        (available to every approximate strategy, incl. Scan — §5.2)."""
+        key = tuple((f.column, f.op, str(f.value)) for f in q.filters
+                    if f.categorical_eq and f.column in
+                    self.scramble.categorical)
+        if not key:
+            return np.ones(self.scramble.n_blocks, dtype=bool), 0
+        if key in self._static_cache:
+            return self._static_cache[key], 0
+        ok = np.ones(self.scramble.n_blocks, dtype=bool)
+        probes = 0
+        for f in q.filters:
+            if not (f.categorical_eq and f.column in
+                    self.scramble.categorical):
+                continue
+            bm = self.bitmap(f.column)
+            cmask = np.zeros(bm.cardinality, dtype=bool)
+            vals = np.atleast_1d(np.asarray(f.value))
+            cmask[vals] = True
+            hit = kops.active_blocks(jnp.asarray(bm.words),
+                                     jnp.asarray(pack_mask(cmask)),
+                                     impl=self.config.impl)
+            ok &= np.asarray(hit) > 0
+            probes += self.scramble.n_blocks
+        self._static_cache[key] = ok
+        return ok, probes
+
+    # -- value / mask materialization -----------------------------------------
+
+    def _values_and_bounds(self, q: AggQuery):
+        if q.agg == "count":
+            return None, (0.0, 1.0)
+        if isinstance(q.column, Expression):
+            return q.column, q.column.derived_bounds(self.scramble.catalog)
+        return q.column, self.scramble.catalog[q.column]
+
+    def _materialize(self, q: AggQuery, idx: np.ndarray, value_src,
+                     gcol: Optional[str]):
+        sc = self.scramble
+        block_cols = {}
+        needed = set(f.column for f in q.filters)
+        if isinstance(value_src, Expression):
+            needed |= set(value_src.columns)
+        elif isinstance(value_src, str):
+            needed.add(value_src)
+        for c in needed:
+            block_cols[c] = sc.columns[c][idx]
+        mask = sc.valid[idx].copy()
+        for f in q.filters:
+            mask &= f.evaluate(block_cols)
+        if isinstance(value_src, Expression):
+            values = value_src.evaluate(block_cols)
+        elif isinstance(value_src, str):
+            values = block_cols[value_src].astype(np.float32)
+        else:  # COUNT: value column unused
+            values = np.zeros_like(mask, dtype=np.float32)
+        gids = (sc.columns[gcol][idx] if gcol is not None
+                else np.zeros(mask.shape, dtype=np.int32))
+        return values, gids.astype(np.int32), mask
+
+    # -- cursor advance --------------------------------------------------------
+
+    def _advance(self, order, pos, static_ok, group_bm, active_words,
+                 presence, tainted, lookahead, budget, cover_cap,
+                 skipping, metrics):
+        """Advance the scan cursor, selecting up to ``budget`` blocks.
+
+        Returns (idx_to_process, new_pos). Skip accounting (taint, counters)
+        is applied only to positions actually covered (< new_pos)."""
+        nb = order.shape[0]
+        records = []
+        p = pos
+        total_sel = 0
+        while (total_sel < budget and p < nb and (p - pos) < cover_cap):
+            end = min(p + lookahead, nb)
+            batch = order[p:end]
+            ok = static_ok[batch]
+            flags = ok.copy()
+            if skipping and group_bm is not None:
+                act = np.asarray(kops.active_blocks(
+                    jnp.asarray(group_bm.words[batch]), active_words,
+                    impl=self.config.impl)) > 0
+                metrics["probes"] += len(batch)
+                flags &= act
+            records.append((p, batch, ok, flags))
+            total_sel += int(flags.sum())
+            p = end
+
+        # cut position: just after the budget-th selected block
+        selected = []
+        cut = p
+        remaining = budget
+        for (base, batch, ok, flags) in records:
+            sel_local = np.nonzero(flags)[0]
+            take = sel_local[:remaining]
+            selected.append(batch[take])
+            remaining -= len(take)
+            if remaining == 0:
+                cut = base + int(take[-1]) + 1
+                break
+        new_pos = min(cut, p)
+
+        # skip accounting within the covered range only
+        for (base, batch, ok, flags) in records:
+            if base >= new_pos:
+                break
+            n = min(new_pos - base, len(batch))
+            okc, flagsc = ok[:n], flags[:n]
+            metrics["skipped_static"] += int((~okc).sum())
+            act_skip = okc & ~flagsc
+            metrics["skipped_active"] += int(act_skip.sum())
+            if act_skip.any():
+                tainted |= presence[batch[:n][act_skip]].any(axis=0)
+        idx = (np.concatenate(selected) if selected
+               else np.zeros(0, dtype=np.int64))
+        return idx, new_pos
+
+    # -- main entry ------------------------------------------------------------
+
+    def run(self, q: AggQuery, sampling: str = "active_peek",
+            start_block: Optional[int] = None, seed: int = 0,
+            max_rounds: int = 100_000) -> QueryResult:
+        """Execute one aggregate query.
+
+        sampling: 'active_peek' | 'active_sync' | 'scan' | 'exact'
+        """
+        t0 = time.perf_counter()
+        cfg = self.config
+        sc = self.scramble
+        nb = sc.n_blocks
+        rng = np.random.default_rng(seed)
+        exact_mode = (sampling == "exact") or (q.stop is None)
+
+        gcol, G = (None, 1)
+        if q.group_by is not None:
+            gcol, G = self._composite_group(q.group_cols)
+        value_src, (a, b) = self._values_and_bounds(q)
+        center = 0.5 * (a + b)
+        use_hist = (q.bounder == "anderson_dkw") and q.agg != "count"
+        bounder = (get_bounder(q.bounder, rangetrim=q.rangetrim)
+                   if q.agg != "count" else None)
+
+        # scan order: random start, wrap around (paper §5.2)
+        start = (rng.integers(nb) if start_block is None else start_block)
+        order = (start + np.arange(nb)) % nb
+        cum_rows = np.cumsum(self._valid_counts[order])
+        R = sc.n_rows
+
+        static_ok, probes0 = self._static_ok(q)
+        group_bm = self.bitmap(gcol) if gcol is not None else None
+        presence = (_unpack_words(group_bm.words, G) if group_bm is not None
+                    else np.ones((nb, 1), dtype=bool))
+        presence_total = presence.sum(axis=0)
+
+        state = init_moments_host((G,))
+        hist = (np.zeros((G, cfg.hist_bins), np.float64) if use_hist
+                else None)
+        seen_presence = np.zeros(G, dtype=np.int64)
+        processed = np.zeros(nb, dtype=bool)
+        exact = presence_total == 0      # group code never occurs
+        tainted = np.zeros(G, dtype=bool)
+        # trivial a-priori bounds (valid before any sample is seen)
+        if q.agg == "avg":
+            lo0, hi0 = a, b
+        elif q.agg == "count":
+            lo0, hi0 = 0.0, float(R)
+        else:  # sum
+            lo0 = min(0.0, R * a)
+            hi0 = max(0.0, R * b)
+        lo = np.full(G, lo0)
+        hi = np.full(G, hi0)
+        est = np.full(G, center)
+        valid = presence_total > 0
+
+        def cond_active_mask(counts_arr):
+            """Stopping-condition activity over EXISTING views only
+            (phantom composite codes must not distort orderings)."""
+            out = np.zeros(G, dtype=bool)
+            if valid.any():
+                out[valid] = q.stop.active(lo[valid], hi[valid],
+                                           est[valid], counts_arr[valid])
+            return out
+        refreshed = np.zeros(G, dtype=bool)
+        pos = 0
+        metrics = {"skipped_static": 0, "skipped_active": 0,
+                   "probes": probes0}
+        blocks_fetched = 0
+        rounds = 0
+        stopped_early = False
+        delta_view = q.delta / max(G, 1)
+        known_n = (not q.filters) and (q.group_by is None)
+        skipping = (not exact_mode) and sampling in ("active_peek",
+                                                     "active_sync")
+        lookahead = (cfg.sync_lookahead_blocks if sampling == "active_sync"
+                     else cfg.lookahead_blocks)
+        active = ~exact
+        active_words = (jnp.asarray(pack_mask(active)) if gcol is not None
+                        else None)
+
+        while pos < nb and rounds < max_rounds:
+            rounds += 1
+            # ---- 1. cursor advance -----------------------------------------
+            if exact_mode:
+                end = min(pos + cfg.lookahead_blocks, nb)
+                idx = order[pos:end]  # full sweep, no skipping (strawman)
+                pos = end
+            else:
+                idx, pos = self._advance(
+                    order, pos, static_ok, group_bm, active_words, presence,
+                    tainted, lookahead, cfg.round_blocks,
+                    cfg.round_blocks * cfg.cover_cap_factor, skipping,
+                    metrics)
+
+            # ---- 2. fold blocks into states --------------------------------
+            if len(idx):
+                processed[idx] = True
+                blocks_fetched += len(idx)
+                values, gids, mask = self._materialize(q, idx, value_src,
+                                                       gcol)
+                vf = jnp.asarray(values.reshape(-1))
+                gf = jnp.asarray(gids.reshape(-1))
+                mf = jnp.asarray(mask.reshape(-1).astype(np.float32))
+                upd = kops.grouped_moments(vf, gf, mf, G, center,
+                                           impl=cfg.impl)
+                state = merge_moments_host(state, to_host(upd))
+                if use_hist:
+                    hupd = kops.grouped_hist(vf, gf, mf, G, a, b,
+                                             nbins=cfg.hist_bins,
+                                             impl=cfg.impl)
+                    hist = hist + np.asarray(hupd.hist, np.float64)
+                seen_presence += presence[idx].sum(axis=0)
+
+            r = int(cum_rows[pos - 1]) if pos > 0 else 0
+            exact |= (seen_presence >= presence_total) | (pos >= nb)
+
+            if exact_mode:
+                continue
+
+            # ---- 3. per-view CI refresh -------------------------------------
+            dk = delta_schedule(delta_view, rounds)
+            counts, means, m2s = state.count, state.mean, state.m2
+            vmins, vmaxs = state.vmin, state.vmax
+            h_np = hist if use_hist else None
+            refresh = ~tainted & (counts > 0) & (active | ~refreshed)
+            for g in np.nonzero(refresh)[0]:
+                s = Stats(count=counts[g], mean=means[g], m2=m2s[g],
+                          vmin=vmins[g], vmax=vmaxs[g],
+                          hist=(h_np[g] if use_hist else None))
+                glo, ghi, gest = self._view_ci(q, s, a, b, r, R, dk,
+                                               known_n, bounder, cfg.alpha)
+                lo[g] = max(lo[g], glo)
+                hi[g] = min(hi[g], ghi)
+                est[g] = gest
+                refreshed[g] = True
+            pt_exact = exact & (counts > 0)
+            if pt_exact.any():  # full coverage -> point interval
+                ex_est = self._exact_estimate(q, counts, means, R)
+                lo[pt_exact] = hi[pt_exact] = est[pt_exact] = \
+                    ex_est[pt_exact]
+
+            # ---- 4. stopping / activity -------------------------------------
+            cond_active = cond_active_mask(counts)
+            active = cond_active & ~exact & valid
+            if not active.any():
+                stopped_early = pos < nb
+                break
+            if gcol is not None:
+                active_words = jnp.asarray(pack_mask(active))
+
+        # ---- recovery pass (soundness of termination) --------------------
+        # After the cursor exhausts the scramble, any still-active view is
+        # either tainted (its CI froze when its blocks were skipped while it
+        # was inactive) or empty. Tainted views cannot tighten via sampling
+        # (their scan prefix is broken), but full coverage is always sound:
+        # process their remaining unprocessed blocks until the aggregate is
+        # exact. Guarantees termination for every stopping condition
+        # (e.g. top-K with a moving midpoint re-activating frozen views).
+        while not exact_mode and rounds < max_rounds:
+            counts = state.count
+            cond_active = cond_active_mask(counts)
+            active = cond_active & ~exact & valid
+            if not active.any():
+                break
+            rounds += 1
+            need = presence[:, active].any(axis=1) & ~processed
+            idx = np.nonzero(need)[0][:cfg.lookahead_blocks]
+            if len(idx) == 0:
+                # active views with zero observed rows over full coverage
+                # are empty views: drop them
+                exact |= active & (counts == 0)
+                if not (cond_active_mask(counts) & ~exact & valid).any():
+                    break
+                continue
+            processed[idx] = True
+            blocks_fetched += len(idx)
+            values, gids, mask = self._materialize(q, idx, value_src, gcol)
+            upd = kops.grouped_moments(
+                jnp.asarray(values.reshape(-1)),
+                jnp.asarray(gids.reshape(-1)),
+                jnp.asarray(mask.reshape(-1).astype(np.float32)),
+                G, center, impl=cfg.impl)
+            state = merge_moments_host(state, to_host(upd))
+            seen_presence += presence[idx].sum(axis=0)
+            exact |= seen_presence >= presence_total
+            counts, means = state.count, state.mean
+            full = exact & (counts > 0)
+            if full.any():
+                ex_est = self._exact_estimate(q, counts, means, R)
+                lo[full] = hi[full] = est[full] = ex_est[full]
+
+        counts, means = state.count, state.mean
+        nonempty = counts > 0
+        full = exact & nonempty
+        if full.any():
+            ex_est = self._exact_estimate(q, counts, means, R)
+            lo[full] = hi[full] = est[full] = ex_est[full]
+        if exact_mode:
+            stopped_early = False
+
+        return QueryResult(
+            group_codes=np.arange(G), estimate=est, lo=lo, hi=hi,
+            count_seen=counts, nonempty=nonempty, exact=exact,
+            rows_covered=int(cum_rows[pos - 1]) if pos else 0,
+            blocks_fetched=blocks_fetched,
+            blocks_skipped_active=metrics["skipped_active"],
+            blocks_skipped_static=metrics["skipped_static"],
+            bitmap_probes=metrics["probes"], rounds=rounds,
+            wall_time_s=time.perf_counter() - t0,
+            stopped_early=stopped_early)
+
+    # -- CI helpers -------------------------------------------------------------
+
+    def _view_ci(self, q: AggQuery, s: Stats, a, b, r, R, dk, known_n,
+                 bounder, alpha):
+        if q.agg == "count":
+            clo, chi = count_sum.count_ci(s.count, r, R, dk)
+            return clo, chi, s.count / max(r, 1) * R
+        if known_n:
+            alo, ahi = bounder.interval(s, a, b, R, dk)
+        else:
+            budget = dk if q.agg == "avg" else dk / 2.0
+            npl = count_sum.n_plus(s.count, r, R, (1 - alpha) * budget)
+            alo, ahi = bounder.interval(s, a, b, npl, alpha * budget)
+        if q.agg == "avg":
+            return alo, ahi, s.mean
+        # SUM = COUNT x AVG (paper §4.1)
+        cci = count_sum.count_ci(s.count, r, R, dk / 2.0)
+        slo, shi = count_sum.sum_ci(cci, (alo, ahi))
+        return slo, shi, s.mean * (s.count / max(r, 1)) * R
+
+    def _exact_estimate(self, q, counts, means, R):
+        if q.agg == "avg":
+            return means
+        if q.agg == "count":
+            return counts
+        return means * counts  # sum

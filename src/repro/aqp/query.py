@@ -1,0 +1,144 @@
+"""Logical query model for FastFrame.
+
+Covers the paper's query class (§5.1, Figure 5): single-table AVG / SUM /
+COUNT aggregates with arbitrary row filters, optional (composite) GROUP BY,
+HAVING / ORDER BY ... LIMIT consumed via stopping conditions, and
+expression aggregates over multiple columns (Appendix B) with certified
+derived range bounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.derived_bounds import derived_range
+from repro.core.optstop import StoppingCondition
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    """Row predicate on one column."""
+
+    column: str
+    op: str          # 'eq' | 'ne' | 'gt' | 'ge' | 'lt' | 'le' | 'between' | 'isin'
+    value: object
+
+    def evaluate(self, block_cols: Dict[str, np.ndarray]) -> np.ndarray:
+        col = block_cols[self.column]
+        if self.op == "eq":
+            return col == self.value
+        if self.op == "ne":
+            return col != self.value
+        if self.op == "gt":
+            return col > self.value
+        if self.op == "ge":
+            return col >= self.value
+        if self.op == "lt":
+            return col < self.value
+        if self.op == "le":
+            return col <= self.value
+        if self.op == "between":
+            lo, hi = self.value
+            return (col >= lo) & (col <= hi)
+        if self.op == "isin":
+            return np.isin(col, np.asarray(self.value))
+        raise ValueError(f"unknown op {self.op}")
+
+    @property
+    def categorical_eq(self) -> bool:
+        return self.op in ("eq", "isin")
+
+
+@dataclasses.dataclass(frozen=True)
+class Expression:
+    """Aggregate over f(c_1..c_n) with an Appendix-B range certificate."""
+
+    fn: Callable                      # maps dict[str, np.ndarray] -> np.ndarray
+    columns: Tuple[str, ...]
+    monotone: Optional[Tuple[int, ...]] = None
+    convex: Optional[bool] = None
+
+    def derived_bounds(self, catalog: Dict[str, Tuple[float, float]]
+                       ) -> Tuple[float, float]:
+        boxes = [catalog[c] for c in self.columns]
+
+        def vec_f(x):
+            return self.fn({c: x[i] for i, c in enumerate(self.columns)})
+
+        return derived_range(vec_f, boxes, monotone=self.monotone,
+                             convex=self.convex)
+
+    def evaluate(self, block_cols: Dict[str, np.ndarray]) -> np.ndarray:
+        return np.asarray(self.fn(block_cols), dtype=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggQuery:
+    """One aggregate query (one Figure-5 template instance)."""
+
+    agg: str                                   # 'avg' | 'sum' | 'count'
+    column: Optional[Union[str, Expression]] = None
+    filters: Tuple[Filter, ...] = ()
+    group_by: Optional[Union[str, Tuple[str, ...]]] = None
+    stop: Optional[StoppingCondition] = None   # None -> exact processing
+    bounder: str = "bernstein"
+    rangetrim: bool = True
+    delta: float = 1e-15
+
+    def __post_init__(self):
+        if self.agg in ("avg", "sum") and self.column is None:
+            raise ValueError(f"{self.agg} needs a column or Expression")
+
+    @property
+    def group_cols(self) -> Tuple[str, ...]:
+        if self.group_by is None:
+            return ()
+        if isinstance(self.group_by, str):
+            return (self.group_by,)
+        return tuple(self.group_by)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Engine output: per-group estimates + (1-delta) intervals + metrics."""
+
+    group_codes: np.ndarray       # (G,) composite codes (or [0])
+    estimate: np.ndarray          # (G,)
+    lo: np.ndarray                # (G,)
+    hi: np.ndarray                # (G,)
+    count_seen: np.ndarray        # (G,) sample rows per view
+    nonempty: np.ndarray          # (G,) bool: view observed at least once
+    exact: np.ndarray             # (G,) bool: view fully covered (exact)
+    rows_covered: int
+    blocks_fetched: int
+    blocks_skipped_active: int
+    blocks_skipped_static: int
+    bitmap_probes: int
+    rounds: int
+    wall_time_s: float
+    stopped_early: bool
+
+    def having(self, op: str, threshold: float) -> np.ndarray:
+        """Group codes whose TRUE aggregate is on the given side w.h.p."""
+        if op == "gt":
+            sel = self.lo > threshold
+        elif op == "lt":
+            sel = self.hi < threshold
+        else:
+            raise ValueError(op)
+        return self.group_codes[sel & self.nonempty]
+
+    def topk(self, k: int, largest: bool = True) -> np.ndarray:
+        est = np.where(self.nonempty, self.estimate,
+                       -np.inf if largest else np.inf)
+        order = np.argsort(-est if largest else est)
+        return self.group_codes[order[:k]]
+
+    def order(self, ascending: bool = True) -> np.ndarray:
+        idx = np.nonzero(self.nonempty)[0]
+        est = self.estimate[idx]
+        srt = idx[np.argsort(est if ascending else -est)]
+        return self.group_codes[srt]

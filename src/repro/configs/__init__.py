@@ -1,0 +1,7 @@
+"""repro.configs — assigned-architecture configs (one module per arch)."""
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.configs.registry import ARCH_IDS, all_configs, get, reduce_config
+
+__all__ = ["ARCH_IDS", "ArchConfig", "SHAPES", "ShapeConfig", "all_configs",
+           "get", "reduce_config"]

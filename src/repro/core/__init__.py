@@ -1,0 +1,43 @@
+"""repro.core — the paper's contribution: distribution-sensitive SSI
+confidence intervals (bounders, RangeTrim, OptStop, COUNT/SUM, derived
+ranges, pathology detectors)."""
+
+from repro.core.bounders import (
+    AndersonDKWBounder,
+    Bounder,
+    BernsteinSerflingBounder,
+    EmpiricalBernsteinSerflingBounder,
+    HoeffdingBounder,
+    HoeffdingSerflingBounder,
+    get_bounder,
+)
+from repro.core.count_sum import count_ci, n_plus, selectivity_ci, sum_ci
+from repro.core.derived_bounds import derived_range
+from repro.core.optstop import (
+    AbsoluteWidth,
+    FixedSamples,
+    GroupsOrdered,
+    RelativeWidth,
+    RunningInterval,
+    StoppingCondition,
+    ThresholdSide,
+    TopKSeparated,
+    delta_schedule,
+    optstop_reference,
+)
+from repro.core.rangetrim import RangeTrimBounder
+from repro.core.state import (
+    HistState,
+    MomentState,
+    Stats,
+    downdate_extreme,
+    hist_of_batch,
+    init_hist,
+    init_moments,
+    merge_hist,
+    merge_moments,
+    moments_of_batch,
+    tree_merge_moments,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

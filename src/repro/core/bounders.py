@@ -1,0 +1,227 @@
+"""Sample-size-independent (SSI) error bounders (paper §2.2.3).
+
+Every bounder implements the paper's interface as *pure float64 host math*
+over a :class:`repro.core.state.Stats` snapshot.  Device-side state
+maintenance lives in :mod:`repro.core.state` / :mod:`repro.kernels`; this
+module is the "bound evaluation" half, which runs once per OptStop round per
+group and is therefore latency-irrelevant (the scan dominates).
+
+Conventions (Definition 1):
+  * ``lbound(stats, a, b, N, delta)`` returns g_l with
+    P(g_l > AVG(D)) < delta — for ANY sample size (SSI).
+  * ``rbound`` symmetric; implemented by reflection x -> (a+b) - x.
+  * ``interval(...)`` = [lbound(delta/2), rbound(delta/2)] (union bound).
+
+All bounders satisfy the *dataset-size monotonicity* property (§3.3): using
+any N' >= N only loosens the bounds, so the engine may pass the Theorem-3
+upper bound ``N+`` when the true N is unknown.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.state import Stats
+
+__all__ = [
+    "Bounder",
+    "HoeffdingBounder",
+    "HoeffdingSerflingBounder",
+    "BernsteinSerflingBounder",
+    "EmpiricalBernsteinSerflingBounder",
+    "AndersonDKWBounder",
+    "get_bounder",
+]
+
+# kappa from Bardenet & Maillard (2015), Bernoulli 21(3), Thm. 3/4.
+_KAPPA_EBS = 7.0 / 3.0 + 3.0 / math.sqrt(2.0)
+
+
+def _rho_serfling(m: float, N: float) -> float:
+    """(1 - (m-1)/N): Serfling's without-replacement shrink factor."""
+    if N <= 0:
+        return 1.0
+    return max(1.0 - (m - 1.0) / N, 0.0)
+
+
+def _rho_bardenet(m: float, N: float) -> float:
+    """rho_m from Bardenet-Maillard: the tighter two-regime factor."""
+    if N <= 0:
+        return 1.0
+    if m <= N / 2.0:
+        return max(1.0 - (m - 1.0) / N, 0.0)
+    return max((1.0 - m / N) * (1.0 + 1.0 / m), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bounder:
+    """Base class. Subclasses override ``_lbound``."""
+
+    #: Table-2 pathology flags (documentation + pathology tests).
+    has_pma: bool = True
+    has_phos: bool = True
+    name: str = "base"
+
+    def _lbound(self, s: Stats, a: float, b: float, N: float,
+                delta: float) -> float:
+        raise NotImplementedError
+
+    # -- public API ---------------------------------------------------------
+    def lbound(self, s: Stats, a: float, b: float, N: float,
+               delta: float) -> float:
+        if s.count <= 0:
+            return a
+        lb = self._lbound(s, a, b, N, delta)
+        return max(lb, a)  # the mean of data in [a,b] is >= a, always
+
+    def rbound(self, s: Stats, a: float, b: float, N: float,
+               delta: float) -> float:
+        if s.count <= 0:
+            return b
+        # Reflect x -> (a+b)-x, compute an lbound, reflect back (Alg. 1/3).
+        lb = self._lbound(s.reflect(a, b), a, b, N, delta)
+        return min((a + b) - lb, b)
+
+    def interval(self, s: Stats, a: float, b: float, N: float,
+                 delta: float) -> Tuple[float, float]:
+        return (self.lbound(s, a, b, N, delta / 2.0),
+                self.rbound(s, a, b, N, delta / 2.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class HoeffdingBounder(Bounder):
+    """Hoeffding (1963): valid for with- AND without-replacement sampling."""
+
+    has_pma: bool = True
+    has_phos: bool = True
+    name: str = "hoeffding"
+
+    def _lbound(self, s, a, b, N, delta):
+        eps = (b - a) * math.sqrt(math.log(1.0 / delta) / (2.0 * s.count))
+        return s.mean - eps
+
+
+@dataclasses.dataclass(frozen=True)
+class HoeffdingSerflingBounder(Bounder):
+    """Hoeffding-Serfling (Serfling 1974); paper Algorithm 1."""
+
+    has_pma: bool = True
+    has_phos: bool = True
+    name: str = "hoeffding_serfling"
+
+    def _lbound(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_serfling(m, N)
+        eps = (b - a) * math.sqrt(math.log(1.0 / delta) * rho / (2.0 * m))
+        return s.mean - eps
+
+
+@dataclasses.dataclass(frozen=True)
+class BernsteinSerflingBounder(Bounder):
+    """Bernstein-Serfling with *known* variance sigma^2 (Bardenet-Maillard
+    Thm. 3). Mostly a reference point for tests; ``sigma`` must be supplied.
+    """
+
+    sigma: float = 0.0
+    has_pma: bool = False
+    has_phos: bool = True
+    name: str = "bernstein_serfling"
+
+    def _lbound(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_bardenet(m, N)
+        log_t = math.log(3.0 / delta)
+        eps = (self.sigma * math.sqrt(2.0 * rho * log_t / m)
+               + _KAPPA_EBS * (b - a) * log_t / m)
+        return s.mean - eps
+
+
+@dataclasses.dataclass(frozen=True)
+class EmpiricalBernsteinSerflingBounder(Bounder):
+    """Empirical Bernstein-Serfling (Bardenet-Maillard 2015, Thm. 4);
+    paper Algorithm 2. The paper's recommended inner bounder ("Bernstein").
+
+    eps = sigma_hat * sqrt(2 rho log(5/delta) / m)
+          + kappa (b - a) log(5/delta) / m,   kappa = 7/3 + 3/sqrt(2)
+    """
+
+    has_pma: bool = False
+    has_phos: bool = True
+    name: str = "bernstein"
+
+    def _lbound(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_bardenet(m, N)
+        log_t = math.log(5.0 / delta)
+        eps = (s.std * math.sqrt(2.0 * rho * log_t / m)
+               + _KAPPA_EBS * (b - a) * log_t / m)
+        return s.mean - eps
+
+
+@dataclasses.dataclass(frozen=True)
+class AndersonDKWBounder(Bounder):
+    """Anderson (1969) mean bounds from DKW CDF bands; paper Algorithm 3.
+
+    Valid without replacement for any finite N by paper Theorem 1. Requires
+    the histogram field of ``Stats`` (bucketized empirical CDF); the bin
+    discretization only *widens* bounds (values rounded toward the
+    pessimistic bin edge), so guarantees are preserved.
+
+    One-sided DKW: eps = sqrt(log(1/delta) / (2 m)).
+    Lower bound (Alg. 3): drop the top-eps mass, re-allocate it at ``a``,
+    value surviving bins at their LEFT edge.
+    """
+
+    has_pma: bool = True
+    has_phos: bool = False
+    name: str = "anderson_dkw"
+
+    def _lbound(self, s, a, b, N, delta):
+        if s.hist is None:
+            raise ValueError("AndersonDKW requires histogram state")
+        m = s.count
+        eps = math.sqrt(math.log(1.0 / delta) / (2.0 * m))
+        if eps >= 1.0:
+            return a
+        hist = s.hist
+        K = hist.shape[0]
+        edges = a + (b - a) * np.arange(K) / K  # left edges
+        # Drop eps*m mass from the top (possibly fractionally).
+        drop = eps * m
+        kept = hist.copy()
+        csum_from_top = np.cumsum(kept[::-1])[::-1]
+        # bins fully dropped: csum of bins above them (inclusive) <= drop
+        fully = csum_from_top <= drop
+        kept[fully] = 0.0
+        # the highest surviving bin may be partially dropped
+        surv = np.nonzero(~fully)[0]
+        if surv.size:
+            k = surv[-1]
+            already = csum_from_top[k + 1] if k + 1 < K else 0.0
+            kept[k] = max(kept[k] - (drop - already), 0.0)
+        kept_mass = kept.sum()
+        if kept_mass <= 0:
+            return a
+        avg_kept = float((kept * edges).sum() / kept_mass)
+        return eps * a + (1.0 - eps) * avg_kept
+
+
+_REGISTRY = {
+    "hoeffding": HoeffdingBounder(),
+    "hoeffding_serfling": HoeffdingSerflingBounder(),
+    "bernstein": EmpiricalBernsteinSerflingBounder(),
+    "anderson_dkw": AndersonDKWBounder(),
+}
+
+
+def get_bounder(name: str, rangetrim: bool = False) -> Bounder:
+    """Bounder factory: ``get_bounder('bernstein', rangetrim=True)`` is the
+    paper's best configuration (Bernstein+RT: no PMA, no PHOS)."""
+    from repro.core.rangetrim import RangeTrimBounder  # cycle guard
+
+    base = _REGISTRY[name]
+    return RangeTrimBounder(inner=base) if rangetrim else base

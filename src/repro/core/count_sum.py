@@ -1,0 +1,70 @@
+"""COUNT / SUM confidence intervals and the unknown-N bound (paper §4.1).
+
+* ``selectivity_ci``  — Lemma 5: Hoeffding-Serfling on the {0,1} view-membership
+  indicator column of the scramble.
+* ``count_ci``        — selectivity CI scaled by the scramble size R.
+* ``n_plus``          — Theorem 3's high-probability upper bound N+ on the
+  (unknown) aggregate-view size, with error split alpha (paper uses 0.99).
+* ``sum_ci``          — union-bound product of COUNT and AVG CIs, with the
+  sign-safe generalization of the paper's [c_l*g_l, c_r*g_r] form.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+__all__ = ["selectivity_ci", "count_ci", "n_plus", "sum_ci", "ALPHA_DEFAULT"]
+
+ALPHA_DEFAULT = 0.99
+
+
+def _serfling_eps(r: float, R: float, delta: float) -> float:
+    """sqrt(log(1/delta)/(2r) * (1 - (r-1)/R)) — range (b-a)=1 indicator."""
+    if r <= 0:
+        return 1.0
+    rho = max(1.0 - (r - 1.0) / R, 0.0)
+    return math.sqrt(math.log(1.0 / delta) * rho / (2.0 * r))
+
+
+def selectivity_ci(m_v: float, r: float, R: float,
+                   delta: float) -> Tuple[float, float]:
+    """Lemma 5: two-sided (1-delta) CI for the view selectivity sigma_V after
+    seeing ``m_v`` member rows among ``r`` scanned of an R-row scramble."""
+    if r <= 0:
+        return (0.0, 1.0)
+    eps = _serfling_eps(r, R, delta / 2.0)  # delta/2 per side (log(2/delta))
+    est = m_v / r
+    return (max(est - eps, 0.0), min(est + eps, 1.0))
+
+
+def count_ci(m_v: float, r: float, R: float,
+             delta: float) -> Tuple[float, float]:
+    """(1-delta) CI for the number of rows in the aggregate view."""
+    lo, hi = selectivity_ci(m_v, r, R, delta)
+    return (lo * R, hi * R)
+
+
+def n_plus(m_v: float, r: float, R: float, delta: float,
+           alpha: float = ALPHA_DEFAULT) -> float:
+    """Theorem 3: N+ = (m_v/r + sqrt(log(1/((1-alpha) delta)) rho / (2r))) R,
+    an upper bound on N failing w.p. < (1-alpha)*delta. The remaining
+    alpha*delta budget goes to the AVG bounder evaluated with N+."""
+    if r <= 0:
+        return R
+    eps = _serfling_eps(r, R, (1.0 - alpha) * delta)
+    return min((m_v / r + eps) * R, R)
+
+
+def sum_ci(count: Tuple[float, float], avg: Tuple[float, float],
+           ) -> Tuple[float, float]:
+    """Union-bound SUM CI from a (1-delta/2) COUNT CI and (1-delta/2) AVG CI.
+
+    The paper states [c_l*g_l, c_r*g_r] (valid for g_l >= 0). For general
+    signs: SUM = N * AVG with N in [c_l, c_r] (>=0) and AVG in [g_l, g_r],
+    so the extreme products over the box are taken.
+    """
+    cl, cr = count
+    gl, gr = avg
+    cands = (cl * gl, cl * gr, cr * gl, cr * gr)
+    return (min(cands), max(cands))

@@ -1,0 +1,80 @@
+"""RangeTrim (paper §3, Algorithms 4 & 6): eliminate PHOS from any
+range-based SSI bounder by *asymmetrizing* it.
+
+Conceptually (paper §3.2), for the lower bound:
+  1. draw S without replacement from D,
+  2. compute a lower confidence bound for AVG(D_{< max S}) using
+     S - {max S} as the sample and [a, max S] as the range,
+  3. since AVG(D_{< max S}) <= AVG(D), that bound is valid for AVG(D).
+
+Algorithm 4 streams ``min(v, running_max_before_v)`` into the left state.
+**Multiset identity** (property-tested in ``tests/test_rangetrim.py``): for
+any sequence v_1..v_m,
+
+    {{ min(v_i, max_{j<i} v_j) : i = 2..m }}  ==  {{ v_1..v_m }} - {{ max }}
+
+(one occurrence of the max removed). Proof sketch: whenever a new running
+max arrives it contributes the *previous* max's value, i.e. each prefix-max
+"pushes back" its predecessor; every non-record value contributes itself;
+the final (global) max is the only value never contributed.
+
+Consequence: the trimmed state equals an O(1) Welford *downdate* of the
+plain state (remove one max instance), so RangeTrim needs **no sequential
+pass and no per-device trimming** — devices keep ordinary mergeable moment
+states and the trim happens at bound-evaluation time. This is the
+TPU-native reformulation recorded in DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bounders import Bounder
+from repro.core.state import Stats, downdate_extreme
+
+__all__ = ["RangeTrimBounder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeTrimBounder(Bounder):
+    """Wraps ``inner`` per Algorithm 4:
+
+    lbound: inner.lbound(S - {max S}, a, max S, N - 1, delta)
+    rbound: inner.rbound(S - {min S}, min S, b, N - 1, delta)
+
+    Inherits inner's PMA status; PHOS is eliminated by construction
+    (lbound never reads ``b``; rbound never reads ``a``).
+    """
+
+    inner: Bounder = None  # type: ignore[assignment]
+    name: str = "rangetrim"
+
+    def __post_init__(self):
+        from repro.core.bounders import AndersonDKWBounder
+
+        if isinstance(self.inner, AndersonDKWBounder):
+            # DKW has no PHOS (Table 2) so RT buys nothing — and its
+            # histogram bins are pinned to the engine's [a, b] grid, which a
+            # trimmed range would misinterpret. Refuse loudly.
+            raise ValueError("RangeTrim(Anderson/DKW) is unsupported: "
+                             "DKW already has no PHOS")
+        object.__setattr__(self, "name", f"{self.inner.name}+rt")
+        object.__setattr__(self, "has_pma", self.inner.has_pma)
+        object.__setattr__(self, "has_phos", False)
+
+    def lbound(self, s: Stats, a: float, b: float, N: float,
+               delta: float) -> float:
+        # NOTE: ``b`` is deliberately unused (PHOS elimination).
+        if s.count < 2:
+            return a  # cannot trim a 0/1-point sample; trivially valid
+        trimmed = downdate_extreme(s, "max")
+        return self.inner.lbound(trimmed, a, s.vmax, max(N - 1, trimmed.count),
+                                 delta)
+
+    def rbound(self, s: Stats, a: float, b: float, N: float,
+               delta: float) -> float:
+        if s.count < 2:
+            return b
+        trimmed = downdate_extreme(s, "min")
+        return self.inner.rbound(trimmed, s.vmin, b, max(N - 1, trimmed.count),
+                                 delta)

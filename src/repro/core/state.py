@@ -1,0 +1,282 @@
+"""Mergeable aggregation-state algebra (the paper's §2.2.2 interface, TPU-shaped).
+
+The paper streams tuples one at a time through ``update_state``.  On TPU we
+process *blocks* of tuples and merge partial states with collectives, so the
+state must form a commutative monoid.  We use Welford/Chan-style moment
+states ``(count, mean, m2)`` plus running ``(vmin, vmax)`` and an optional
+bucketized-CDF histogram (for the Anderson/DKW bounder).
+
+All functions are shape-polymorphic over leading "group" dimensions: a state
+whose fields have shape ``(G,)`` represents G independent aggregates (one per
+GROUP BY group / aggregate view), which is how the AQP engine vectorizes.
+
+Key identity used by the distributed RangeTrim implementation (see
+``repro.core.rangetrim``): removing one occurrence of the sample max from a
+Welford state is an exact O(1) *downdate*:
+
+    count' = count - 1
+    mean'  = (count * mean - x) / (count - 1)
+    m2'    = m2 - (x - mean) * (x - mean')
+
+which lets us trim without replaying the stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_POS_INF = jnp.inf
+_NEG_INF = -jnp.inf
+
+
+class MomentState(NamedTuple):
+    """Monoid state: masked count / Welford mean / Welford M2 / min / max."""
+
+    count: jax.Array  # float; number of (masked-in) values seen
+    mean: jax.Array   # running mean (0 when count == 0)
+    m2: jax.Array     # sum of squared deviations from the mean
+    vmin: jax.Array   # +inf when count == 0
+    vmax: jax.Array   # -inf when count == 0
+
+
+class HistState(NamedTuple):
+    """Bucketized-CDF state for Anderson/DKW. ``hist[k]`` counts values in
+    bin k of a uniform grid over the a-priori range ``[a, b]``."""
+
+    hist: jax.Array  # (..., K) float counts
+
+
+def init_moments(shape=(), dtype=jnp.float32) -> MomentState:
+    z = jnp.zeros(shape, dtype)
+    return MomentState(
+        count=z,
+        mean=z,
+        m2=z,
+        vmin=jnp.full(shape, _POS_INF, dtype),
+        vmax=jnp.full(shape, _NEG_INF, dtype),
+    )
+
+
+def init_hist(shape=(), nbins: int = 4096, dtype=jnp.float32) -> HistState:
+    return HistState(hist=jnp.zeros(shape + (nbins,), dtype))
+
+
+def moments_of_batch(values: jax.Array, mask: Optional[jax.Array] = None,
+                     axis=None, dtype=jnp.float32) -> MomentState:
+    """One-shot masked moments of a batch (the block-level 'update_state').
+
+    Uses deviations-from-block-mean so f32 accumulation stays accurate even
+    when ``|mean| >> std`` (catastrophic-cancellation guard; see DESIGN §3).
+    """
+    values = values.astype(dtype)
+    if mask is None:
+        mask = jnp.ones_like(values, dtype=bool)
+    mask = mask.astype(bool)
+    fmask = mask.astype(dtype)
+    count = jnp.sum(fmask, axis=axis)
+    safe = jnp.maximum(count, 1.0)
+    vsum = jnp.sum(values * fmask, axis=axis)
+    mean = vsum / safe
+    # second pass over the (in-register) block: deviations around the mean
+    if axis is None:
+        dev = (values - mean) * fmask
+    else:
+        dev = (values - jnp.expand_dims(mean, axis)) * fmask
+    m2 = jnp.sum(dev * dev, axis=axis)
+    vmin = jnp.min(jnp.where(mask, values, _POS_INF), axis=axis,
+                   initial=_POS_INF)
+    vmax = jnp.max(jnp.where(mask, values, _NEG_INF), axis=axis,
+                   initial=_NEG_INF)
+    zero = count == 0
+    return MomentState(
+        count=count,
+        mean=jnp.where(zero, 0.0, mean),
+        m2=jnp.where(zero, 0.0, m2),
+        vmin=vmin,
+        vmax=vmax,
+    )
+
+
+def merge_moments(a: MomentState, b: MomentState) -> MomentState:
+    """Chan et al. pairwise-merge; commutative & associative (monoid)."""
+    n = a.count + b.count
+    safe = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe)
+    m2 = a.m2 + b.m2 + delta * delta * (a.count * b.count / safe)
+    zero = n == 0
+    return MomentState(
+        count=n,
+        mean=jnp.where(zero, 0.0, mean),
+        m2=jnp.where(zero, 0.0, m2),
+        vmin=jnp.minimum(a.vmin, b.vmin),
+        vmax=jnp.maximum(a.vmax, b.vmax),
+    )
+
+
+def merge_hist(a: HistState, b: HistState) -> HistState:
+    return HistState(hist=a.hist + b.hist)
+
+
+def init_moments_host(shape=()) -> MomentState:
+    """Float64 numpy twin of ``init_moments`` for host-side accumulation."""
+    z = np.zeros(shape, np.float64)
+    return MomentState(count=z, mean=z.copy(), m2=z.copy(),
+                       vmin=np.full(shape, np.inf),
+                       vmax=np.full(shape, -np.inf))
+
+
+def to_host(state: MomentState) -> MomentState:
+    return MomentState(*(np.asarray(f, np.float64) for f in state))
+
+
+def merge_moments_host(a: MomentState, b: MomentState) -> MomentState:
+    """Float64 numpy pairwise merge. Device kernels emit f32 per-round
+    partial states; the engine's *running* state accumulates on host in
+    f64 so thousands of round merges do not erode precision."""
+    n = a.count + b.count
+    safe = np.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe)
+    m2 = a.m2 + b.m2 + delta * delta * (a.count * b.count / safe)
+    zero = n == 0
+    return MomentState(
+        count=n,
+        mean=np.where(zero, 0.0, mean),
+        m2=np.where(zero, 0.0, m2),
+        vmin=np.minimum(a.vmin, b.vmin),
+        vmax=np.maximum(a.vmax, b.vmax),
+    )
+
+
+def hist_of_batch(values: jax.Array, mask: Optional[jax.Array], a: float,
+                  b: float, nbins: int, dtype=jnp.float32) -> HistState:
+    """Bucketize into a uniform grid over [a, b] (clipping at the edges)."""
+    if mask is None:
+        mask = jnp.ones_like(values, dtype=bool)
+    idx = jnp.clip(
+        ((values - a) * (nbins / max(b - a, 1e-30))).astype(jnp.int32),
+        0, nbins - 1,
+    )
+    onehot = jax.nn.one_hot(idx, nbins, dtype=dtype)
+    onehot = onehot * mask.astype(dtype)[..., None]
+    return HistState(hist=jnp.sum(onehot, axis=tuple(range(values.ndim))))
+
+
+def tree_merge_moments(state: MomentState, axis: int = 0) -> MomentState:
+    """Reduce a stacked state (e.g. all-gathered per-device states) along
+    ``axis`` with a log-depth pairwise fold. Works under jit."""
+
+    def take(s, sl):
+        return jax.tree.map(lambda x: x[sl], s)
+
+    n = state.count.shape[axis]
+    assert axis == 0, "fold along leading axis"
+    while n > 1:
+        half = n // 2
+        a = take(state, slice(0, half))
+        b = take(state, slice(half, 2 * half))
+        merged = merge_moments(a, b)
+        if n % 2:
+            merged = jax.tree.map(
+                lambda m, s: jnp.concatenate([m, s[2 * half:2 * half + 1]], 0),
+                merged, state)
+            n = half + 1
+        else:
+            n = half
+        state = merged
+    return take(state, 0)
+
+
+# ---------------------------------------------------------------------------
+# Host-side float64 snapshot used by the bound-evaluation math.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stats:
+    """Float64 host snapshot of a (scalar) MomentState (+ optional hist)."""
+
+    count: float
+    mean: float
+    m2: float
+    vmin: float
+    vmax: float
+    hist: Optional[np.ndarray] = None  # float64 counts, uniform over [a, b]
+
+    @property
+    def variance(self) -> float:
+        """Population-style sample variance \\hat{sigma}^2 = m2 / count."""
+        return self.m2 / self.count if self.count > 0 else 0.0
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(max(self.variance, 0.0)))
+
+    @staticmethod
+    def from_state(state: MomentState, hist: Optional[HistState] = None,
+                   index=()) -> "Stats":
+        get = lambda x: float(np.asarray(x)[index]) if index != () else float(np.asarray(x))
+        h = None
+        if hist is not None:
+            h = np.asarray(hist.hist)[index].astype(np.float64)
+        return Stats(
+            count=get(state.count), mean=get(state.mean), m2=get(state.m2),
+            vmin=get(state.vmin), vmax=get(state.vmax), hist=h,
+        )
+
+    @staticmethod
+    def of_sample(values, hist_bins: Optional[int] = None,
+                  hist_range=None) -> "Stats":
+        v = np.asarray(values, dtype=np.float64)
+        if v.size == 0:
+            return Stats(0.0, 0.0, 0.0, np.inf, -np.inf)
+        mean = float(v.mean())
+        h = None
+        if hist_bins is not None:
+            a, b = hist_range
+            idx = np.clip(((v - a) * (hist_bins / max(b - a, 1e-30))).astype(int),
+                          0, hist_bins - 1)
+            h = np.bincount(idx, minlength=hist_bins).astype(np.float64)
+        return Stats(
+            count=float(v.size), mean=mean, m2=float(((v - mean) ** 2).sum()),
+            vmin=float(v.min()), vmax=float(v.max()), hist=h,
+        )
+
+    def reflect(self, a: float, b: float) -> "Stats":
+        """Map x -> (a + b) - x; turns Rbound into Lbound (paper Alg. 1/3)."""
+        h = None if self.hist is None else self.hist[::-1].copy()
+        return Stats(
+            count=self.count, mean=(a + b) - self.mean, m2=self.m2,
+            vmin=(a + b) - self.vmax, vmax=(a + b) - self.vmin, hist=h,
+        )
+
+
+def downdate_extreme(s: Stats, which: str) -> Stats:
+    """Remove one occurrence of the sample max (``which='max'``) or min from a
+    Stats snapshot — the exact RangeTrim trim (DESIGN §2.1).
+
+    After the downdate ``vmax``/``vmin`` of the *remaining* sample is unknown,
+    but RangeTrim only needs the removed value itself (it becomes the trimmed
+    range endpoint), so we conservatively keep the old extremes.
+    """
+    if s.count < 2:
+        return Stats(0.0, 0.0, 0.0, s.vmin, s.vmax, s.hist)
+    x = s.vmax if which == "max" else s.vmin
+    n1 = s.count - 1.0
+    mean1 = (s.count * s.mean - x) / n1
+    m21 = s.m2 - (x - s.mean) * (x - mean1)
+    h = None
+    if s.hist is not None:
+        h = s.hist.copy()
+        nz = np.nonzero(h > 0)[0]
+        if nz.size:
+            k = nz[-1] if which == "max" else nz[0]
+            h[k] -= 1.0
+    return Stats(count=n1, mean=mean1, m2=max(m21, 0.0),
+                 vmin=s.vmin, vmax=s.vmax, hist=h)

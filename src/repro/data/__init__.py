@@ -1,0 +1,3 @@
+"""repro.data — dataset substrates: the synthetic FLIGHTS generator used by
+the paper-reproduction benchmarks and the LM token pipeline used by the
+training stack."""

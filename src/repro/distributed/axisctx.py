@@ -1,0 +1,82 @@
+"""Logical-axis sharding constraints for activations.
+
+Model code calls ``constrain(x, "batch", "seq", "heads", None)`` with
+*logical* axis names; the launcher installs a rules context mapping logical
+names to mesh axes (with divisibility guards).  Outside any context the
+call is a no-op, so model code runs unchanged on a bare CPU.
+
+This is the mechanism that keeps the big intermediates (attention scores,
+MLP hiddens, MoE dispatch buffers, logits) sharded on the TP axis instead
+of silently replicating when GSPMD propagation gives up.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_tls = threading.local()
+
+Axes = Union[str, Sequence[str], None]
+
+
+def default_rules(mesh: Mesh, *, shard_activations: bool = False
+                  ) -> Dict[str, Axes]:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    rules = {
+        "batch": dp,
+        "seq": None,
+        "embed": "model" if shard_activations else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "inner": "model",       # ssm d_inner
+        "ssm_heads": "model",
+        "kv_seq": "model",      # decode KV cache sequence axis
+    }
+    return rules
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Optional[Mesh], rules: Dict[str, Axes]):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def constrain(x, *logical_axes):
+    """Apply with_sharding_constraint per the active rules (no-op without
+    an active context or when a dim does not divide)."""
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    parts = []
+    for dim, name in zip(x.shape, logical_axes):
+        want = rules.get(name) if name else None
+        if want is not None and mesh is not None \
+                and dim % max(_axis_size(mesh, want), 1) != 0:
+            want = None
+        parts.append(want)
+    # pad spec for any unlisted trailing dims
+    parts += [None] * (x.ndim - len(parts))
+    return jax.lax.with_sharding_constraint(x, P(*parts))

@@ -1,0 +1,260 @@
+"""Sharding rules: param / optimizer / batch / cache PartitionSpecs.
+
+Posture (DESIGN.md §5): DP+FSDP over the flattened ``("pod","data")``
+domain (ZeRO-3: params & optimizer state sharded over dp), TP/EP over
+``"model"`` (16-way). Every rule is divisibility-checked against the mesh:
+a dim that does not divide falls back to replication on that axis rather
+than failing (the dry-run log records where that happens).
+
+Params are nested dicts; rules key on the *leaf name* with a known base
+rank — any extra leading dims are layer-stack dims (scan) and map to None.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % max(_axis_size(mesh, axes), 1) == 0
+
+
+def _spec(mesh: Mesh, shape, *wants) -> P:
+    """Build a PartitionSpec, dropping any axis that does not divide."""
+    out = []
+    for dim, want in zip(shape, wants):
+        out.append(want if want and _div(dim, mesh, want) else None)
+    return P(*out)
+
+
+# base rank of each named leaf (extra leading dims = layer stacks)
+_BASE_RANK = {
+    "embed": 2, "lm_head": 2,
+    "wq": 2, "wk": 2, "wv": 2, "wo": 2,
+    "bq": 1, "bk": 1, "bv": 1,
+    "q_norm": 1, "k_norm": 1,
+    "scale": 1, "bias": 1,
+    "w_gate": 2, "w_up": 2, "w_down": 2,
+    "router": 2,
+    "in_proj": 2,
+    "in_x": 2, "in_z": 2, "in_B": 2, "in_C": 2, "in_dt": 2,
+    "conv_w": 2, "conv_b": 1,
+    "conv_x_w": 2, "conv_x_b": 1, "conv_B_w": 2, "conv_B_b": 1,
+    "conv_C_w": 2, "conv_C_b": 1,
+    "proj_dt": 2, "proj_B": 2, "proj_C": 2,
+    "dt_proj": 2, "dt_bias": 1, "A_log": None, "D": 1,
+    "norm_scale": 1, "out_proj": 2,
+}
+
+
+def _spec_fallback(mesh: Mesh, shape, wants) -> P:
+    """Per-dim candidate lists: first candidate that divides wins."""
+    out = []
+    for dim, options in zip(shape, wants):
+        got = None
+        for want in options:
+            if want is None:
+                break
+            if _div(dim, mesh, want):
+                got = want
+                break
+        out.append(got)
+    return P(*out)
+
+
+def _param_rule(cfg: ArchConfig, mesh: Mesh, path: Tuple[str, ...],
+                shape) -> P:
+    """ZeRO-3-correct placement: FSDP (dp) goes on OUTPUT dims of
+    projections so GSPMD resolves to weight all-gathers (cheap, overlap-
+    able) instead of activation partial-sum all-reduces; contraction dims
+    are sharded only over "model" where the TP reduction is intended
+    (wo / w_down / out_proj). Each dim carries a fallback list:
+    [(model+dp), model, None] etc. — first divisible candidate wins.
+    """
+    dp = mesh_dp_axes(mesh)
+    md = tuple(["model"] + list(dp))  # combined model+dp shard
+    name = path[-1]
+    in_moe = any(p in ("moe",) for p in path)
+    base = _BASE_RANK.get(name)
+    if name == "A_log":
+        base = 2 if cfg.ssm_kind == "mamba1" else 1
+    if base is None:
+        return P()
+    if in_moe and name in ("w_gate", "w_up", "w_down"):
+        base = 3
+    stack = len(shape) - base
+    tail = shape[stack:]
+    kv_ok = _div(cfg.n_kv_heads, mesh, "model")
+
+    OUT = [md, "model", dp, None]          # output-dim preference
+    rules = {
+        "embed": (["model", None], [dp, None]),
+        "lm_head": ([None], OUT),
+        "wq": ([None], OUT),
+        "wk": ([None], (OUT if kv_ok else [dp, None])),
+        "wv": ([None], (OUT if kv_ok else [dp, None])),
+        "bq": (["model", None],),
+        "bk": ((["model", None] if kv_ok else [None]),),
+        "bv": ((["model", None] if kv_ok else [None]),),
+        "wo": (["model"], [dp, None]),
+        "router": ([None], [None]),
+        "in_proj": ([None], [dp, None]),
+        "in_x": ([None], OUT),
+        "in_z": ([None], OUT),
+        "in_B": ([None], ["model", None]),
+        "in_C": ([None], ["model", None]),
+        "in_dt": ([None], ["model", None]),
+        "conv_w": ([None], ["model", None]),
+        "conv_x_w": ([None], ["model", None]),
+        "conv_B_w": ([None], ["model", None]),
+        "conv_C_w": ([None], ["model", None]),
+        "proj_dt": (["model"], [dp, None]),
+        "proj_B": (["model"], [None]),
+        "proj_C": (["model"], [None]),
+        "dt_proj": ([None], OUT),
+        "out_proj": (["model"], [dp, None]),
+    }
+    for nm in ("conv_b", "conv_x_b", "conv_B_b", "conv_C_b", "D",
+               "dt_bias", "norm_scale"):
+        rules[nm] = (["model", None],)
+    if in_moe:
+        rules["w_gate"] = (["model"], [None], [dp, None])
+        rules["w_up"] = (["model"], [None], [dp, None])
+        rules["w_down"] = (["model"], [None], [dp, None])
+    if name in ("w_gate", "w_up"):
+        rules.setdefault("w_gate", ([None], OUT))
+        rules.setdefault("w_up", ([None], OUT))
+        if not in_moe:
+            rules["w_gate"] = ([None], OUT)
+            rules["w_up"] = ([None], OUT)
+    if name == "w_down" and not in_moe:
+        rules["w_down"] = (["model"], [dp, None])
+    if name == "A_log":
+        rules["A_log"] = ((["model", None], [None]) if base == 2
+                          else (["model", None],))
+
+    want = rules.get(name)
+    if want is None:
+        want = tuple([None] for _ in tail)
+    want = tuple(want[:len(tail)])
+    want = want + tuple([None] for _ in range(len(tail) - len(want)))
+    spec = _spec_fallback(mesh, tail, want)
+    return P(*([None] * stack + list(spec)))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_tree) -> Dict:
+    """Map a params (shape) tree to a PartitionSpec tree."""
+    def rule(path, leaf):
+        names = tuple(p.key for p in path)
+        return _param_rule(cfg, mesh, names, leaf.shape)
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- batches / caches -----------------------------------------------------------
+
+
+def batch_axis(mesh: Mesh, global_batch: int):
+    """Largest dp prefix that divides the batch (long_500k has B=1)."""
+    dp = mesh_dp_axes(mesh)
+    if _div(global_batch, mesh, dp):
+        return dp
+    if "data" in dp and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                specs: Dict) -> Dict:
+    """PartitionSpecs for the input batch (by input name)."""
+    ba = batch_axis(mesh, shape.global_batch)
+    out = {}
+    for k, s in specs.items():
+        if k == "pos":
+            out[k] = P()
+        elif s.ndim >= 1:
+            out[k] = P(*([ba] + [None] * (s.ndim - 1)))
+        else:
+            out[k] = P()
+    return out
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                cache_tree) -> Dict:
+    """Decode-cache specs. Attention KV: batch -> dp; heads -> model when
+    kv-heads divide, else sequence -> model. SSM states: channels/heads ->
+    model."""
+    ba = batch_axis(mesh, shape.global_batch)
+    kv_ok = _div(cfg.n_kv_heads, mesh, "model")
+
+    def rule(path, leaf):
+        names = tuple(getattr(p, "key", "") for p in path)
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            # (stack..., B, S, K, hd)
+            stack = nd - 4
+            if kv_ok:
+                spec = [ba, None, "model", None]
+            else:
+                spec = [ba, "model", None, None]
+            dims = leaf.shape[stack:]
+            fixed = [s if s and _div(d, mesh, s) else None
+                     for d, s in zip(dims, spec)]
+            return P(*([None] * stack + fixed))
+        if name in ("conv", "conv_x"):
+            stack = nd - 3
+            dims = leaf.shape[stack:]
+            spec = [ba, None, "model"]
+            fixed = [s if s and _div(d, mesh, s) else None
+                     for d, s in zip(dims, spec)]
+            return P(*([None] * stack + fixed))
+        if name in ("conv_B", "conv_C"):
+            stack = nd - 3
+            dims = leaf.shape[stack:]
+            spec = [ba, None, "model"]
+            fixed = [s if s and _div(d, mesh, s) else None
+                     for d, s in zip(dims, spec)]
+            return P(*([None] * stack + fixed))
+        if name == "h":
+            # mamba1 (B, din, n) | mamba2 (B, nh, hd, n)
+            base = 3 if cfg.ssm_kind == "mamba1" else 4
+            stack = nd - base
+            dims = leaf.shape[stack:]
+            spec = [ba, "model"] + [None] * (base - 2)
+            fixed = [s if s and _div(d, mesh, s) else None
+                     for d, s in zip(dims, spec)]
+            return P(*([None] * stack + fixed))
+        if name == "memory":
+            return P(ba, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def activation_spec(mesh: Mesh, shape: ShapeConfig) -> P:
+    """Residual-stream constraint used when cfg.shard_activations is on."""
+    ba = batch_axis(mesh, shape.global_batch)
+    return P(ba, None, "model")

@@ -1,0 +1,7 @@
+"""repro.evalx — the paper's technique as a first-class framework feature:
+CI-guaranteed early-stopped evaluation and threshold monitors."""
+
+from repro.evalx.approx_eval import ApproxEval, EvalReport
+from repro.evalx.monitors import ThresholdMonitor
+
+__all__ = ["ApproxEval", "EvalReport", "ThresholdMonitor"]

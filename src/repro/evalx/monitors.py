@@ -1,0 +1,60 @@
+"""Threshold monitors: HAVING-style alarms on metric streams (stopping
+condition ④ applied to framework telemetry).
+
+A ThresholdMonitor consumes mergeable MomentStates (e.g. the
+``loss_ci_state`` emitted by every train/eval step) over a *stationary
+window* and fires only when the windowed mean's CI clears the threshold —
+i.e. alarms carry a 1-delta guarantee instead of being point-estimate
+noise. Typical uses: grad-norm spike escalation, eval-loss regression
+gates, data-pipeline staleness checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.bounders import get_bounder
+from repro.core.optstop import delta_schedule
+from repro.core.state import MomentState, Stats, init_moments_host, \
+    merge_moments_host, to_host
+
+
+@dataclasses.dataclass
+class ThresholdMonitor:
+    threshold: float
+    value_range: Tuple[float, float]
+    delta: float = 1e-9
+    direction: str = "above"      # fire when mean is above/below threshold
+    bounder_name: str = "bernstein"
+    rangetrim: bool = True
+
+    def __post_init__(self):
+        self._bounder = get_bounder(self.bounder_name,
+                                    rangetrim=self.rangetrim)
+        self.reset()
+
+    def reset(self):
+        self._state = init_moments_host(())
+        self._rounds = 0
+
+    def update(self, state: MomentState) -> Optional[bool]:
+        """Merge one step's MomentState; returns True/False when the side
+        is determined w.h.p., None while undecided."""
+        self._state = merge_moments_host(self._state, to_host(state))
+        self._rounds += 1
+        a, b = self.value_range
+        s = Stats(float(self._state.count), float(self._state.mean),
+                  float(self._state.m2), float(self._state.vmin),
+                  float(self._state.vmax))
+        if s.count <= 1:
+            return None
+        dk = delta_schedule(self.delta, self._rounds)
+        lo, hi = self._bounder.interval(s, a, b, 1e18, dk)
+        if lo > self.threshold:
+            return self.direction == "above"
+        if hi < self.threshold:
+            return self.direction == "below"
+        return None

@@ -1,0 +1,6 @@
+"""repro.kernels — Pallas TPU kernels for the scan hot path (block-level
+group aggregation, DKW histograms, bitmap lookahead) with jnp oracles."""
+
+from repro.kernels.ops import active_blocks, grouped_hist, grouped_moments
+
+__all__ = ["active_blocks", "grouped_hist", "grouped_moments"]

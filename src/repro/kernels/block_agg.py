@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused masked per-group moment aggregation.
+
+This is the scan hot loop of the paper's system (FastFrame's per-tuple
+``update_state``).  A GPU port would scatter-add into per-group
+accumulators; on TPU we reformulate the segment reduction as **one-hot
+matmuls on the MXU** (DESIGN.md §3):
+
+    count[g] = sum_r 1[gid_r == g] * mask_r
+    dsum[g]  = sum_r (v_r - c) * 1[gid_r == g] * mask_r
+    dsq[g]   = sum_r (v_r - c)^2 * 1[gid_r == g] * mask_r
+
+computed as one ``(3, R) @ (R, Gt)`` MXU matmul per (row-tile, group-tile),
+plus VPU min/max trees for the RangeTrim extremes.  ``c`` is a fixed
+centering constant (the catalog midpoint) so f32 accumulation does not
+cancel; the exact shifted-moment identity recovers Welford ``(mean, m2)``
+downstream (``ops.grouped_moments``).
+
+Grid = (group_tiles, row_tiles) with row_tiles minor: TPU grids execute
+sequentially, so each group tile's output block is revisited across row
+tiles and accumulated in place (`@pl.when(r == 0)` initializes).
+
+VMEM budget per program (defaults ROW_TILE=2048, GROUP_TILE=256):
+  values/gids/mask tiles       3 * 2048 * 4 B   =  24 KiB
+  one-hot                      2048 * 256 * 4 B =   2 MiB
+  rows + outputs               ~40 KiB
+comfortably under the ~16 MiB/core VMEM of TPU v5e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 2048   # rows per grid step (must be a multiple of 128)
+GROUP_TILE = 256  # groups per grid step (must be a multiple of 128)
+
+
+def _kernel(center_ref, values_ref, gids_ref, mask_ref,
+            sums_ref, vmin_ref, vmax_ref):
+    r = pl.program_id(1)
+    g = pl.program_id(0)
+    gt = sums_ref.shape[1]
+
+    c = center_ref[0, 0]
+    v = values_ref[...].reshape(-1)
+    gid = gids_ref[...].reshape(-1)
+    m = mask_ref[...].reshape(-1).astype(jnp.float32)
+
+    gbase = g * gt
+    group_ids = gbase + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)
+    onehot = (gid[:, None] == group_ids).astype(jnp.float32) * m[:, None]
+
+    dv = v - c
+    rows = jnp.stack([jnp.ones_like(v), dv, dv * dv])          # (3, R)
+    partial = jax.lax.dot(rows, onehot,
+                          preferred_element_type=jnp.float32)  # (3, Gt) MXU
+
+    sel = onehot > 0.0
+    vmin_p = jnp.min(jnp.where(sel, v[:, None], jnp.inf), axis=0,
+                     keepdims=True)
+    vmax_p = jnp.max(jnp.where(sel, v[:, None], -jnp.inf), axis=0,
+                     keepdims=True)
+
+    @pl.when(r == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        vmin_ref[...] = jnp.full_like(vmin_ref, jnp.inf)
+        vmax_ref[...] = jnp.full_like(vmax_ref, -jnp.inf)
+
+    sums_ref[...] += partial
+    vmin_ref[...] = jnp.minimum(vmin_ref[...], vmin_p)
+    vmax_ref[...] = jnp.maximum(vmax_ref[...], vmax_p)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "row_tile",
+                                             "group_tile", "interpret"))
+def block_agg(values: jax.Array, gids: jax.Array, mask: jax.Array,
+              center: jax.Array, *, num_groups: int,
+              row_tile: int = ROW_TILE, group_tile: int = GROUP_TILE,
+              interpret: bool = False):
+    """Raw kernel launch. Inputs are 1-D and already padded:
+    ``values.shape[0] % row_tile == 0`` and ``num_groups % group_tile == 0``
+    (padding rows carry mask=0). Returns (sums(3,G), vmin(1,G), vmax(1,G)).
+    """
+    n = values.shape[0]
+    assert n % row_tile == 0 and num_groups % group_tile == 0
+    lanes = 128
+    v2 = values.astype(jnp.float32).reshape(n // lanes, lanes)
+    g2 = gids.astype(jnp.int32).reshape(n // lanes, lanes)
+    m2 = mask.astype(jnp.float32).reshape(n // lanes, lanes)
+    rt = row_tile // lanes
+    grid = (num_groups // group_tile, n // row_tile)
+    c = jnp.asarray(center, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda g, r: (0, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((3, group_tile), lambda g, r: (0, g)),
+            pl.BlockSpec((1, group_tile), lambda g, r: (0, g)),
+            pl.BlockSpec((1, group_tile), lambda g, r: (0, g)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((3, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c, v2, g2, m2)

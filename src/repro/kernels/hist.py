@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: per-group bucketized histogram (Anderson/DKW state).
+
+hist[g, k] = sum_r mask_r * 1[gid_r == g] * 1[bin(v_r) == k]
+
+Reformulated for the MXU as a product of two one-hots per tile:
+
+    hist_tile = onehot_groups.T @ onehot_bins     # (Gt, R) @ (R, Kt)
+
+Grid = (group_tiles, bin_tiles, row_tiles), row minor; the (g, k) output
+block is revisited across row tiles and accumulated in place.
+
+VMEM per program (ROW_TILE=1024, GROUP_TILE=128, BIN_TILE=512):
+  onehot_bins 1024*512*4 = 2 MiB, onehot_groups 1024*128*4 = 0.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 1024
+GROUP_TILE = 128
+BIN_TILE = 512
+
+
+def _kernel(scale_ref, values_ref, gids_ref, mask_ref, hist_ref):
+    r = pl.program_id(2)
+    g = pl.program_id(0)
+    k = pl.program_id(1)
+    gt, kt = hist_ref.shape
+
+    a = scale_ref[0, 0]
+    inv_width = scale_ref[0, 1]
+    nbins = scale_ref[0, 2]
+
+    v = values_ref[...].reshape(-1)
+    gid = gids_ref[...].reshape(-1)
+    m = mask_ref[...].reshape(-1).astype(jnp.float32)
+
+    bin_idx = jnp.clip(((v - a) * inv_width), 0.0, nbins - 1.0
+                       ).astype(jnp.int32)
+    gids_tile = g * gt + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)
+    bins_tile = k * kt + jax.lax.broadcasted_iota(jnp.int32, (1, kt), 1)
+    onehot_g = (gid[:, None] == gids_tile).astype(jnp.float32) * m[:, None]
+    onehot_b = (bin_idx[:, None] == bins_tile).astype(jnp.float32)
+
+    partial = jax.lax.dot(onehot_g.T, onehot_b,
+                          preferred_element_type=jnp.float32)  # (Gt, Kt)
+
+    @pl.when(r == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "a", "b", "num_groups", "nbins", "nbins_data", "row_tile", "group_tile",
+    "bin_tile", "interpret"))
+def grouped_hist(values: jax.Array, gids: jax.Array, mask: jax.Array,
+                 a: float, b: float, *, num_groups: int, nbins: int,
+                 nbins_data: int = 0,
+                 row_tile: int = ROW_TILE, group_tile: int = GROUP_TILE,
+                 bin_tile: int = BIN_TILE, interpret: bool = False):
+    """Raw launch; 1-D padded inputs; returns hist (num_groups, nbins).
+
+    ``nbins`` is the (tile-padded) output width; ``nbins_data`` (default
+    ``nbins``) is the *logical* bin count that defines the bucketization —
+    bins >= nbins_data stay empty when the output is padded.
+    """
+    n = values.shape[0]
+    assert n % row_tile == 0
+    assert num_groups % group_tile == 0 and nbins % bin_tile == 0
+    nbins_data = nbins_data or nbins
+    lanes = 128
+    v2 = values.astype(jnp.float32).reshape(n // lanes, lanes)
+    g2 = gids.astype(jnp.int32).reshape(n // lanes, lanes)
+    m2 = mask.astype(jnp.float32).reshape(n // lanes, lanes)
+    rt = row_tile // lanes
+    inv_width = float(nbins_data) / max(float(b) - float(a), 1e-30)
+    scale = jnp.asarray([[a, inv_width, float(nbins_data)]], jnp.float32)
+    grid = (num_groups // group_tile, nbins // bin_tile, n // row_tile)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda g, k, r: (0, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, k, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, k, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, k, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((group_tile, bin_tile),
+                               lambda g, k, r: (g, k)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, nbins), jnp.float32),
+        interpret=interpret,
+    )(scale, v2, g2, m2)

@@ -1,0 +1,129 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle padding to tile boundaries, centering, conversion of raw
+kernel outputs into :class:`repro.core.state.MomentState` / ``HistState``,
+and backend dispatch:
+
+  * ``impl='pallas'``    — compiled Pallas (TPU target)
+  * ``impl='interpret'`` — Pallas interpret mode (kernel body on CPU)
+  * ``impl='ref'``       — pure-jnp oracle (XLA fusion; also the fastest
+                           choice on actual CPU hosts)
+  * ``impl=None``        — auto: pallas on TPU, ref elsewhere.
+
+The AQP engine calls these per scan round.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import HistState, MomentState
+from repro.kernels import bitmap_active as _bitmap
+from repro.kernels import block_agg as _block_agg
+from repro.kernels import hist as _hist
+from repro.kernels import ref as _ref
+
+
+def _auto_impl(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+def grouped_moments(values: jax.Array, gids: jax.Array,
+                    mask: Optional[jax.Array], num_groups: int,
+                    center: float = 0.0, *, impl: Optional[str] = None,
+                    row_tile: int = _block_agg.ROW_TILE,
+                    group_tile: int = _block_agg.GROUP_TILE) -> MomentState:
+    """Fused masked per-group moments -> MomentState with leading dim
+    ``num_groups``. ``center`` should be a data-scale constant (catalog
+    midpoint) for f32 stability; the result is mathematically independent
+    of it (exact shifted-moment identity)."""
+    impl = _auto_impl(impl)
+    if mask is None:
+        mask = jnp.ones_like(values, dtype=jnp.float32)
+    values = values.reshape(-1)
+    gids = gids.reshape(-1)
+    mask = mask.reshape(-1)
+    if impl == "ref":
+        sums, vmin, vmax = _ref.block_agg_ref(values, gids, mask, center,
+                                              num_groups=num_groups)
+    else:
+        gpad = (-num_groups) % group_tile
+        g_padded = num_groups + gpad
+        v = _pad_to(values, row_tile)
+        g = _pad_to(gids, row_tile)
+        m = _pad_to(mask, row_tile)
+        sums, vmin, vmax = _block_agg.block_agg(
+            v, g, m, jnp.asarray(center, jnp.float32),
+            num_groups=g_padded, row_tile=row_tile, group_tile=group_tile,
+            interpret=(impl == "interpret"))
+        sums = sums[:, :num_groups]
+        vmin = vmin[:, :num_groups]
+        vmax = vmax[:, :num_groups]
+    count, dsum, dsq = sums[0], sums[1], sums[2]
+    safe = jnp.maximum(count, 1.0)
+    mean = jnp.asarray(center, jnp.float32) + dsum / safe
+    m2 = jnp.maximum(dsq - dsum * dsum / safe, 0.0)
+    empty = count == 0
+    return MomentState(
+        count=count,
+        mean=jnp.where(empty, 0.0, mean),
+        m2=jnp.where(empty, 0.0, m2),
+        vmin=vmin.reshape(-1),
+        vmax=vmax.reshape(-1),
+    )
+
+
+def grouped_hist(values: jax.Array, gids: jax.Array,
+                 mask: Optional[jax.Array], num_groups: int, a: float,
+                 b: float, nbins: int = 1024, *,
+                 impl: Optional[str] = None,
+                 row_tile: int = _hist.ROW_TILE,
+                 group_tile: int = _hist.GROUP_TILE,
+                 bin_tile: int = _hist.BIN_TILE) -> HistState:
+    """Per-group DKW histogram -> HistState (num_groups, nbins)."""
+    impl = _auto_impl(impl)
+    if mask is None:
+        mask = jnp.ones_like(values, dtype=jnp.float32)
+    values = values.reshape(-1)
+    gids = gids.reshape(-1)
+    mask = mask.reshape(-1)
+    if impl == "ref":
+        return HistState(_ref.grouped_hist_ref(
+            values, gids, mask, a, b, num_groups=num_groups, nbins=nbins))
+    gpad = (-num_groups) % group_tile
+    kpad = (-nbins) % bin_tile
+    h = _hist.grouped_hist(
+        _pad_to(values, row_tile), _pad_to(gids, row_tile),
+        _pad_to(mask, row_tile), a, b,
+        num_groups=num_groups + gpad, nbins=nbins + kpad, nbins_data=nbins,
+        row_tile=row_tile, group_tile=group_tile, bin_tile=bin_tile,
+        interpret=(impl == "interpret"))
+    return HistState(h[:num_groups, :nbins])
+
+
+def active_blocks(bitmap: jax.Array, active_words: jax.Array, *,
+                  impl: Optional[str] = None,
+                  block_tile: int = _bitmap.BLOCK_TILE) -> jax.Array:
+    """Packed-bitmap lookahead -> int32 (nblocks,) activity flags."""
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.active_blocks_ref(bitmap, active_words).reshape(-1)
+    nblocks = bitmap.shape[0]
+    bm = _pad_to(bitmap, block_tile)
+    out = _bitmap.active_blocks(bm, active_words, block_tile=block_tile,
+                                interpret=(impl == "interpret"))
+    return out.reshape(-1)[:nblocks]

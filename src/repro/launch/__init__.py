@@ -1,0 +1,3 @@
+"""repro.launch — mesh definitions, dry-run driver, train/serve entry
+points. NOTE: importing repro.launch.dryrun sets XLA_FLAGS; import it only
+in fresh processes."""

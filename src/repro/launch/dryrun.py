@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_DRYRUN_EXTRA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the step function (train_step / prefill / decode) is lowered
+with ShapeDtypeStruct inputs under the production mesh, compiled, and its
+``memory_analysis()`` / ``cost_analysis()`` plus a collective-bytes parse
+of the partitioned HLO are recorded — the §Roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_0_6b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax                          # noqa: E402
+import jax.numpy as jnp             # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get  # noqa: E402
+from repro.configs.registry import ARCH_IDS  # noqa: E402
+from repro.distributed import sharding as shard  # noqa: E402
+from repro.distributed.axisctx import default_rules, logical_axis_rules  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build, input_specs, window_for  # noqa: E402
+from repro.train import OptConfig, abstract_state, build_train_step  # noqa: E402
+from repro.train import optimizer as opt_mod  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[4,8]{1,0}' -> bytes; tuples sum their elements."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device operand bytes of every collective op, by kind."""
+    sizes = {}
+    # definition lines: %name = <type> op(...)
+    defre = re.compile(r"%?([\w.\-]+) = ([^ ]+(?:, [^ )]+\))?[^ ]*) ")
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?([\w.\-]+) = (\(?[\w\[\]{},/ ]+?\)?) "
+                     r"([\w\-]+)\(", line)
+        if not m:
+            continue
+        name, type_str, _ = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[\w\[\]{},/ ]+?\)?) "
+                     r"([\w\-]+)\((.*)", line)
+        if not m:
+            continue
+        type_str, op, args = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        ops_bytes = 0
+        for ref in re.finditer(r"%([\w.\-]+)", args):
+            ops_bytes += sizes.get(ref.group(1), 0)
+        if ops_bytes == 0:  # fallback: use the result type
+            ops_bytes = _shape_bytes(type_str)
+        out[kind]["bytes"] += ops_bytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def build_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               overrides=None):
+    """Returns (jitted fn, example args (abstract), mesh)."""
+    import dataclasses
+    cfg = get(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.shapes():
+        raise ValueError(f"{arch_id} skips {shape_name} "
+                         "(full-attention long-context rule)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(cfg)
+    window = window_for(cfg, shape.seq_len)
+    specs = input_specs(cfg, shape)
+    bspecs = shard.batch_specs(cfg, mesh, shape, specs)
+
+    if shape.kind == "train":
+        ocfg = OptConfig.for_arch(cfg)
+        state = abstract_state(model, ocfg)
+        pspecs = shard.param_specs(cfg, mesh, state["params"])
+        ospecs = opt_mod.state_specs(pspecs, state["params"], ocfg)
+        sspec = {"params": pspecs, "opt": ospecs, "step": P()}
+        fn = build_train_step(model, ocfg, window=window)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(shard.named(mesh, sspec),
+                          shard.named(mesh, bspecs)),
+            donate_argnums=(0,))
+        args = (state, specs)
+    elif shape.kind == "prefill":
+        state = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspecs = shard.param_specs(cfg, mesh, state)
+
+        def fn(params, batch):
+            return model.prefill(params, batch, window)
+        jfn = jax.jit(fn, in_shardings=(shard.named(mesh, pspecs),
+                                        shard.named(mesh, bspecs)))
+        args = (state, specs)
+    else:  # decode
+        state = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspecs = shard.param_specs(cfg, mesh, state)
+        cache_len = (shape.seq_len if cfg.family != "encdec"
+                     else shape.seq_len)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len))
+        cspecs = shard.cache_specs(cfg, mesh, shape, cache)
+        # encdec: memory input also present in bspecs
+        def fn(params, cache, batch):
+            return model.decode(params, cache, batch, window)
+        jfn = jax.jit(fn, in_shardings=(shard.named(mesh, pspecs),
+                                        shard.named(mesh, cspecs),
+                                        shard.named(mesh, bspecs)),
+                      donate_argnums=(1,))
+        args = (state, cache, specs)
+    return jfn, args, mesh, cfg, shape
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, overrides=None):
+    t0 = time.time()
+    jfn, args, mesh, cfg, shape = build_cell(arch_id, shape_name, multi_pod,
+                                             overrides)
+    rules = default_rules(mesh, shard_activations=cfg.shard_activations)
+    with mesh, logical_axis_rules(mesh, rules):
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            }
+            mem_info["peak_bytes_per_device"] = (
+                mem_info["argument_bytes"] + mem_info["output_bytes"]
+                + mem_info["temp_bytes"] - mem_info["alias_bytes"])
+        except Exception as e:  # CPU backend quirks
+            mem_info = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            cost_info = {"flops": float(cost.get("flops", -1)),
+                         "bytes_accessed": float(cost.get("bytes accessed",
+                                                          -1))}
+        except Exception as e:
+            cost_info = {"error": str(e)}
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)       # raw (no trip multipliers)
+        parsed = hlo_cost.analyze(hlo)       # trip-count-correct cost model
+    record = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(mesh.size),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": mem_info, "cost_raw": cost_info,
+        "hlo_cost": parsed, "collectives_raw": colls,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "ok": True,
+    }
+    if keep_hlo:
+        record["hlo_len"] = len(hlo)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (python literal)")
+    ap.add_argument("--tag", default=None, help="label stored on records")
+    args = ap.parse_args()
+    import ast
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in get(a).shapes():
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("ok") and not r.get("tag") and not r.get("overrides")}
+    if overrides or args.tag:
+        done = set()
+
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch_id, shape_name in cells:
+            if (arch_id, shape_name, mesh_name) in done:
+                print(f"SKIP {arch_id} {shape_name} {mesh_name} (done)")
+                continue
+            print(f"=== {arch_id} x {shape_name} x {mesh_name} ===",
+                  flush=True)
+            try:
+                rec = run_cell(arch_id, shape_name, multi_pod,
+                               overrides=overrides)
+                if overrides:
+                    rec["overrides"] = {k: repr(v)
+                                        for k, v in overrides.items()}
+                if args.tag:
+                    rec["tag"] = args.tag
+                print(json.dumps(rec, indent=None), flush=True)
+            except Exception as e:
+                rec = {"arch": arch_id, "shape": shape_name,
+                       "mesh": mesh_name, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print("FAILED:", rec["error"], flush=True)
+            results.append(rec)
+            out_path.write_text(json.dumps(results, indent=1))
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""HLO-text cost model: FLOPs / bytes / collective payloads with while-loop
+trip-count multiplication.
+
+The CPU backend's ``compiled.cost_analysis()`` does not multiply while-loop
+bodies by their trip counts (and misses fused subcomputations), which makes
+it useless for scan-over-layers models.  This parser recovers the real
+numbers from ``compiled.as_text()``:
+
+  * dots:        flops = 2 * prod(result dims) * prod(lhs contracting dims)
+  * whiles:      multiplier from ``backend_config known_trip_count`` (the
+                 scheduler annotates every scan-derived loop)
+  * fusions etc: recursed via calls= / condition= / body= / to_apply= /
+                 branch_computations=
+  * collectives: per-kind operand bytes (per-device payloads, since the
+                 module is the post-SPMD per-device program)
+  * bytes:       fusion-boundary buffer traffic (operand reads + result
+                 writes of scheduled ops; fused internals excluded) — an
+                 HBM-traffic proxy, documented in EXPERIMENTS.md.
+
+All numbers are PER-DEVICE; multiply by device count for global totals.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^)]*?\)?[\w\[\]{},/ ]*?)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opcode", "rest", "line")
+
+    def __init__(self, name, type_str, opcode, rest, line):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.rest = rest
+        self.line = line
+
+
+def _parse_computations(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    current = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):  # computation header
+            m = _COMP_RE.match(line.replace("ENTRY ", ""))
+            if m and "{" in line:
+                current = m.group(1)
+                comps[current] = []
+                if line.startswith("ENTRY") or " ENTRY " in line:
+                    comps["__entry__"] = comps[current]
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            comps[current].append(Op(name, type_str, opcode, rest, line))
+    return comps
+
+
+def _entry_name(text: str, comps) -> Optional[str]:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line[len("ENTRY"):].strip())
+            if m:
+                return m.group(1)
+    return next(iter(comps), None)
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'backend_config=\{.*?"known_trip_count":\{"n":"(\d+)"\}',
+                  op.line)
+    if m:
+        return int(m.group(1))
+    return 1
+
+
+_CALL_ATTRS = (
+    ("condition", re.compile(r"condition=%?([\w.\-]+)")),
+    ("body", re.compile(r"body=%?([\w.\-]+)")),
+    ("calls", re.compile(r"calls=%?([\w.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=%?([\w.\-]+)")),
+    ("branches", re.compile(r"branch_computations=\{([^}]*)\}")),
+)
+
+
+def _called_computations(op: Op) -> List[str]:
+    out = []
+    for kind, rx in _CALL_ATTRS:
+        m = rx.search(op.line)
+        if not m:
+            continue
+        if kind == "branches":
+            out += [s.strip().lstrip("%") for s in m.group(1).split(",")]
+        else:
+            out.append(m.group(1))
+    return out
+
+
+def _dot_flops(op: Op, sizes: Dict[str, List[Tuple[str, List[int]]]]) -> int:
+    result_dims = _shape_dims(op.type_str)
+    n_out = 1
+    for _, dims in result_dims:
+        for d in dims:
+            n_out *= d
+    # contracting dims from the lhs operand's shape
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m:
+        idxs = [int(i) for i in m.group(1).split(",") if i]
+        lhs_ref = re.match(r"\s*%([\w.\-]+)", op.rest)
+        if lhs_ref and lhs_ref.group(1) in sizes:
+            lhs_dims = sizes[lhs_ref.group(1)]
+            if lhs_dims:
+                dims = lhs_dims[0][1]
+                for i in idxs:
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2 * n_out * contract
+
+
+def analyze(text: str) -> Dict:
+    comps = _parse_computations(text)
+    entry = _entry_name(text, comps)
+
+    # global name -> shape dims (names are unique enough in practice)
+    shapes: Dict[str, List[Tuple[str, List[int]]]] = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            shapes[op.name] = _shape_dims(op.type_str)
+
+    def ref_bytes(name: str) -> int:
+        total = 0
+        for dt, dims in shapes.get(name, []):
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+        return total
+
+    # fused computations (their internals are register-resident)
+    fused = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if m:
+                    fused.add(m.group(1))
+
+    # call-graph multipliers to fixpoint (graph is a shallow DAG)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    for _ in range(64):
+        nxt = {c: 0.0 for c in comps}
+        if entry in nxt:
+            nxt[entry] = 1.0
+        for cname, ops in comps.items():
+            m0 = mult.get(cname, 0.0)
+            if m0 == 0.0:
+                continue
+            for op in ops:
+                trips = _trip_count(op) if op.opcode == "while" else 1
+                for callee in _called_computations(op):
+                    if callee in nxt:
+                        nxt[callee] += m0 * trips
+        if nxt == mult:
+            break
+        mult = nxt
+
+    flops = 0.0
+    bytes_rw = 0.0
+    colls = {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVES}
+    for cname, ops in comps.items():
+        m0 = mult.get(cname, 0.0)
+        if m0 == 0.0:
+            continue
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m0 * _dot_flops(op, shapes)
+            kind = next((c for c in COLLECTIVES
+                         if op.opcode.startswith(c)), None)
+            if kind is not None:
+                b = 0
+                for ref in re.finditer(r"%([\w.\-]+)", op.rest):
+                    b += ref_bytes(ref.group(1))
+                if b == 0:
+                    b = _shape_bytes(op.type_str)
+                colls[kind]["bytes"] += m0 * b
+                colls[kind]["count"] += m0
+            if cname not in fused and op.opcode not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast"):
+                w = _shape_bytes(op.type_str)
+                r = sum(ref_bytes(ref.group(1))
+                        for ref in re.finditer(r"%([\w.\-]+)", op.rest))
+                bytes_rw += m0 * (w + r)
+
+    total_coll = sum(v["bytes"] for v in colls.values())
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_rw,
+        "collectives": {k: {"bytes": v["bytes"], "count": v["count"]}
+                        for k, v in colls.items()},
+        "collective_bytes": total_coll,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,148 @@
+"""End-to-end training driver (deliverable (b)): train a ~100M LM with the
+full production substrate — sharded state, checkpoint/restart, preemption
+flush, CI-guaranteed eval, straggler monitoring, threshold alarms.
+
+CPU-friendly invocation (the quickstart / CI path):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --smoke
+
+``--smoke`` shrinks the config to ~5M params and a 64-token sequence; the
+full ``--arch`` configs are exercised through the dry-run instead (this
+container has one CPU device).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get
+from repro.configs.base import ShapeConfig
+from repro.data import tokens as data_tokens
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.straggler import StragglerMonitor
+from repro.evalx import ApproxEval, ThresholdMonitor
+from repro.models import build, make_batch
+from repro.train import OptConfig, build_train_step, init_state
+
+
+def smoke_overrides(cfg):
+    return dataclasses.replace(
+        cfg, n_layers=4, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=512, vocab=2048, microbatches=1, remat=False,
+        param_dtype="float32", compute_dtype="float32")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--eval-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = smoke_overrides(cfg)
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    model = build(cfg)
+    ocfg = OptConfig.for_arch(cfg, lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps)
+    step_fn = jax.jit(build_train_step(model, ocfg))
+
+    state = init_state(model, jax.random.PRNGKey(0), ocfg)
+    start_step = 0
+    ckpt_dir = Path(args.ckpt_dir) / cfg.name
+    if args.resume:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            state, meta = ckpt.restore_checkpoint(ckpt_dir, latest, state)
+            start_step = latest
+            print(f"resumed from step {latest} ({meta})")
+
+    # paper-integrated monitors
+    loss_alarm = ThresholdMonitor(threshold=3.0 * np.log(cfg.vocab),
+                                  value_range=(0.0,
+                                               4.0 * np.log(cfg.vocab)),
+                                  direction="above")
+    straggler = StragglerMonitor(n_hosts=1)
+
+    # preemption: flush a checkpoint on SIGTERM, then exit cleanly
+    preempted = {"flag": False}
+
+    def _on_term(signum, frame):
+        preempted["flag"] = True
+    signal.signal(signal.SIGTERM, _on_term)
+
+    join = lambda: None
+    t_hist = []
+    for step in range(start_step, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in
+                 data_tokens.train_batch(cfg, shape, step).items()}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        straggler.record(np.array([dt]))
+        alarm = loss_alarm.update(metrics["loss_ci_state"])
+        if alarm:
+            print(f"[ALARM] loss CI above threshold at step {step}")
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"dt {dt*1e3:.0f}ms flagged={straggler.flagged()}")
+        if (step + 1) % args.ckpt_every == 0 or preempted["flag"]:
+            join()  # previous async write
+            join = ckpt.save_checkpoint(
+                ckpt_dir, step + 1, state,
+                meta={"arch": cfg.name, "loss": loss}, async_write=True)
+        if preempted["flag"]:
+            print("preemption flush complete; exiting")
+            break
+        if (step + 1) % args.eval_every == 0:
+            run_eval(model, cfg, state, args)
+    join()
+    print("done")
+    return state
+
+
+def run_eval(model, cfg, state, args):
+    scramble = data_tokens.make_eval_scramble(cfg, n_examples=512,
+                                              seq_len=args.seq_len)
+
+    @jax.jit
+    def loss_fn(batch):
+        logits, _ = model.forward(state["params"], batch)
+        targets = batch["targets"]
+        mask = targets >= 0
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        import jax.numpy as jnp
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(targets, 0)[..., None], axis=-1)[..., 0]
+        return (logz - picked), mask
+
+    ev = ApproxEval(lambda b: loss_fn({k: jax.numpy.asarray(v)
+                                       for k, v in b.items()}),
+                    vocab=cfg.vocab_padded, delta=1e-6)
+    rep = ev.run(scramble.batches(batch_size=16), scramble.n_examples,
+                 target_width=0.1)
+    print(f"[eval] loss in [{rep.lo:.4f}, {rep.hi:.4f}] "
+          f"using {rep.examples_used}/{rep.total_examples} examples "
+          f"({rep.fraction_used:.0%}), early_stop={rep.stopped_early}")
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro.models — assigned-architecture model zoo (dense / MoE / SSM /
+hybrid / enc-dec / VLM-audio-stub backbones)."""
+
+from repro.models.zoo import Model, build, input_specs, make_batch, window_for
+
+__all__ = ["Model", "build", "input_specs", "make_batch", "window_for"]

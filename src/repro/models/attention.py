@@ -1,0 +1,197 @@
+"""GQA attention: train/prefill (full, causal, sliding-window, or
+bidirectional), decode with a KV cache, and cross-attention.
+
+Sharding posture (see repro.distributed.sharding):
+  * q heads shard over the "model" axis (all archs divide by 16 — arctic is
+    head-padded, see its config);
+  * kv heads shard over "model" iff divisible, else stay replicated and are
+    repeated to q-heads at compute time (cheap: GQA kv projections are
+    small);
+  * decode KV caches shard batch over ("pod","data") and *sequence* over
+    "model" (always divisible) — GSPMD partitions the masked softmax and
+    the dynamic-update-slice.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axisctx import constrain
+from repro.models.layers import (dense_init, head_norm_apply, param_dtype,
+                                 rope_apply)
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False) -> Dict:
+    dt = param_dtype(cfg)
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, k * hd), dt),
+        "wv": dense_init(ks[2], (d, k * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt, in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((k * hd,), dt)
+        p["bv"] = jnp.zeros((k * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_q(p, cfg, x):
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
+    q = constrain(q, "batch", "seq", "heads", None)
+    if cfg.qk_norm:
+        q = head_norm_apply(p["q_norm"], q)
+    return q
+
+
+def _project_kv(p, cfg, x):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = k.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        k = head_norm_apply(p["k_norm"], k)
+    return k, v
+
+
+def _repeat_kv(cfg, k):
+    if cfg.n_kv_heads == cfg.n_heads:
+        return k
+    k = jnp.repeat(k, cfg.n_heads // cfg.n_kv_heads, axis=-2)
+    return constrain(k, "batch", "seq", "heads", None)
+
+
+def _sdpa(q, k, v, mask, head_dim):
+    """scores/softmax in f32; q (B,T,H,hd), k/v (B,S,H,hd), mask (?,T,S)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    scores = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = constrain(scores, "batch", "heads", None, None)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)
+    return constrain(out, "batch", "seq", "heads", None)
+
+
+def _sdpa_chunked(q, k, v, positions, causal, window, head_dim, qc):
+    """Q-chunked attention: never materializes the full (T, S) score
+    tensor — peak transient drops from O(T*S) to O(qc*S) per layer, the
+    memory-bound fix for the 32k prefill cells (EXPERIMENTS.md §Perf).
+    The chunk body is rematerialized in the backward pass."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    nq = T // qc
+    qs = q.reshape(B, nq, qc, H, hd).swapaxes(0, 1)
+    pq = positions.reshape(B, nq, qc).swapaxes(0, 1)
+    kpos = positions[:, None, None, :]              # (B,1,1,S)
+
+    def chunk(_, inp):
+        qi, pqi = inp                               # (B,qc,H,hd), (B,qc)
+        mask = jnp.ones((B, 1, qc, S), bool)
+        qpos = pqi[:, None, :, None]                # (B,1,qc,1)
+        if causal:
+            mask = qpos >= kpos
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+        out = _sdpa(qi, k, v, mask, head_dim)       # (B,qc,H*hd)? no: 4D
+        return None, out
+
+    body = jax.checkpoint(chunk)
+    _, outs = jax.lax.scan(body, None, (qs, pq))
+    return outs.swapaxes(0, 1).reshape(B, T, H, hd)
+
+
+def attention(p, cfg: ArchConfig, x, positions, *, causal: bool = True,
+              window: Optional[int] = None, memory=None,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    memory: (B, M, d) for cross-attention (keys/values from memory,
+    bidirectional over memory). return_kv: also return the (k, v) pair
+    (pre-GQA-repeat) so prefill can emit a decode cache."""
+    B, T, _ = x.shape
+    q = _project_q(p, cfg, x)
+    chunked = (memory is None and cfg.attn_chunk
+               and T > cfg.attn_chunk and T % cfg.attn_chunk == 0)
+    if memory is None:
+        k, v = _project_kv(p, cfg, x)
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+        if not chunked:
+            S = T
+            qpos = positions[..., :, None]   # (B?, T, 1)
+            kpos = positions[..., None, :]   # (B?, 1, S)
+            mask = jnp.ones((T, S), bool)
+            if causal:
+                mask = qpos >= kpos
+            if window is not None:
+                mask = mask & (qpos - kpos < window)
+            if mask.ndim == 3:
+                mask = mask[:, None, :, :]
+    else:
+        k, v = _project_kv(p, cfg, memory)
+        mask = jnp.ones((1, 1, T, memory.shape[1]), bool)
+    kr = _repeat_kv(cfg, k)
+    vr = _repeat_kv(cfg, v)
+    if chunked:
+        out = _sdpa_chunked(q, kr, vr, positions, causal, window,
+                            cfg.head_dim, cfg.attn_chunk)
+    else:
+        out = _sdpa(q, kr, vr, mask, cfg.head_dim)
+    out = out.reshape(B, T, -1) @ p["wo"]
+    out = constrain(out, "batch", "seq", "embed")
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+# -- decode path ---------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype) -> Dict[str, jax.Array]:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p, cfg: ArchConfig, x, cache: Dict, pos, *,
+                     window: Optional[int] = None,
+                     memory=None) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B, 1, d); pos: scalar int32 current index;
+    cache k/v: (B, S, K, hd). Returns (out, new_cache)."""
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q = _project_q(p, cfg, x)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = rope_apply(q, posb, cfg.rope_theta)
+    k_new, v_new = _project_kv(p, cfg, x)
+    k_new = rope_apply(k_new, posb, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, S), 3)
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    out = _sdpa(q, _repeat_kv(cfg, k_cache), _repeat_kv(cfg, v_cache), mask,
+                cfg.head_dim)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    if memory is not None:  # cross-attention on top (enc-dec decode)
+        pass
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,149 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a stub per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_enc, d) directly to the encoder.
+The decoder is causal with cross-attention to the encoder memory; at decode
+time the memory is a fixed precomputed tensor (cfg.decode_memory_len).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (attention, attn_init, decode_attention,
+                                    init_cache)
+from repro.models.layers import (compute_dtype, dense_init, mlp_apply,
+                                 mlp_init, norm_apply, norm_init,
+                                 param_dtype)
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": norm_init(cfg), "ln2": norm_init(cfg),
+            "attn": attn_init(ks[0], cfg), "mlp": mlp_init(ks[1], cfg)}
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg), "ln2": norm_init(cfg),
+            "ln3": norm_init(cfg), "self_attn": attn_init(ks[0], cfg),
+            "cross_attn": attn_init(ks[1], cfg), "mlp": mlp_init(ks[2], cfg)}
+
+
+def encdec_init(cfg: ArchConfig, key) -> Dict:
+    kenc, kdec, kemb, khead = jax.random.split(key, 4)
+    dt = param_dtype(cfg)
+    return {
+        "embed": dense_init(kemb, (cfg.vocab_padded, cfg.d_model), dt),
+        "lm_head": dense_init(khead, (cfg.d_model, cfg.vocab_padded), dt),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(kenc, cfg.enc_layers)),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(kdec, cfg.n_layers)),
+        "enc_ln": norm_init(cfg),
+        "final_ln": norm_init(cfg),
+    }
+
+
+def _remat(cfg, fn):
+    if not cfg.remat:
+        return fn
+    return jax.checkpoint(fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def encode(params, cfg: ArchConfig, frame_embeds) -> jax.Array:
+    """frame_embeds: (B, S_enc, d) stub frontend output."""
+    cdt = compute_dtype(cfg)
+    h = frame_embeds.astype(cdt)
+    B, S, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, lp):
+        hh = carry
+        a = attention(lp["attn"], cfg, norm_apply(lp["ln1"], hh, cfg.norm),
+                      pos, causal=False)
+        hh = hh + a
+        hh = hh + mlp_apply(lp["mlp"], cfg,
+                            norm_apply(lp["ln2"], hh, cfg.norm))
+        return hh, None
+
+    h, _ = jax.lax.scan(_remat(cfg, body), h, params["enc_layers"])
+    return norm_apply(params["enc_ln"], h, cfg.norm)
+
+
+def decode_train(params, cfg: ArchConfig, tokens, memory
+                 ) -> jax.Array:
+    """Teacher-forced decoder pass. tokens: (B, S_dec); memory (B,S_enc,d)."""
+    cdt = compute_dtype(cfg)
+    h = params["embed"][tokens].astype(cdt)
+    B, T, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(carry, lp):
+        hh = carry
+        a = attention(lp["self_attn"], cfg,
+                      norm_apply(lp["ln1"], hh, cfg.norm), pos, causal=True)
+        hh = hh + a
+        c = attention(lp["cross_attn"], cfg,
+                      norm_apply(lp["ln2"], hh, cfg.norm), pos,
+                      memory=memory)
+        hh = hh + c
+        hh = hh + mlp_apply(lp["mlp"], cfg,
+                            norm_apply(lp["ln3"], hh, cfg.norm))
+        return hh, None
+
+    h, _ = jax.lax.scan(_remat(cfg, body), h, params["dec_layers"])
+    h = norm_apply(params["final_ln"], h, cfg.norm)
+    return jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def encdec_forward(params, cfg: ArchConfig, frame_embeds, tokens
+                   ) -> Tuple[jax.Array, jax.Array]:
+    memory = encode(params, cfg, frame_embeds)
+    logits = decode_train(params, cfg, tokens, memory)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    cdt = compute_dtype(cfg)
+    one = init_cache(cfg, batch, max_len, cdt)
+    return {"self": jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+        one)}
+
+
+def encdec_decode_step(params, cfg: ArchConfig, token, pos, cache: Dict,
+                       memory) -> Tuple[jax.Array, Dict]:
+    """token (B,1); memory (B, M, d) precomputed encoder output."""
+    cdt = compute_dtype(cfg)
+    h = params["embed"][token].astype(cdt)
+    B = h.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+
+    def body(carry, xs):
+        lp, cl = xs
+        hh = carry
+        a, cl2 = decode_attention(lp["self_attn"], cfg,
+                                  norm_apply(lp["ln1"], hh, cfg.norm),
+                                  cl, pos)
+        hh = hh + a
+        c = attention(lp["cross_attn"], cfg,
+                      norm_apply(lp["ln2"], hh, cfg.norm), posb,
+                      memory=memory)
+        hh = hh + c
+        hh = hh + mlp_apply(lp["mlp"], cfg,
+                            norm_apply(lp["ln3"], hh, cfg.norm))
+        return hh, cl2
+
+    h, new_self = jax.lax.scan(body, h, (params["dec_layers"],
+                                         cache["self"]))
+    h = norm_apply(params["final_ln"], h, cfg.norm)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self}

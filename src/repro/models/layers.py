@@ -1,0 +1,116 @@
+"""Shared neural layers: inits, norms, RoPE, MLPs.
+
+Functional style: params are nested dicts of jnp arrays; every ``*_init``
+takes a PRNG key and returns a param subtree; every ``*_apply`` is pure.
+Layer stacks are built by vmapping inits over a key axis and scanning the
+apply over the stacked leading dim (see ``repro.models.lm``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axisctx import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def param_dtype(cfg: ArchConfig):
+    return _dtype(cfg.param_dtype)
+
+
+def compute_dtype(cfg: ArchConfig):
+    return _dtype(cfg.compute_dtype)
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    """Truncated-normal fan-in init (LeCun-ish)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def norm_init(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), param_dtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), param_dtype(cfg))
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) \
+            + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def head_norm_apply(scale, x, eps: float = 1e-6):
+    """qk-norm: RMS-normalize the head_dim axis (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- RoPE --------------------------------------------------------------------
+
+
+def rope_apply(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ArchConfig, d: Optional[int] = None,
+             ff: Optional[int] = None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, ff), dt),
+                "w_up": dense_init(ks[1], (d, ff), dt),
+                "w_down": dense_init(ks[2], (ff, d), dt)}
+    return {"w_up": dense_init(ks[0], (d, ff), dt),
+            "w_down": dense_init(ks[1], (ff, d), dt)}
+
+
+def mlp_apply(p, cfg: ArchConfig, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    if x.ndim == 3:
+        h = constrain(h, "batch", "seq", "ff")
+    out = h @ p["w_down"]
+    return constrain(out, "batch", "seq", "embed") if x.ndim == 3 else out

@@ -1,0 +1,404 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) with optional
+per-layer remat — the only graph XLA sees is one layer body, which keeps
+512-device dry-run compiles tractable at 480B scale.
+
+The hybrid (zamba2) structure: ``n_groups = n_layers // period`` groups,
+each = [shared attention block on concat(hidden, embeddings)] + ``period``
+Mamba2 layers, plus ``n_layers % period`` trailing Mamba2 layers.  The
+shared block's *weights* are shared across invocations; its KV caches are
+per-invocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axisctx import constrain
+from repro.models import ssm
+from repro.models.attention import (attention, attn_init, decode_attention,
+                                    init_cache)
+from repro.models.layers import (compute_dtype, dense_init, mlp_apply,
+                                 mlp_init, norm_apply, norm_init,
+                                 param_dtype)
+from repro.models.moe import moe_apply, moe_init
+
+
+# -- per-layer init ------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"ln": norm_init(cfg), "mamba": ssm.mamba1_init(ks[0], cfg)}
+    if cfg.family == "hybrid":
+        return {"ln": norm_init(cfg), "mamba": ssm.mamba2_init(ks[0], cfg)}
+    p = {"ln1": norm_init(cfg), "ln2": norm_init(cfg),
+         "attn": attn_init(ks[0], cfg)}
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def _shared_block_init(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "in_proj": dense_init(ks[0], (2 * d, d), param_dtype(cfg)),
+        "ln1": norm_init(cfg), "ln2": norm_init(cfg),
+        "attn": attn_init(ks[1], cfg),
+        "mlp": mlp_init(ks[2], cfg),
+    }
+
+
+def lm_init(cfg: ArchConfig, key) -> Dict:
+    kemb, klayers, kshared, khead = jax.random.split(key, 4)
+    dt = param_dtype(cfg)
+    params = {
+        "embed": dense_init(kemb, (cfg.vocab_padded, cfg.d_model), dt),
+        "final_ln": norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            khead, (cfg.d_model, cfg.vocab_padded), dt)
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        kg = jax.random.split(klayers, n_groups * period)
+        grouped = jax.vmap(lambda k: _layer_init(k, cfg))(
+            kg.reshape(n_groups * period, -1))
+        params["layers"] = jax.tree.map(
+            lambda x: x.reshape(n_groups, period, *x.shape[1:]), grouped)
+        if tail:
+            kt = jax.random.split(jax.random.fold_in(klayers, 1), tail)
+            params["tail_layers"] = jax.vmap(
+                lambda k: _layer_init(k, cfg))(kt)
+        params["shared"] = _shared_block_init(kshared, cfg)
+    else:
+        kl = jax.random.split(klayers, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg))(kl)
+    return params
+
+
+# -- layer bodies ---------------------------------------------------------------
+
+
+def _dense_layer(lp, cfg: ArchConfig, h, positions, window):
+    a = attention(lp["attn"], cfg, norm_apply(lp["ln1"], h, cfg.norm),
+                  positions, causal=True, window=window)
+    h = h + a
+    if cfg.family == "moe":
+        m, aux = moe_apply(lp["moe"], cfg,
+                           norm_apply(lp["ln2"], h, cfg.norm))
+    else:
+        m = mlp_apply(lp["mlp"], cfg, norm_apply(lp["ln2"], h, cfg.norm))
+        aux = jnp.zeros((), jnp.float32)
+    return h + m, aux
+
+
+def _ssm_layer(lp, cfg: ArchConfig, h):
+    fn = ssm.mamba1_apply if cfg.family == "ssm" else ssm.mamba2_apply
+    return h + fn(lp["mamba"], cfg, norm_apply(lp["ln"], h, cfg.norm))
+
+
+def _shared_block(sp, cfg: ArchConfig, h, emb, positions, window):
+    u = jnp.concatenate([h, emb], axis=-1) @ sp["in_proj"]
+    a = attention(sp["attn"], cfg, norm_apply(sp["ln1"], u, cfg.norm),
+                  positions, causal=True, window=window)
+    u = u + a
+    u = u + mlp_apply(sp["mlp"], cfg, norm_apply(sp["ln2"], u, cfg.norm))
+    return h + u
+
+
+# -- forward (train / prefill) ---------------------------------------------------
+
+
+def lm_forward(params: Dict, cfg: ArchConfig, tokens,
+               extra_embeds=None, window: Optional[int] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, T_text) int32; extra_embeds: (B, T_front, d) for
+    vlm/audio stubs (prepended). Returns (logits f32, aux_loss)."""
+    cdt = compute_dtype(cfg)
+    h = params["embed"][tokens].astype(cdt)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(cdt), h], axis=1)
+    h = constrain(h, "batch", "seq", "embed")
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("ssm",):
+        def body(carry, lp):
+            return _ssm_layer(lp, cfg, carry), None
+        body = _maybe_remat(cfg, body)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group_body(carry, xs):
+            hh = carry
+            sp_layers = xs
+            hh = _shared_block(params["shared"], cfg, hh, emb0, positions,
+                               window)
+
+            def inner(c, lp):
+                return _ssm_layer(lp, cfg, c), None
+            hh, _ = jax.lax.scan(_maybe_remat(cfg, inner), hh, sp_layers)
+            return hh, None
+        h, _ = jax.lax.scan(_maybe_remat(cfg, group_body), h,
+                            params["layers"])
+        if "tail_layers" in params:
+            def inner(c, lp):
+                return _ssm_layer(lp, cfg, c), None
+            h, _ = jax.lax.scan(_maybe_remat(cfg, inner), h,
+                                params["tail_layers"])
+    else:
+        def body(carry, lp):
+            hh, aux = _dense_layer(lp, cfg, carry, positions, window)
+            return hh, aux
+        body = _maybe_remat(cfg, body)
+        h, auxs = jax.lax.scan(body, h, params["layers"])
+        aux_total = auxs.sum()
+
+    h = norm_apply(params["final_ln"], h, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", h, head,
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def _maybe_remat(cfg: ArchConfig, fn):
+    if not cfg.remat:
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat_policy == "nothing" else
+              jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# -- prefill (forward + emit decode caches) ---------------------------------------
+
+
+def lm_prefill(params: Dict, cfg: ArchConfig, tokens, extra_embeds=None,
+               window: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Forward pass that also materializes the decode cache (KV for
+    attention families, final recurrent states for SSM families).
+    Returns (last-position logits (B, 1, V), cache)."""
+    cdt = compute_dtype(cfg)
+    h = params["embed"][tokens].astype(cdt)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(cdt), h], axis=1)
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            hh = carry
+            y, cache = _ssm_prefill_layer(lp, cfg, hh, ssm.mamba1_apply)
+            return hh + y, cache
+        h, caches = jax.lax.scan(_maybe_remat(cfg, body), h,
+                                 params["layers"])
+        new_cache = {"layers": caches}
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group_body(carry, sp_layers):
+            hh = carry
+            u = jnp.concatenate([hh, emb0], axis=-1) \
+                @ params["shared"]["in_proj"]
+            a, kv = attention(params["shared"]["attn"], cfg,
+                              norm_apply(params["shared"]["ln1"], u,
+                                         cfg.norm),
+                              positions, causal=True, window=window,
+                              return_kv=True)
+            u = u + a
+            u = u + mlp_apply(params["shared"]["mlp"], cfg,
+                              norm_apply(params["shared"]["ln2"], u,
+                                         cfg.norm))
+            hh = hh + u
+
+            def inner(c, lp):
+                y, cache = _ssm_prefill_layer(lp, cfg, c, ssm.mamba2_apply)
+                return c + y, cache
+            hh, mcaches = jax.lax.scan(_maybe_remat(cfg, inner), hh,
+                                       sp_layers)
+            return hh, (kv, mcaches)
+        h, (attn_caches, mamba_caches) = jax.lax.scan(
+            _maybe_remat(cfg, group_body), h, params["layers"])
+        new_cache = {"attn": attn_caches, "mamba": mamba_caches}
+        if "tail_layers" in params:
+            def inner(c, lp):
+                y, cache = _ssm_prefill_layer(lp, cfg, c, ssm.mamba2_apply)
+                return c + y, cache
+            h, tcaches = jax.lax.scan(_maybe_remat(cfg, inner), h,
+                                      params["tail_layers"])
+            new_cache["tail"] = tcaches
+    else:
+        def body(carry, lp):
+            hh = carry
+            a, kv = attention(lp["attn"], cfg,
+                              norm_apply(lp["ln1"], hh, cfg.norm),
+                              positions, causal=True, window=window,
+                              return_kv=True)
+            hh = hh + a
+            if cfg.family == "moe":
+                m, _ = moe_apply(lp["moe"], cfg,
+                                 norm_apply(lp["ln2"], hh, cfg.norm))
+            else:
+                m = mlp_apply(lp["mlp"], cfg,
+                              norm_apply(lp["ln2"], hh, cfg.norm))
+            return hh + m, kv
+        h, caches = jax.lax.scan(_maybe_remat(cfg, body), h,
+                                 params["layers"])
+        new_cache = {"layers": caches}
+
+    h = norm_apply(params["final_ln"], h[:, -1:], cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", h, head,
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache
+
+
+def _ssm_prefill_layer(lp, cfg, h, apply_fn):
+    """Run the ssm layer, returning (delta, decode cache) — the cache is
+    the scan's final carry (conv tail + recurrent state)."""
+    xin = norm_apply(lp["ln"], h, cfg.norm)
+    y, cache = apply_fn(lp["mamba"], cfg, xin, return_cache=True)
+    return y, cache
+
+
+# -- decode ----------------------------------------------------------------------
+
+
+def lm_init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    """Stacked per-layer caches (leading dim = layers for the scan)."""
+    cdt = compute_dtype(cfg)
+
+    def stack(make, n):
+        one = make()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
+
+    if cfg.family == "ssm":
+        return {"layers": stack(lambda: ssm.mamba1_cache(cfg, batch, cdt),
+                                cfg.n_layers)}
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        attn_len = (min(max_len, cfg.sliding_window or max_len)
+                    if max_len >= 100_000 else max_len)
+        cache = {
+            "mamba": jax.tree.map(
+                lambda x: x.reshape(n_groups, period, *x.shape[1:]),
+                stack(lambda: ssm.mamba2_cache(cfg, batch, cdt),
+                      n_groups * period)),
+            "attn": stack(lambda: init_cache(cfg, batch, attn_len, cdt),
+                          n_groups),
+        }
+        if tail:
+            cache["tail"] = stack(lambda: ssm.mamba2_cache(cfg, batch, cdt),
+                                  tail)
+        return cache
+    return {"layers": stack(lambda: init_cache(cfg, batch, max_len, cdt),
+                            cfg.n_layers)}
+
+
+def lm_decode_step(params: Dict, cfg: ArchConfig, token, pos, cache: Dict,
+                   window: Optional[int] = None
+                   ) -> Tuple[jax.Array, Dict]:
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits, new cache).
+
+    For the hybrid's sliding-window cache at long_500k, the cache index is
+    ``pos % window`` (ring buffer) — handled via an effective position.
+    """
+    cdt = compute_dtype(cfg)
+    h = params["embed"][token].astype(cdt)
+    B = h.shape[0]
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            lp, cl = xs
+            hh = carry
+            y, cl2 = ssm.mamba1_decode(
+                lp["mamba"], cfg, norm_apply(lp["ln"], hh, cfg.norm), cl)
+            return hh + y, cl2
+        h, new_layers = jax.lax.scan(body, h, (params["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+    elif cfg.family == "hybrid":
+        emb0 = h
+        attn_len = cache["attn"]["k"].shape[2]
+        eff_pos = jnp.where(jnp.asarray(attn_len, jnp.int32) <= pos,
+                            pos % attn_len, pos)
+
+        def group_body(carry, xs):
+            hh = carry
+            sp_layers, attn_cache, mcache = xs
+            u = jnp.concatenate([hh, emb0], axis=-1) \
+                @ params["shared"]["in_proj"]
+            a, attn_cache2 = decode_attention(
+                params["shared"]["attn"], cfg,
+                norm_apply(params["shared"]["ln1"], u, cfg.norm),
+                attn_cache, eff_pos, window=window)
+            u = u + a
+            u = u + mlp_apply(params["shared"]["mlp"], cfg,
+                              norm_apply(params["shared"]["ln2"], u,
+                                         cfg.norm))
+            hh = hh + u
+
+            def inner(c, xs2):
+                lp, cl = xs2
+                y, cl2 = ssm.mamba2_decode(
+                    lp["mamba"], cfg, norm_apply(lp["ln"], c, cfg.norm), cl)
+                return c + y, cl2
+            hh, mcache2 = jax.lax.scan(inner, hh, (sp_layers, mcache))
+            return hh, (attn_cache2, mcache2)
+        h, (new_attn, new_mamba) = jax.lax.scan(
+            group_body, h,
+            (params["layers"], cache["attn"], cache["mamba"]))
+        new_cache = {"mamba": new_mamba, "attn": new_attn}
+        if "tail" in cache:
+            def inner(c, xs2):
+                lp, cl = xs2
+                y, cl2 = ssm.mamba2_decode(
+                    lp["mamba"], cfg, norm_apply(lp["ln"], c, cfg.norm), cl)
+                return c + y, cl2
+            h, new_tail = jax.lax.scan(inner, h, (params["tail_layers"],
+                                                  cache["tail"]))
+            new_cache["tail"] = new_tail
+    else:
+        def body(carry, xs):
+            lp, cl = xs
+            hh = carry
+            a, cl2 = decode_attention(
+                lp["attn"], cfg, norm_apply(lp["ln1"], hh, cfg.norm),
+                cl, pos, window=window)
+            hh = hh + a
+            if cfg.family == "moe":
+                m, _ = moe_apply(lp["moe"], cfg,
+                                 norm_apply(lp["ln2"], hh, cfg.norm))
+            else:
+                m = mlp_apply(lp["mlp"], cfg,
+                              norm_apply(lp["ln2"], hh, cfg.norm))
+            return hh + m, cl2
+        h, new_layers = jax.lax.scan(body, h, (params["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    h = norm_apply(params["final_ln"], h, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", h, head,
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache

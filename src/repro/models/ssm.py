@@ -1,0 +1,358 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2/SSD
+(zamba2 backbone).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel becomes a
+``lax.scan`` over chunks with an in-chunk ``associative_scan`` (Mamba1) or
+the quadratic-intra-chunk SSD decomposition (Mamba2) — both keep the
+working set at (batch, chunk, channels, state) so VMEM tiling stays
+feasible and XLA can overlap chunk steps.  Decode is the O(1) recurrence.
+
+Sharding note: the reference CUDA models fuse [z|x|B|C|dt] into one
+``in_proj`` and one grouped conv; we keep them as *separate* projections /
+depthwise convs (mathematically identical) so each output dim shards
+cleanly over the 16-way model axis without GSPMD reshards at the split
+offsets.
+
+Caches: {"conv_*": (B, K-1, channels), "h": state}.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axisctx import constrain
+from repro.models.layers import dense_init, param_dtype
+
+
+def _softplus(x):
+    return jax.nn.softplus(x.astype(jnp.float32))
+
+
+def _causal_conv_chunk(xin, w, b):
+    """xin: (B, K-1+L, C) left-extended inputs; w: (K, C); b: (C,).
+    Returns (B, L, C) f32 causal depthwise conv outputs."""
+    K = w.shape[0]
+    L = xin.shape[1] - (K - 1)
+    out = jnp.zeros((xin.shape[0], L, xin.shape[2]), jnp.float32)
+    for k in range(K):  # K static & small (4)
+        out = out + xin[:, k:k + L].astype(jnp.float32) \
+            * w[k].astype(jnp.float32)
+    return out + b.astype(jnp.float32)
+
+
+# =============================== Mamba 1 ====================================
+
+
+def mamba1_init(key, cfg: ArchConfig) -> Dict:
+    dt = param_dtype(cfg)
+    d, din, n, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    rank = max(math.ceil(d / 16), 1)
+    ks = jax.random.split(key, 8)
+    # S4D-real A init: A_log rows log(1..n)
+    a_init = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                      (din, 1))
+    return {
+        "in_x": dense_init(ks[0], (d, din), dt),
+        "in_z": dense_init(ks[1], (d, din), dt),
+        "conv_w": dense_init(ks[2], (K, din), dt, in_axis=0),
+        "conv_b": jnp.zeros((din,), dt),
+        "proj_dt": dense_init(ks[3], (din, rank), dt),
+        "proj_B": dense_init(ks[4], (din, n), dt),
+        "proj_C": dense_init(ks[5], (din, n), dt),
+        "dt_proj": dense_init(ks[6], (rank, din), dt),
+        "dt_bias": jnp.full((din,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": a_init,
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[7], (din, d), dt),
+    }
+
+
+def _mamba1_core(p, cfg, conv_out, h):  # noqa: C901
+    """conv_out: (B, L, din) f32 post-conv/silu; h: (B, din, n) carry.
+    Returns (y (B,L,din) f32, h_new)."""
+    cdt = p["in_x"].dtype
+    cv = conv_out.astype(cdt)
+    dt_low = (cv @ p["proj_dt"]).astype(jnp.float32)
+    Bm = (cv @ p["proj_B"]).astype(jnp.float32)
+    Cm = (cv @ p["proj_C"]).astype(jnp.float32)
+    dt = _softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                   + p["dt_bias"])                        # (B, L, din)
+    A = -jnp.exp(p["A_log"])                              # (din, n)
+    sdt = (jnp.bfloat16 if cfg.ssm_scan_dtype == "bfloat16"
+           else jnp.float32)
+    # build the state-expanded tensors directly in the scan dtype so the
+    # (B,L,din,n) intermediates never exist at f32 (the train_4k traffic
+    # dominator; EXPERIMENTS.md §Perf cell A). The cross-chunk carry h
+    # stays f32 so error cannot compound beyond one chunk.
+    decay = jnp.exp((dt[..., None] * A).astype(jnp.float32)).astype(sdt)
+    u = ((dt * conv_out)[..., None]).astype(sdt) \
+        * Bm[:, :, None, :].astype(sdt)
+
+    def comb(a, b):
+        da, ua = a
+        db, ub = b
+        return (da * db, ub + db * ua)
+
+    dec_s, u_s = jax.lax.associative_scan(comb, (decay, u), axis=1)
+    hs = u_s.astype(jnp.float32) + dec_s.astype(jnp.float32) * h[:, None]
+    y = jnp.einsum("blin,bln->bli", hs.astype(sdt), Cm.astype(sdt),
+                   preferred_element_type=jnp.float32) + conv_out * p["D"]
+    return y, hs[:, -1]
+
+
+def mamba1_apply(p, cfg: ArchConfig, x, return_cache: bool = False):
+    """x: (B, L, d) -> (B, L, d); L must divide by cfg.ssm_chunk.
+    With return_cache=True also returns the decode cache (final conv tail
+    + recurrent state) from the scan carry.
+
+    cfg.ssm_impl == "pallas" routes the recurrence through the fused
+    selective-scan kernel (forward-only; serving paths) — the state stays
+    in VMEM instead of XLA's O(log L) materialized scan levels.
+    """
+    if cfg.ssm_impl == "pallas":
+        return _mamba1_apply_pallas(p, cfg, x, return_cache)
+    B, L, d = x.shape
+    din, K = cfg.d_inner, cfg.ssm_conv
+    Lc = min(cfg.ssm_chunk, L)
+    assert L % Lc == 0, (L, Lc)
+    xs = constrain(x @ p["in_x"], "batch", "seq", "inner")
+    z = constrain(x @ p["in_z"], "batch", "seq", "inner")
+    xs_c = xs.reshape(B, L // Lc, Lc, din).swapaxes(0, 1)
+    z_c = z.reshape(B, L // Lc, Lc, din).swapaxes(0, 1)
+
+    def step(carry, inp):
+        h, tail = carry
+        xc, zc = inp
+        xin = jnp.concatenate([tail, xc], axis=1)
+        conv = jax.nn.silu(_causal_conv_chunk(xin, p["conv_w"],
+                                              p["conv_b"]))
+        y, h_new = _mamba1_core(p, cfg, conv, h)
+        y = y * jax.nn.silu(zc.astype(jnp.float32))
+        return (h_new, xin[:, -(K - 1):]), y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, din, cfg.ssm_state), jnp.float32)
+    tail0 = jnp.zeros((B, K - 1, din), x.dtype)
+    (h_fin, tail_fin), ys = jax.lax.scan(step, (h0, tail0), (xs_c, z_c))
+    y = constrain(ys.swapaxes(0, 1).reshape(B, L, din),
+                  "batch", "seq", "inner")
+    out = constrain(y @ p["out_proj"], "batch", "seq", "embed")
+    if return_cache:
+        return out, {"conv": tail_fin, "h": h_fin}
+    return out
+
+
+def mamba1_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba1_decode(p, cfg: ArchConfig, x, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) one token."""
+    K = cfg.ssm_conv
+    xs = x @ p["in_x"]
+    z = x @ p["in_z"]
+    xin = jnp.concatenate([cache["conv"], xs], axis=1)    # (B, K, din)
+    conv = jax.nn.silu(_causal_conv_chunk(xin, p["conv_w"], p["conv_b"]))
+    y, h_new = _mamba1_core(p, cfg, conv, cache["h"])
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"conv": xin[:, -(K - 1):], "h": h_new}
+
+
+# =============================== Mamba 2 (SSD) ===============================
+
+
+def mamba2_init(key, cfg: ArchConfig) -> Dict:
+    dt = param_dtype(cfg)
+    d, din, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, K = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": dense_init(ks[0], (d, din), dt),
+        "in_z": dense_init(ks[1], (d, din), dt),
+        "in_B": dense_init(ks[2], (d, n), dt),
+        "in_C": dense_init(ks[3], (d, n), dt),
+        "in_dt": dense_init(ks[4], (d, nh), dt),
+        "conv_x_w": dense_init(ks[5], (K, din), dt, in_axis=0),
+        "conv_x_b": jnp.zeros((din,), dt),
+        "conv_B_w": dense_init(ks[6], (K, n), dt, in_axis=0),
+        "conv_B_b": jnp.zeros((n,), dt),
+        "conv_C_w": dense_init(ks[7], (K, n), dt, in_axis=0),
+        "conv_C_b": jnp.zeros((n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.2, jnp.float32),
+        "norm_scale": jnp.ones((din,), dt),
+        "out_proj": dense_init(
+            jax.random.fold_in(key, 99), (din, d), dt),
+    }
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+
+
+def mamba2_apply(p, cfg: ArchConfig, x, return_cache: bool = False):
+    """Chunked SSD. x: (B, L, d). With return_cache=True also returns the
+    decode cache (final conv tails + state) from the scan carry."""
+    B, L, d = x.shape
+    din, n = cfg.d_inner, cfg.ssm_state
+    nh, hd, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    Lc = min(cfg.ssm_chunk, L)
+    assert L % Lc == 0
+    z = constrain(x @ p["in_z"], "batch", "seq", "inner")
+    xr = constrain(x @ p["in_x"], "batch", "seq", "inner")
+    Bm = x @ p["in_B"]
+    Cm = x @ p["in_C"]
+    dt_raw = constrain(x @ p["in_dt"], "batch", "seq", "ssm_heads")
+
+    def resh(t, ch):
+        return t.reshape(B, L // Lc, Lc, ch).swapaxes(0, 1)
+
+    xs = (resh(xr, din), resh(Bm, n), resh(Cm, n), resh(z, din),
+          resh(dt_raw, nh))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (nh,)
+
+    def step(carry, inp):
+        S, tx, tb, tc = carry                              # S: (B,nh,hd,n)
+        xc_r, bc_r, cc_r, zc, dtc = inp
+        xin_x = jnp.concatenate([tx, xc_r], axis=1)
+        xin_b = jnp.concatenate([tb, bc_r], axis=1)
+        xin_c = jnp.concatenate([tc, cc_r], axis=1)
+        xconv = jax.nn.silu(_causal_conv_chunk(xin_x, p["conv_x_w"],
+                                               p["conv_x_b"]))
+        Bc = jax.nn.silu(_causal_conv_chunk(xin_b, p["conv_B_w"],
+                                            p["conv_B_b"]))
+        Cc = jax.nn.silu(_causal_conv_chunk(xin_c, p["conv_C_w"],
+                                            p["conv_C_b"]))
+        xc = xconv.reshape(B, Lc, nh, hd)
+        dt = _softplus(dtc + p["dt_bias"])                 # (B, Lc, nh)
+        dA = dt * A                                        # (B, Lc, nh)
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk quadratic form
+        CB = jnp.einsum("bln,bmn->blm", Cc, Bc)
+        li = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0)
+        mi = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+        tri = (li >= mi)[None, :, :, None]
+        # mask the EXPONENT (not the exp) so masked entries can't overflow
+        # forward and poison the backward pass (0 * inf = NaN trap).
+        diff = jnp.where(tri, cum[:, :, None, :] - cum[:, None, :, :],
+                         -30.0)
+        seg = jnp.exp(diff) * tri
+        att = CB[..., None] * seg * dt[:, None, :, :]       # (B,Lc,Lc,nh)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", att, xc)
+        # inter-chunk via carried state
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", Cc, S, jnp.exp(cum))
+        # state update
+        w_last = jnp.exp(cum[:, -1:, :] - cum) * dt         # (B, Lc, nh)
+        contrib = jnp.einsum("blh,bln,blhp->bhpn", w_last, Bc, xc)
+        S_new = jnp.exp(cum[:, -1])[:, :, None, None] * S + contrib
+        y = y_intra + y_inter + p["D"][None, None, :, None] * xc
+        carry_new = (S_new, xin_x[:, -(K - 1):], xin_b[:, -(K - 1):],
+                     xin_c[:, -(K - 1):])
+        return carry_new, y.reshape(B, Lc, din)
+
+    S0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    init = (S0, jnp.zeros((B, K - 1, din), x.dtype),
+            jnp.zeros((B, K - 1, n), x.dtype),
+            jnp.zeros((B, K - 1, n), x.dtype))
+    (S_fin, tx, tb, tc), ys = jax.lax.scan(step, init, xs)
+    y = constrain(ys.swapaxes(0, 1).reshape(B, L, din),
+                  "batch", "seq", "inner")
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = constrain(y.astype(x.dtype) @ p["out_proj"],
+                    "batch", "seq", "embed")
+    if return_cache:
+        return out, {"conv_x": tx, "conv_B": tb, "conv_C": tc, "h": S_fin}
+    return out
+
+
+def mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    n = cfg.ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, cfg.ssm_conv - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, cfg.ssm_conv - 1, n), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                       jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    din, n = cfg.d_inner, cfg.ssm_state
+    nh, hd, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    Bm = x @ p["in_B"]
+    Cm = x @ p["in_C"]
+    dt_raw = x @ p["in_dt"]
+    xin_x = jnp.concatenate([cache["conv_x"], xr], axis=1)
+    xin_b = jnp.concatenate([cache["conv_B"], Bm], axis=1)
+    xin_c = jnp.concatenate([cache["conv_C"], Cm], axis=1)
+    xconv = jax.nn.silu(_causal_conv_chunk(xin_x, p["conv_x_w"],
+                                           p["conv_x_b"]))
+    Bc = jax.nn.silu(_causal_conv_chunk(xin_b, p["conv_B_w"],
+                                        p["conv_B_b"]))
+    Cc = jax.nn.silu(_causal_conv_chunk(xin_c, p["conv_C_w"],
+                                        p["conv_C_b"]))
+    xc = xconv[:, 0].reshape(B, nh, hd)
+    dt = _softplus(dt_raw[:, 0] + p["dt_bias"])            # (B, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                # (B, nh)
+    contrib = jnp.einsum("bh,bn,bhp->bhpn", dt, Bc[:, 0], xc)
+    h_new = decay[:, :, None, None] * cache["h"] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0], h_new) \
+        + p["D"][None, :, None] * xc
+    y = y.reshape(B, 1, din)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"conv_x": xin_x[:, -(K - 1):], "conv_B": xin_b[:, -(K - 1):],
+                 "conv_C": xin_c[:, -(K - 1):], "h": h_new}
+
+
+def _mamba1_apply_pallas(p, cfg: ArchConfig, x, return_cache: bool = False):
+    """Fused Pallas selective-scan path (forward + custom-VJP backward, so
+    jax.grad works through it — segment-recompute reverse kernel)."""
+    import jax as _jax
+
+    from repro.kernels.selective_scan import make_trainable_scan
+
+    B, L, d = x.shape
+    din, K, n = cfg.d_inner, cfg.ssm_conv, cfg.ssm_state
+    xs = constrain(x @ p["in_x"], "batch", "seq", "inner")
+    z = constrain(x @ p["in_z"], "batch", "seq", "inner")
+    xin = jnp.concatenate(
+        [jnp.zeros((B, K - 1, din), xs.dtype), xs], axis=1)
+    conv = jax.nn.silu(_causal_conv_chunk(xin, p["conv_w"], p["conv_b"]))
+    cdt = p["in_x"].dtype
+    cv = conv.astype(cdt)
+    dt_low = (cv @ p["proj_dt"]).astype(jnp.float32)
+    Bm = (cv @ p["proj_B"]).astype(jnp.float32)
+    Cm = (cv @ p["proj_C"]).astype(jnp.float32)
+    dt = _softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                   + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((B, din, n), jnp.float32)
+    interp = _jax.default_backend() != "tpu"
+    dtile = min(128, din)
+    scan = make_trainable_scan(din_tile=dtile, time_chunk=512,
+                               interpret=interp)
+    y, h_fin = scan(conv, dt, Bm, Cm, A, p["D"].astype(jnp.float32), h0)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = constrain(y.astype(x.dtype) @ p["out_proj"],
+                    "batch", "seq", "embed")
+    if return_cache:
+        return out, {"conv": xin[:, -(K - 1):].astype(x.dtype), "h": h_fin}
+    return out

@@ -1,0 +1,200 @@
+"""Model zoo facade: one uniform API over all assigned architectures.
+
+  model = build(cfg)
+  params = model.init(key)                      # or jax.eval_shape for dry-run
+  loss, metrics = model.loss(params, batch)     # train
+  logits, cache = model.prefill(params, batch)  # inference-prefill
+  logits, cache = model.decode(params, cache, batch)  # one decode step
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given workload shape (weak-type-correct, shardable, no
+allocation) — the dry-run contract.  ``make_batch`` materializes small
+concrete batches for CPU smoke tests.
+
+Paper integration: ``loss`` returns per-token loss *moment states*
+(count/mean/m2/min/max via ``repro.core.state``) in its metrics — these are
+the mergeable CI states consumed by ``repro.evalx`` (CI-guaranteed eval /
+threshold monitors).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.core.state import moments_of_batch
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.layers import compute_dtype
+
+Z_LOSS_COEF = 1e-4
+MOE_AUX_COEF = 1e-2
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    forward: Callable       # (params, batch) -> (logits, aux)
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    init_cache: Callable    # (batch_size, max_len) -> cache pytree
+    decode: Callable        # (params, cache, batch) -> (logits, cache)
+
+
+def _front_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend is None or cfg.family == "encdec":
+        return 0
+    fl = int(seq_len * cfg.frontend_len_frac) // 16 * 16
+    return int(min(max(fl, 16), seq_len // 2))
+
+
+def window_for(cfg: ArchConfig, seq_len: int) -> Optional[int]:
+    """Sub-quadratic rule: the hybrid's shared attention switches to a
+    sliding window at long-context shapes (DESIGN.md §4.1)."""
+    if cfg.family == "hybrid" and cfg.sliding_window and \
+            seq_len > 4 * cfg.sliding_window:
+        return cfg.sliding_window
+    return None
+
+
+def _ce_loss(logits, targets, aux, cfg):
+    """logits f32 (B,T,V); targets int32 (B,T), -1 = ignore."""
+    mask = (targets >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.clip(targets, 0)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    z_loss = Z_LOSS_COEF * ((logz * mask) ** 2).sum() / denom
+    total = loss + z_loss + MOE_AUX_COEF * aux
+    # Paper integration: mergeable CI state over per-token losses.
+    ci_state = moments_of_batch(nll.reshape(-1), mask.reshape(-1) > 0)
+    metrics = {"loss": loss, "z_loss": z_loss, "aux_loss": aux,
+               "loss_ci_state": ci_state, "tokens": denom}
+    return total, metrics
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _build_lm(cfg: ArchConfig) -> Model:
+    def init(key):
+        return lm_mod.lm_init(cfg, key)
+
+    def forward(params, batch, window=None):
+        return lm_mod.lm_forward(params, cfg, batch["tokens"],
+                                 extra_embeds=batch.get("extra_embeds"),
+                                 window=window)
+
+    def loss(params, batch, window=None):
+        logits, aux = forward(params, batch, window)
+        return _ce_loss(logits, batch["targets"], aux, cfg)
+
+    def prefill(params, batch, window=None):
+        return lm_mod.lm_prefill(params, cfg, batch["tokens"],
+                                 extra_embeds=batch.get("extra_embeds"),
+                                 window=window)
+
+    def init_cache(batch_size, max_len):
+        return lm_mod.lm_init_cache(cfg, batch_size, max_len)
+
+    def decode(params, cache, batch, window=None):
+        return lm_mod.lm_decode_step(params, cfg, batch["token"],
+                                     batch["pos"], cache, window=window)
+
+    return Model(cfg, init, loss, forward, prefill, init_cache, decode)
+
+
+def _build_encdec(cfg: ArchConfig) -> Model:
+    def init(key):
+        return encdec_mod.encdec_init(cfg, key)
+
+    def forward(params, batch, window=None):
+        return encdec_mod.encdec_forward(params, cfg,
+                                         batch["frame_embeds"],
+                                         batch["tokens"])
+
+    def loss(params, batch, window=None):
+        logits, aux = forward(params, batch)
+        return _ce_loss(logits, batch["targets"], aux, cfg)
+
+    def prefill(params, batch, window=None):
+        memory = encdec_mod.encode(params, cfg, batch["frame_embeds"])
+        logits = encdec_mod.decode_train(params, cfg, batch["tokens"],
+                                         memory)
+        cache = {"memory": memory}
+        return logits[:, -1:], cache
+
+    def init_cache(batch_size, max_len):
+        return encdec_mod.encdec_init_cache(cfg, batch_size, max_len)
+
+    def decode(params, cache, batch, window=None):
+        logits, new_self = encdec_mod.encdec_decode_step(
+            params, cfg, batch["token"], batch["pos"], cache,
+            batch["memory"])
+        return logits, new_self
+
+    return Model(cfg, init, loss, forward, prefill, init_cache, decode)
+
+
+# -- input specs / batches -------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for the step inputs (dry-run contract).
+
+    Modality frontends are stubs: the spec supplies precomputed frame /
+    patch embeddings directly (assignment rule)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = compute_dtype(cfg)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            half = S // 2
+            return {"frame_embeds": sds((B, half, cfg.d_model), cdt),
+                    "tokens": sds((B, half), i32),
+                    "targets": sds((B, half), i32)}
+        fl = _front_len(cfg, S)
+        spec = {"tokens": sds((B, S - fl), i32),
+                "targets": sds((B, S), i32)}
+        if fl:
+            spec["extra_embeds"] = sds((B, fl, cfg.d_model), cdt)
+        return spec
+    # decode: one new token against a seq_len-deep cache
+    spec = {"token": sds((B, 1), i32),
+            "pos": sds((), i32)}
+    if cfg.family == "encdec":
+        spec["memory"] = sds((B, cfg.decode_memory_len, cfg.d_model), cdt)
+    return spec
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> Dict:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32 and k in ("tokens", "targets", "token"):
+            arr = rng.integers(0, cfg.vocab, size=s.shape).astype(np.int32)
+            fl = _front_len(cfg, shape.seq_len)
+            if k == "targets" and fl:
+                arr[:, :fl] = -1   # no loss on frontend positions
+            out[k] = jnp.asarray(arr)
+        elif k == "pos":
+            out[k] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(0, 0.02, size=s.shape).astype(np.float32),
+                s.dtype)
+    return out

@@ -1,0 +1,1 @@
+"""repro.serve — decode/prefill step builders and batching."""

@@ -1,0 +1,6 @@
+"""repro.train — optimizers + training-step builder."""
+
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import abstract_state, build_train_step, init_state
+
+__all__ = ["OptConfig", "abstract_state", "build_train_step", "init_state"]

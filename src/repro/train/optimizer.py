@@ -1,0 +1,177 @@
+"""Optimizers: AdamW (configurable moment dtype) and Adafactor (factored
+second moments for the 100B+ MoEs so optimizer state fits v5e HBM).
+
+Pure-pytree implementation (no optax dependency): ``init`` builds the
+state tree, ``apply`` returns (new_params, new_state, metrics).  Optimizer
+state sharding is derived from the param specs (``state_specs``): AdamW
+moments inherit the param spec; Adafactor's factored rows/cols inherit the
+corresponding surviving axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # bfloat16 for the giants
+
+    @staticmethod
+    def for_arch(cfg: ArchConfig, **overrides) -> "OptConfig":
+        base = dict(name=cfg.optimizer, moment_dtype=cfg.moment_dtype)
+        base.update(overrides)
+        return OptConfig(**base)
+
+
+def _mdt(ocfg: OptConfig):
+    return jnp.bfloat16 if ocfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def lr_at(ocfg: OptConfig, step):
+    """Linear warmup -> cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - ocfg.warmup_steps)
+                 / jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init(params, ocfg: OptConfig):
+    mdt = _mdt(ocfg)
+    if ocfg.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+
+    def vr(p):  # row accumulator: mean over last axis
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):  # col accumulator: mean over second-to-last axis
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)  # unused sentinel
+
+    return {"vr": jax.tree.map(vr, params), "vc": jax.tree.map(vc, params)}
+
+
+def state_specs(param_spec_tree, params_shapes, ocfg: OptConfig):
+    """Optimizer-state PartitionSpecs derived from param specs."""
+    if ocfg.name == "adamw":
+        return {"m": param_spec_tree, "v": param_spec_tree}
+
+    def vr_spec(spec, p):
+        parts = list(spec) + [None] * (len(p.shape) - len(spec))
+        if _factored(p.shape):
+            return P(*parts[:-1])
+        return P(*parts)
+
+    def vc_spec(spec, p):
+        parts = list(spec) + [None] * (len(p.shape) - len(spec))
+        if _factored(p.shape):
+            return P(*(parts[:-2] + parts[-1:]))
+        return P()
+
+    is_spec = lambda x: isinstance(x, P)
+    return {
+        "vr": jax.tree.map(vr_spec, param_spec_tree, params_shapes,
+                           is_leaf=is_spec),
+        "vc": jax.tree.map(vc_spec, param_spec_tree, params_shapes,
+                           is_leaf=is_spec),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, opt_state, step, ocfg: OptConfig
+          ) -> Tuple[Dict, Dict, Dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(ocfg, step)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+
+    if ocfg.name == "adamw":
+        mdt = _mdt(ocfg)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - ocfg.b1 ** t
+        bc2 = 1.0 - ocfg.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = ocfg.b1 * m.astype(jnp.float32) + (1 - ocfg.b1) * g
+            v2 = ocfg.b2 * v.astype(jnp.float32) + (1 - ocfg.b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ocfg.eps)
+            u = u + ocfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * u
+            return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(opt_state["m"])
+        flat_v = jax.tree.leaves(opt_state["v"])
+        out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, metrics
+
+    # -- adafactor (factored 2nd moments, no 1st moment) ----------------------
+    b2 = 0.999
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr2 = b2 * vr + (1 - b2) * g2.mean(axis=-1)
+            vc2 = b2 * vc + (1 - b2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr2.mean(axis=-1, keepdims=True), 1e-30)
+            vhat = (vr2[..., None] * vc2[..., None, :]) / denom[..., None]
+        else:
+            vr2 = b2 * vr + (1 - b2) * g2
+            vc2 = vc
+            vhat = vr2
+        u = g / (jnp.sqrt(vhat) + 1e-30)
+        # update clipping (Adafactor d=1.0)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        u = u + ocfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * u
+        return p2.astype(p.dtype), vr2, vc2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_vr = jax.tree.leaves(opt_state["vr"])
+    flat_vc = jax.tree.leaves(opt_state["vc"])
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_vr = tdef.unflatten([o[1] for o in out])
+    new_vc = tdef.unflatten([o[2] for o in out])
+    return new_p, {"vr": new_vr, "vc": new_vc}, metrics

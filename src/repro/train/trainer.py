@@ -1,0 +1,116 @@
+"""Training step builder: microbatch gradient accumulation, clipping,
+optimizer update, CI-metric aggregation, optional int8 gradient
+compression.
+
+``build_train_step(model, ocfg)`` returns a pure
+``(state, batch) -> (state, metrics)`` suitable for jit/pjit; under a mesh
+the gradient reduction is whatever GSPMD emits for the sharded loss
+(reduce-scatter+all-gather in the FSDP regime).  Metrics include the
+paper-integrated per-token-loss MomentState (merged across microbatches
+with the Welford monoid), which feeds ``repro.evalx`` monitors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import merge_moments
+from repro.models.zoo import Model
+from repro.train import optimizer as opt
+
+
+def init_state(model: Model, key, ocfg: opt.OptConfig) -> Dict:
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": opt.init(params, ocfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(model: Model, ocfg: opt.OptConfig) -> Dict:
+    """ShapeDtypeStruct state for AOT lowering (dry-run: no allocation)."""
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return {
+        "params": params,
+        "opt": jax.eval_shape(lambda p: opt.init(p, ocfg), params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _split_microbatches(batch: Dict, m: int) -> Dict:
+    return {k: v.reshape(m, v.shape[0] // m, *v.shape[1:])
+            if getattr(v, "ndim", 0) >= 1 else v
+            for k, v in batch.items()}
+
+
+def build_train_step(model: Model, ocfg: opt.OptConfig,
+                     window: Optional[int] = None,
+                     grad_transform: Optional[Callable] = None) -> Callable:
+    """grad_transform: optional (grads -> grads) hook, e.g. the int8
+    compression round-trip from repro.distributed.grad_compression."""
+    cfg = model.cfg
+    micro = max(cfg.microbatches, 1)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, window)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, micro)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, metric_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                if metric_acc is None:
+                    metric_acc = metrics
+                else:
+                    ci = merge_moments(metric_acc["loss_ci_state"],
+                                       metrics["loss_ci_state"])
+                    metric_acc = {
+                        **{k: metric_acc[k] + metrics[k]
+                           for k in ("loss", "z_loss", "aux_loss",
+                                     "tokens")},
+                        "loss_ci_state": ci,
+                    }
+                return (g_acc, metric_acc), loss
+
+            # scan over microbatches: carry must have static structure, so
+            # seed the metric accumulator with one real microbatch.
+            first = jax.tree.map(lambda v: v[0], mbs)
+            (loss0, metrics0), g0 = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, first)
+            g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+            rest = jax.tree.map(lambda v: v[1:], mbs)
+            (g_sum, metrics), _ = jax.lax.scan(acc, (g0, metrics0), rest)
+            grads = jax.tree.map(lambda g: g / micro, g_sum)
+            metrics = {**{k: metrics[k] / micro
+                          for k in ("loss", "z_loss", "aux_loss")},
+                       "tokens": metrics["tokens"],
+                       "loss_ci_state": metrics["loss_ci_state"]}
+            loss = metrics["loss"]
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = opt.apply(
+            params, grads, state["opt"], state["step"], ocfg)
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

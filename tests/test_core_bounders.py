@@ -1,0 +1,137 @@
+"""Unit tests for repro.core bounders: coverage, tightness, monotonicity."""
+
+import numpy as np
+import pytest
+
+from repro.core import Stats, get_bounder
+
+BOUNDERS = ["hoeffding", "hoeffding_serfling", "bernstein", "anderson_dkw"]
+RT_BOUNDERS = ["hoeffding", "hoeffding_serfling", "bernstein"]
+HIST_BINS = 1024
+
+
+def make_stats(sample, bname, a, b):
+    hist = HIST_BINS if "anderson" in bname else None
+    return Stats.of_sample(sample, hist_bins=hist, hist_range=(a, b))
+
+
+def all_bounders():
+    for name in BOUNDERS:
+        yield get_bounder(name)
+    for name in RT_BOUNDERS:
+        yield get_bounder(name, rangetrim=True)
+
+
+@pytest.mark.parametrize("bounder", list(all_bounders()), ids=lambda b: b.name)
+@pytest.mark.parametrize("dist", ["uniform", "bimodal", "heavy_center"])
+def test_coverage(bounder, dist):
+    """CIs must enclose the true mean essentially always (conservative)."""
+    rng = np.random.default_rng(0)
+    a, b = -10.0, 50.0
+    N, m = 20_000, 400
+    delta = 0.05
+    fails = 0
+    trials = 60
+    if dist == "uniform":
+        data = rng.uniform(a, b, size=N)
+    elif dist == "bimodal":
+        data = np.where(rng.random(N) < 0.5, rng.normal(-5, 1, N),
+                        rng.normal(30, 2, N))
+    else:  # most mass in a small interior band — the paper's Figure 2 case
+        data = rng.normal(7.0, 0.5, size=N)
+    data = np.clip(data, a, b)
+    mu = data.mean()
+    for t in range(trials):
+        sample = rng.choice(data, size=m, replace=False)
+        lo, hi = bounder.interval(
+            make_stats(sample, bounder.name, a, b), a, b, N, delta)
+        assert lo <= hi
+        assert a <= lo and hi <= b
+        if not (lo <= mu <= hi):
+            fails += 1
+    # conservative bounders at delta=.05 should essentially never fail
+    assert fails <= max(1, int(np.ceil(trials * delta)))
+
+
+@pytest.mark.parametrize("bname", BOUNDERS + ["bernstein+rt"])
+def test_width_shrinks_with_m(bname):
+    rng = np.random.default_rng(1)
+    a, b = 0.0, 100.0
+    N = 100_000
+    data = rng.uniform(20, 30, size=N)
+    bounder = (get_bounder("bernstein", rangetrim=True) if bname.endswith("rt")
+               else get_bounder(bname))
+    widths = []
+    for m in [100, 1_000, 10_000]:
+        sample = data[:m]
+        lo, hi = bounder.interval(make_stats(sample, bname, a, b),
+                                  a, b, N, 1e-6)
+        widths.append(hi - lo)
+    assert widths[0] > widths[1] > widths[2]
+
+
+def test_bernstein_tighter_than_hoeffding_low_variance():
+    """The PMA fix: variance-adaptive widths win when sigma << (b-a)."""
+    rng = np.random.default_rng(2)
+    a, b = 0.0, 1000.0
+    N, m = 1_000_000, 50_000
+    data = rng.normal(500.0, 1.0, size=N).clip(a, b)
+    s = Stats.of_sample(data[:m])
+    hs = get_bounder("hoeffding_serfling").interval(s, a, b, N, 1e-10)
+    eb = get_bounder("bernstein").interval(s, a, b, N, 1e-10)
+    # Bernstein's range term decays 1/m vs Hoeffding's (b-a)/sqrt(m)
+    assert (eb[1] - eb[0]) < 0.2 * (hs[1] - hs[0])
+
+
+def test_serfling_factor_tightens_as_m_approaches_N():
+    a, b = 0.0, 1.0
+    N = 1_000
+    rng = np.random.default_rng(3)
+    data = rng.uniform(size=N)
+    s = Stats.of_sample(data[:900])
+    h = get_bounder("hoeffding").interval(s, a, b, N, 1e-6)
+    hs = get_bounder("hoeffding_serfling").interval(s, a, b, N, 1e-6)
+    assert (hs[1] - hs[0]) < 0.5 * (h[1] - h[0])
+
+
+@pytest.mark.parametrize("bounder", list(all_bounders()), ids=lambda b: b.name)
+def test_dataset_size_monotonicity(bounder):
+    """§3.3: N' > N may only loosen the bounds (enables the N+ trick)."""
+    rng = np.random.default_rng(4)
+    a, b = 0.0, 10.0
+    sample = rng.uniform(2, 8, size=500)
+    s = make_stats(sample, bounder.name, a, b)
+    for delta in [1e-3, 1e-10]:
+        lo1 = bounder.lbound(s, a, b, 10_000, delta)
+        lo2 = bounder.lbound(s, a, b, 1_000_000, delta)
+        hi1 = bounder.rbound(s, a, b, 10_000, delta)
+        hi2 = bounder.rbound(s, a, b, 1_000_000, delta)
+        assert lo2 <= lo1 + 1e-12
+        assert hi2 >= hi1 - 1e-12
+
+
+@pytest.mark.parametrize("bounder", list(all_bounders()), ids=lambda b: b.name)
+def test_empty_and_tiny_samples(bounder):
+    a, b = -1.0, 3.0
+    s0 = make_stats(np.array([]), bounder.name, a, b)
+    assert bounder.interval(s0, a, b, 100, 0.1) == (a, b)
+    s1 = make_stats(np.array([2.0]), bounder.name, a, b)
+    lo, hi = bounder.interval(s1, a, b, 100, 0.1)
+    assert a <= lo <= hi <= b
+
+
+def test_anderson_dkw_lower_bound_vs_bruteforce():
+    """Histogram DKW lbound must lower-bound the exact-sample Alg. 3 value."""
+    rng = np.random.default_rng(5)
+    a, b = 0.0, 10.0
+    sample = rng.uniform(3, 6, size=2_000)
+    delta = 1e-4
+    m = sample.size
+    eps = np.sqrt(np.log(1 / delta) / (2 * m))
+    srt = np.sort(sample)
+    keep = srt[: int(np.floor((1 - eps) * m))]
+    exact = eps * a + (1 - eps) * keep.mean()
+    s = Stats.of_sample(sample, hist_bins=HIST_BINS, hist_range=(a, b))
+    ours = get_bounder("anderson_dkw").lbound(s, a, b, 1_000_000, delta)
+    assert ours <= exact + 1e-9          # conservative vs exact
+    assert ours >= exact - (b - a) / HIST_BINS - 0.05  # but close

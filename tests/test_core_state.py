@@ -1,0 +1,123 @@
+"""Welford state algebra: merge correctness, associativity, grouped shapes."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    HistState,
+    Stats,
+    hist_of_batch,
+    init_hist,
+    init_moments,
+    merge_hist,
+    merge_moments,
+    moments_of_batch,
+    tree_merge_moments,
+)
+
+floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                   allow_infinity=False, width=32)
+
+
+def check_against_numpy(state, values):
+    v = np.asarray(values, dtype=np.float64)
+    s = Stats.from_state(state)
+    assert np.isclose(s.count, v.size)
+    if v.size:
+        assert np.isclose(s.mean, v.mean(), rtol=1e-5, atol=1e-4)
+        assert np.isclose(s.m2, ((v - v.mean()) ** 2).sum(),
+                          rtol=1e-3, atol=1e-2)
+        assert np.isclose(s.vmin, v.min())
+        assert np.isclose(s.vmax, v.max())
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(floats, min_size=0, max_size=100),
+       st.lists(floats, min_size=0, max_size=100))
+def test_merge_matches_concat(xs, ys):
+    a = moments_of_batch(jnp.asarray(xs, jnp.float32))
+    b = moments_of_batch(jnp.asarray(ys, jnp.float32))
+    check_against_numpy(merge_moments(a, b), xs + ys)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(floats, min_size=1, max_size=50),
+       st.lists(floats, min_size=1, max_size=50),
+       st.lists(floats, min_size=1, max_size=50))
+def test_merge_associative_commutative(xs, ys, zs):
+    a = moments_of_batch(jnp.asarray(xs, jnp.float32))
+    b = moments_of_batch(jnp.asarray(ys, jnp.float32))
+    c = moments_of_batch(jnp.asarray(zs, jnp.float32))
+    m1 = merge_moments(merge_moments(a, b), c)
+    m2 = merge_moments(a, merge_moments(b, c))
+    m3 = merge_moments(merge_moments(c, a), b)
+    for u, w in [(m1, m2), (m1, m3)]:
+        for fu, fw in zip(u, w):
+            assert np.allclose(np.asarray(fu), np.asarray(fw),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_identity_element():
+    xs = jnp.asarray([1.0, 2.0, 3.0])
+    s = moments_of_batch(xs)
+    for merged in [merge_moments(s, init_moments()),
+                   merge_moments(init_moments(), s)]:
+        check_against_numpy(merged, [1.0, 2.0, 3.0])
+
+
+def test_masked_update():
+    v = jnp.asarray([1.0, 100.0, 2.0, 200.0])
+    mask = jnp.asarray([True, False, True, False])
+    check_against_numpy(moments_of_batch(v, mask), [1.0, 2.0])
+
+
+def test_grouped_states_vectorize():
+    """Leading group dim: per-group moments via axis reduction."""
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(8, 128)).astype(np.float32)  # 8 groups
+    st8 = moments_of_batch(jnp.asarray(v), axis=1)
+    assert st8.count.shape == (8,)
+    for g in range(8):
+        check_against_numpy(jax.tree.map(lambda x: x[g], st8), v[g])
+
+
+def test_tree_merge_moments():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(5, 64)).astype(np.float32)
+    stacked = moments_of_batch(jnp.asarray(v), axis=1)  # (5,) states
+    merged = tree_merge_moments(stacked, axis=0)
+    check_against_numpy(merged, v.reshape(-1))
+
+
+def test_numerical_stability_large_offset():
+    """mean >> std: Welford/deviations path must not cancel in f32."""
+    rng = np.random.default_rng(2)
+    v = (1e6 + rng.normal(0, 1.0, size=4096)).astype(np.float32)
+    state = init_moments()
+    for chunk in v.reshape(8, 512):
+        state = merge_moments(state, moments_of_batch(jnp.asarray(chunk)))
+    s = Stats.from_state(state)
+    v64 = v.astype(np.float64)
+    assert np.isclose(s.mean, v64.mean(), rtol=1e-6)
+    true_var = v64.var()
+    assert np.isclose(s.m2 / s.count, true_var, rtol=0.05)
+
+
+def test_hist_state():
+    v = jnp.asarray([0.05, 0.15, 0.95, 0.95])
+    h = hist_of_batch(v, None, 0.0, 1.0, nbins=10)
+    np.testing.assert_allclose(np.asarray(h.hist),
+                               [1, 1, 0, 0, 0, 0, 0, 0, 0, 2])
+    h2 = merge_hist(h, h)
+    assert np.asarray(h2.hist).sum() == 8
+    assert init_hist(nbins=10).hist.shape == (10,)
+
+
+def test_hist_clips_out_of_range():
+    v = jnp.asarray([-5.0, 5.0])
+    h = hist_of_batch(v, None, 0.0, 1.0, nbins=4)
+    np.testing.assert_allclose(np.asarray(h.hist), [1, 0, 0, 1])

@@ -1,0 +1,36 @@
+"""Multi-device tests run in subprocesses (device count must be fixed before
+jax initializes, so each scenario gets its own interpreter)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+HELPERS = Path(__file__).parent / "helpers"
+SRC = str(Path(__file__).parent.parent / "src")
+
+
+def run_worker(name: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(HELPERS / name)], env=env,
+        capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, \
+        f"worker {name} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_distributed_aqp_round():
+    out = run_worker("dist_aqp_worker.py")
+    assert "DIST-AQP-OK" in out
+
+
+def test_distributed_train_step_elastic_checkpoint():
+    out = run_worker("dist_train_worker.py", timeout=900)
+    assert "SHARDED-STEP-OK" in out
+    assert "ELASTIC-RESTORE-OK" in out
+    assert "COMPRESSED-PSUM-OK" in out

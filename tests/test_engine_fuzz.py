@@ -1,0 +1,93 @@
+"""Randomized end-to-end engine fuzz: arbitrary (agg x filter x group-by x
+bounder x stopping-condition) queries must always produce answers whose
+intervals cover the exact ground truth — the delta guarantee as a property
+over the *whole system*, not just the bounder math.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.aqp import AggQuery, EngineConfig, FastFrame, Filter, \
+    build_scramble
+from repro.core.optstop import (AbsoluteWidth, GroupsOrdered, ThresholdSide,
+                                TopKSeparated)
+from repro.data import flights
+
+_DS = flights.generate(n_rows=120_000, n_airports=16, n_airlines=6, seed=42)
+_FRAME = FastFrame(
+    build_scramble(_DS.columns, catalog=_DS.catalog, block_rows=256,
+                   seed=43),
+    EngineConfig(round_blocks=32, lookahead_blocks=128))
+
+
+@st.composite
+def queries(draw):
+    agg = draw(st.sampled_from(["avg", "sum", "count"]))
+    group_by = draw(st.sampled_from([None, "airline", "origin"]))
+    filt = draw(st.sampled_from([
+        (), (Filter("dep_time", "gt", 600.0),),
+        (Filter("airline", "eq", 2),),
+        (Filter("day_of_week", "le", 3),),
+    ]))
+    stop = draw(st.sampled_from(["abs", "thresh", "topk", "ordered"]))
+    if stop == "abs":
+        eps = draw(st.sampled_from([5.0, 50.0]))
+        cond = AbsoluteWidth(eps=eps if agg == "avg" else eps * 2e4)
+    elif stop == "thresh":
+        cond = ThresholdSide(threshold=draw(st.sampled_from(
+            [0.0, 10.0, 25.0])) if agg == "avg" else 10_000.0)
+    elif stop == "topk":
+        cond = TopKSeparated(k=2, largest=draw(st.booleans()))
+    else:
+        cond = GroupsOrdered()
+    bounder, rt = draw(st.sampled_from(
+        [("bernstein", True), ("bernstein", False),
+         ("hoeffding_serfling", True)]))
+    column = None if agg == "count" else "dep_delay"
+    sampling = draw(st.sampled_from(["scan", "active_peek"]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return (AggQuery(agg=agg, column=column, filters=filt,
+                     group_by=group_by, stop=cond, bounder=bounder,
+                     rangetrim=rt, delta=1e-9), sampling, seed)
+
+
+def exact_truth(q: AggQuery):
+    cols = _DS.columns
+    mask = np.ones(_DS.n_rows, dtype=bool)
+    for f in q.filters:
+        mask &= f.evaluate(cols)
+    if q.group_by is None:
+        groups = {0: mask}
+    else:
+        g = cols[q.group_by]
+        groups = {int(c): mask & (g == c) for c in np.unique(g[mask])}
+    out = {}
+    for code, gm in groups.items():
+        vals = cols["dep_delay"][gm].astype(np.float64)
+        if q.agg == "avg":
+            out[code] = vals.mean() if vals.size else None
+        elif q.agg == "sum":
+            out[code] = vals.sum()
+        else:
+            out[code] = float(gm.sum())
+    return out
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(queries())
+def test_fuzzed_query_intervals_cover_truth(qss):
+    q, sampling, seed = qss
+    res = _FRAME.run(q, sampling=sampling, seed=seed % 1000)
+    truth = exact_truth(q)
+    for code, tv in truth.items():
+        if tv is None:
+            continue
+        tol = max(1e-3, 2e-5 * abs(tv))  # f32 data path
+        assert res.lo[code] - tol <= tv <= res.hi[code] + tol, \
+            (q.agg, q.group_by, code, res.lo[code], tv, res.hi[code])
+        assert res.nonempty[code] or tv == 0

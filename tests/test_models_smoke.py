@@ -1,0 +1,217 @@
+"""Per-arch smoke tests (assignment requirement): instantiate a REDUCED
+config of each family, run one forward/train step on CPU, assert output
+shapes + no NaNs; plus prefill/decode cache-consistency checks."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get
+from repro.models import build, input_specs, make_batch
+
+SMOKE_SHAPE = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                  global_batch=2)
+DECODE_SHAPE = dataclasses.replace(SHAPES["decode_32k"], seq_len=64,
+                                   global_batch=2)
+
+
+def smoke_cfg(arch_id):
+    cfg = get(arch_id, reduced=True)
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def _get(arch_id):
+        if arch_id not in cache:
+            cfg = smoke_cfg(arch_id)
+            model = build(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch_id] = (cfg, model, params)
+        return cache[arch_id]
+
+    return _get
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_and_train_step(arch_id, built):
+    cfg, model, params = built(arch_id)
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=1)
+
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), arch_id
+    assert float(metrics["tokens"]) > 0
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, arch_id
+    # one SGD step changes the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.3 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = model.loss(params2, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_logit_shapes(arch_id, built):
+    cfg, model, params = built(arch_id)
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=2)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape[0] == SMOKE_SHAPE.global_batch
+    assert logits.shape[-1] == cfg.vocab_padded
+    assert logits.dtype == jnp.float32
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_step_runs(arch_id, built):
+    cfg, model, params = built(arch_id)
+    B, S = 2, 64
+    cache = model.init_cache(B, S)
+    batch = make_batch(cfg, DECODE_SHAPE, seed=3)
+    logits, new_cache = model.decode(params, cache, batch)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert not np.isnan(np.asarray(logits)).any(), arch_id
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3_0_6b", "falcon_mamba_7b",
+                                     "zamba2_7b", "dbrx_132b"])
+def test_prefill_then_decode_matches_forward(arch_id, built):
+    """Teacher-forced forward at position t == prefill(t tokens) + decode:
+    the decode path must reproduce the forward logits (cache correctness).
+
+    For MoE the capacity must be non-binding (dropless regime), else the
+    per-group drop pattern legitimately differs with group size."""
+    import dataclasses as _dc
+    from repro.models import build as _build
+    cfg, model, params = built(arch_id)
+    if cfg.family == "moe":
+        cfg = _dc.replace(cfg, capacity_factor=16.0)
+        model = _build(cfg)
+    B, T = 2, 32
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, T)), jnp.int32)
+
+    full_logits, _ = model.forward(params, {"tokens": toks})
+
+    # prefill on the first T-1 tokens, then decode token T-1
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :T - 1]})
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(full_logits[:, T - 2]),
+                               rtol=2e-3, atol=2e-3)
+    if cfg.family in ("dense", "moe", "vlm"):
+        # KV caches from prefill are length T-1; decode needs room for one
+        # more: rebuild fixed-size cache and splice the prefill KV in.
+        cache2 = model.init_cache(B, T)
+        cache2 = {
+            "layers": {
+                "k": cache2["layers"]["k"].at[:, :, :T - 1].set(
+                    cache["layers"]["k"]),
+                "v": cache2["layers"]["v"].at[:, :, :T - 1].set(
+                    cache["layers"]["v"]),
+            }
+        }
+        cache = cache2
+    elif cfg.family == "hybrid":
+        cache2 = model.init_cache(B, T)
+        cache2["mamba"] = cache["mamba"]
+        if "tail" in cache:
+            cache2["tail"] = cache["tail"]
+        cache2["attn"] = {
+            "k": cache2["attn"]["k"].at[:, :, :T - 1].set(cache["attn"]["k"]),
+            "v": cache2["attn"]["v"].at[:, :, :T - 1].set(cache["attn"]["v"]),
+        }
+        cache = cache2
+    dec_logits, _ = model.decode(
+        params, cache, {"token": toks[:, T - 1:T],
+                        "pos": jnp.asarray(T - 1, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, T - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_seamless_prefill_decode(built):
+    cfg, model, params = built("seamless_m4t_large_v2")
+    B, T = 2, 16
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.normal(0, 0.02, size=(B, T, cfg.d_model)),
+                         jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, T)), jnp.int32)
+    full, _ = model.forward(params, {"frame_embeds": frames,
+                                     "tokens": toks})
+    from repro.models import encdec as em
+    memory = em.encode(params, cfg, frames)
+    cache = model.init_cache(B, T)
+    # teacher-force tokens 0..T-2 through decode steps, check last logits
+    for t in range(T - 1):
+        logits, cache = model.decode(
+            params, cache, {"token": toks[:, t:t + 1],
+                            "pos": jnp.asarray(t, jnp.int32),
+                            "memory": memory})
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, T - 2]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routing_is_balanced_enough():
+    """Aux loss should push routing to use multiple experts (structural)."""
+    cfg = smoke_cfg("dbrx_132b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=4)
+    _, metrics = model.loss(params, batch)
+    # aux in [1, E]: 1 = perfectly balanced, E = fully collapsed routing;
+    # random init sits in between (sanity: computed, finite, not collapsed)
+    aux = float(metrics["aux_loss"])
+    assert 0.5 < aux < cfg.n_experts, aux
+
+
+def test_mamba1_associativity_vs_naive():
+    """Chunked associative scan == naive per-step recurrence."""
+    from repro.models import ssm as ssm_mod
+    cfg = smoke_cfg("falcon_mamba_7b")
+    p = ssm_mod.mamba1_init(jax.random.PRNGKey(0), cfg)
+    B, L = 1, 64
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (B, L,
+                                                           cfg.d_model)),
+                    jnp.float32)
+    y_chunked = ssm_mod.mamba1_apply(p, cfg, x)
+    # naive: decode step by step
+    cache = ssm_mod.mamba1_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(L):
+        y, cache = ssm_mod.mamba1_decode(p, cfg, x[:, t:t + 1], cache)
+        ys.append(y)
+    y_naive = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mamba2_ssd_vs_naive():
+    from repro.models import ssm as ssm_mod
+    cfg = smoke_cfg("zamba2_7b")
+    p = ssm_mod.mamba2_init(jax.random.PRNGKey(0), cfg)
+    B, L = 1, 64
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (B, L,
+                                                           cfg.d_model)),
+                    jnp.float32)
+    y_chunked = ssm_mod.mamba2_apply(p, cfg, x)
+    cache = ssm_mod.mamba2_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(L):
+        y, cache = ssm_mod.mamba2_decode(p, cfg, x[:, t:t + 1], cache)
+        ys.append(y)
+    y_naive = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,72 @@
+"""Table 2 as a regression test + Appendix B derived range bounds."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import derived_range, get_bounder
+from repro.core.pathologies import exhibits_phos, exhibits_pma
+
+
+# Paper Table 2: (bounder, PMA, PHOS)
+TABLE2 = [
+    ("hoeffding", False, True, True),
+    ("hoeffding_serfling", False, True, True),
+    ("bernstein", False, False, True),
+    ("anderson_dkw", False, True, False),
+    ("hoeffding_serfling", True, True, False),   # +RT fixes PHOS only
+    ("bernstein", True, False, False),           # the paper's answer to Pb. 1
+]
+
+
+@pytest.mark.parametrize("name,rt,pma,phos", TABLE2)
+def test_table2_pathologies(name, rt, pma, phos):
+    b = get_bounder(name, rangetrim=rt)
+    assert exhibits_pma(b) == pma, f"{b.name}: PMA mismatch"
+    assert exhibits_phos(b) == phos, f"{b.name}: PHOS mismatch"
+    # declared metadata agrees with empirical behaviour
+    assert b.has_pma == pma and b.has_phos == phos
+
+
+# -- Appendix B ---------------------------------------------------------------
+
+
+def test_derived_range_monotone():
+    f = lambda c: 2.0 * c[0] - 3.0 * c[1]
+    lo, hi = derived_range(f, [(0.0, 1.0), (0.0, 2.0)], monotone=[+1, -1])
+    assert np.isclose(lo, -6.0) and np.isclose(hi, 2.0)
+
+
+def test_derived_range_convex_paper_example():
+    """Example 1: AVG((2c1 + 3c2 - 1)^2), c1 in [-3,1], c2 in [-1,3] -> [0,100]."""
+    f = lambda c: (2.0 * c[0] + 3.0 * c[1] - 1.0) ** 2
+    lo, hi = derived_range(f, [(-3.0, 1.0), (-1.0, 3.0)], convex=True)
+    assert np.isclose(hi, 100.0)
+    assert abs(lo) < 1e-2
+
+
+def test_derived_range_concave():
+    f = lambda c: -((c[0] - 0.5) ** 2) + c[1]
+    lo, hi = derived_range(f, [(0.0, 1.0), (0.0, 1.0)], convex=False)
+    assert np.isclose(lo, -0.25, atol=1e-6)
+    assert np.isclose(hi, 1.0, atol=1e-2)
+
+
+def test_derived_range_refuses_uncertified():
+    with pytest.raises(ValueError):
+        derived_range(lambda c: jnp.sin(c[0]), [(0.0, 10.0)])
+
+
+def test_derived_range_feeds_bounder():
+    """End-to-end: expression agg with derived bounds still covers."""
+    rng = np.random.default_rng(0)
+    c1 = rng.uniform(-3, 1, size=50_000)
+    c2 = rng.uniform(-1, 3, size=50_000)
+    vals = (2 * c1 + 3 * c2 - 1) ** 2
+    lo_r, hi_r = derived_range(lambda c: (2 * c[0] + 3 * c[1] - 1.0) ** 2,
+                               [(-3.0, 1.0), (-1.0, 3.0)], convex=True)
+    from repro.core import Stats
+    sample = vals[:2_000]
+    ci = get_bounder("bernstein", rangetrim=True).interval(
+        Stats.of_sample(sample), lo_r, hi_r, vals.size, 1e-9)
+    assert ci[0] <= vals.mean() <= ci[1]

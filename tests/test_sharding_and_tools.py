@@ -1,0 +1,191 @@
+"""Unit tests: sharding rules, HLO cost parser, scramble sharding,
+data-pipeline determinism, roofline model."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get
+from repro.data import flights, tokens as data_tokens
+from repro.distributed import sharding as shard
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # host platform has 1 device; build an abstract 1x1 mesh just for
+    # divisibility logic by faking sizes via a real (1,1) mesh
+    return make_host_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Divisibility-logic stand-in with production axis sizes."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+PROD = FakeMesh({"data": 16, "model": 16})
+PROD_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def specs_for(arch_id, mesh):
+    cfg = get(arch_id, reduced=False)
+    from repro.models import build
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return cfg, shard.param_specs(cfg, mesh, shapes), shapes
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3_0_6b", "arctic_480b",
+                                     "falcon_mamba_7b", "zamba2_7b"])
+@pytest.mark.parametrize("mesh", [PROD, PROD_MP], ids=["1pod", "2pod"])
+def test_param_specs_divide(arch_id, mesh):
+    """Every spec'd axis must divide its dim (or the rule must drop it)."""
+    cfg, specs, shapes = specs_for(arch_id, mesh)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree.leaves(shapes)
+    assert len(flat_s) == len(flat_p)
+    for spec, leaf in zip(flat_s, flat_p):
+        for dim, want in zip(leaf.shape, tuple(spec)):
+            if want is None:
+                continue
+            axes = (want,) if isinstance(want, str) else want
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch_id, leaf.shape, spec)
+
+
+def test_fsdp_shards_big_params():
+    """The dominant weights must actually be sharded (ZeRO-3 posture)."""
+    cfg, specs, shapes = specs_for("arctic_480b", PROD)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    specs_flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    replicated_bytes = 0
+    total_bytes = 0
+    for (path, leaf), spec in zip(flat, specs_flat):
+        n = int(np.prod(leaf.shape)) * 2  # bf16
+        total_bytes += n
+        shards = 1
+        for dim, want in zip(leaf.shape, tuple(spec)):
+            if want is None:
+                continue
+            axes = (want,) if isinstance(want, str) else want
+            shards *= int(np.prod([PROD.shape[a] for a in axes]))
+        if shards == 1:
+            replicated_bytes += n
+    # replicated fraction must be tiny (norm scales, biases, routers)
+    assert replicated_bytes / total_bytes < 0.01
+    # and the sharded state must fit v5e HBM with adafactor moments
+    per_dev = total_bytes / 256
+    assert per_dev < 16e9
+
+
+def test_batch_axis_fallbacks():
+    assert shard.batch_axis(PROD, 256) == ("data",)
+    assert shard.batch_axis(PROD_MP, 256) == ("pod", "data")
+    assert shard.batch_axis(PROD_MP, 1) is None  # long_500k
+    assert shard.batch_axis(PROD_MP, 16) == ("data",)
+
+
+# -- hlo_cost parser -----------------------------------------------------------
+
+
+SAMPLE_HLO = """\
+HloModule test, is_scheduled=true
+
+%wide.body (arg: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %g = f32[8,4]{1,0} get-tuple-element(%p), index=1
+  %w = f32[4,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%g, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}
+  ROOT %t = (s32[], f32[8,4]) tuple(%p)
+}
+
+%wide.cond (arg: (s32[], f32[8,4])) -> pred[] {
+  %p2 = (s32[], f32[8,4]) parameter(0)
+  ROOT %lt = pred[] compare(%p2, %p2), direction=LT
+}
+
+ENTRY %main (a: f32[8,4]) -> f32[8,4] {
+  %a = f32[8,4]{1,0} parameter(0)
+  %init = (s32[], f32[8,4]) tuple(%a)
+  %while.1 = (s32[], f32[8,4]) while(%init), condition=%wide.cond, body=%wide.body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,4]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_hlo_cost_trip_count_multiplication():
+    res = hlo_cost.analyze(SAMPLE_HLO)
+    # dot: 2 * 8*16 * 4 = 1024 flops, x7 trips
+    assert res["flops"] == 7 * 1024
+    ar = res["collectives"]["all-reduce"]
+    assert ar["count"] == 7
+    assert ar["bytes"] == 7 * 8 * 16 * 4
+
+
+def test_shape_bytes_parsing():
+    assert hlo_cost._shape_bytes("bf16[4,8]{1,0}") == 64
+    assert hlo_cost._shape_bytes("(f32[2,2], s32[])") == 20
+    assert hlo_cost._shape_bytes("pred[]") == 1
+
+
+# -- scramble sharding / data determinism ---------------------------------------
+
+
+def test_scramble_device_shard_partition():
+    from repro.aqp import build_scramble
+    ds = flights.generate(n_rows=100_000, n_airports=20, seed=0)
+    sc = build_scramble(ds.columns, block_rows=512, seed=1)
+    shards = [sc.device_shard(i, 4) for i in range(4)]
+    assert sum(s.n_blocks for s in shards) == sc.n_blocks
+    assert sum(s.n_rows for s in shards) == sc.n_rows
+    got = np.concatenate([s.columns["dep_delay"][s.valid] for s in shards])
+    np.testing.assert_allclose(np.sort(got),
+                               np.sort(ds.columns["dep_delay"]))
+
+
+def test_train_batch_deterministic_and_shardable():
+    cfg = get("qwen3_0_6b", reduced=True)
+    shape = SHAPES["train_4k"]
+    import dataclasses
+    shape = dataclasses.replace(shape, seq_len=64, global_batch=8)
+    b1 = data_tokens.train_batch(cfg, shape, step=5)
+    b2 = data_tokens.train_batch(cfg, shape, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b_other = data_tokens.train_batch(cfg, shape, step=6)
+    assert not np.array_equal(b1["tokens"], b_other["tokens"])
+    # host slicing yields disjoint deterministic slices
+    h0 = data_tokens.train_batch(cfg, shape, 5, host=0, host_count=2)
+    assert h0["tokens"].shape[0] == 4
+
+
+# -- roofline model sanity -------------------------------------------------------
+
+
+def test_model_flops_scaling():
+    from benchmarks.roofline import model_flops
+    t = model_flops("qwen3_0_6b", "train_4k")
+    p = model_flops("qwen3_0_6b", "prefill_32k")
+    tok_t, tok_p = 4096 * 256, 32768 * 32
+    # per-token train is 3x the 4k forward; the 32k prefill forward is
+    # attention-quadratic-dominated (3.8e9 of its 5.3e9 flops/token), so
+    # the cross-shape ratio lands near ~1.1, not 3.
+    assert 1.0 < (t / tok_t) / (p / tok_p) < 3.5
+    # train per token must exceed 3 x 2 x active params (matmul floor)
+    n = 0.75e9
+    assert t / tok_t > 3 * 2 * n
+    # MoE counts active params (~16B), not all 480B: per-token train
+    # flops must be far below the hypothetical dense-480B 6N floor
+    t_moe = model_flops("arctic_480b", "train_4k")
+    per_tok = t_moe / (4096 * 256)
+    assert per_tok < 0.5 * 6 * 477e9
+    assert per_tok > 6 * 16.0e9  # and above the active-param floor

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers the integrated story: FLIGHTS relation -> scramble -> FastFrame ->
+paper queries answered correctly with early stopping; and the framework
+integration: train a model, monitor it with CI metrics, checkpoint,
+restart, and evaluate with guaranteed early stopping.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.aqp import EngineConfig, FastFrame, build_scramble
+from repro.aqp.flights_queries import f_q1, f_q2, f_q9
+from repro.configs import get
+from repro.configs.base import ShapeConfig
+from repro.data import flights, tokens as data_tokens
+from repro.distributed import checkpoint as ckpt
+from repro.evalx import ApproxEval
+from repro.models import build
+from repro.train import OptConfig, build_train_step, init_state
+
+
+def test_aqp_system_end_to_end():
+    """Load -> scramble -> index -> query with guarantees -> early stop."""
+    ds = flights.generate(n_rows=600_000, n_airports=60, seed=3)
+    frame = FastFrame(build_scramble(ds.columns, catalog=ds.catalog,
+                                     block_rows=1024, seed=4),
+                      EngineConfig(round_blocks=48))
+    truth = {int(c): ds.columns["dep_delay"][ds.columns["airline"] == c]
+             .astype(np.float64).mean()
+             for c in np.unique(ds.columns["airline"])}
+
+    # paper's flagship config: Bernstein + RangeTrim, delta = 1e-15
+    thresh = float(np.median(list(truth.values())))
+    res = frame.run(f_q2(thresh=thresh, delta=1e-15),
+                    sampling="active_peek", seed=0)
+    want = {c for c, m in truth.items() if m > thresh}
+    assert set(res.having("gt", thresh).tolist()) == want
+    for c, m in truth.items():
+        assert res.lo[c] - 1e-3 <= m <= res.hi[c] + 1e-3
+
+    # top-1 (F-q9) agrees with ground truth
+    res9 = frame.run(f_q9(delta=1e-12), sampling="active_peek", seed=1)
+    assert res9.topk(1)[0] == max(truth, key=truth.get)
+
+    # a selective filter query early-stops
+    res1 = frame.run(f_q1(airport=0, eps=0.5, delta=1e-12),
+                     sampling="active_peek", seed=2)
+    t0 = ds.columns["dep_delay"][ds.columns["origin"] == 0]\
+        .astype(np.float64).mean()
+    assert res1.lo[0] - 1e-3 <= t0 <= res1.hi[0] + 1e-3
+
+
+def test_training_system_end_to_end(tmp_path):
+    """Train -> checkpoint -> restart -> CI-guaranteed eval."""
+    cfg = dataclasses.replace(
+        get("qwen3_0_6b", reduced=True), param_dtype="float32",
+        compute_dtype="float32", remat=False)
+    model = build(cfg)
+    ocfg = OptConfig.for_arch(cfg, lr=5e-3, warmup_steps=5,
+                              total_steps=60)
+    state = init_state(model, jax.random.PRNGKey(0), ocfg)
+    step = jax.jit(build_train_step(model, ocfg))
+    shape = ShapeConfig("sys", 64, 8, "train")
+
+    first_loss = None
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data_tokens.train_batch(cfg, shape, i).items()}
+        state, metrics = step(state, batch)
+        first_loss = first_loss or float(metrics["loss"])
+    assert float(metrics["loss"]) < first_loss
+
+    # checkpoint + restart continues the run exactly
+    ckpt.save_checkpoint(tmp_path, 20, state, meta={"arch": cfg.name})
+    restored, _ = ckpt.restore_checkpoint(tmp_path, 20, state)
+    batch = {k: jnp.asarray(v) for k, v in
+             data_tokens.train_batch(cfg, shape, 21).items()}
+    _, m_a = step(state, batch)
+    _, m_b = step(restored, batch)
+    assert float(m_a["loss"]) == pytest.approx(float(m_b["loss"]),
+                                               rel=1e-6)
+
+    # CI-guaranteed eval early-stops with a valid certificate
+    scramble = data_tokens.make_eval_scramble(cfg, n_examples=2048,
+                                              seq_len=64)
+
+    @jax.jit
+    def loss_fn(b):
+        logits, _ = model.forward(state["params"], b)
+        targets = b["targets"]
+        mask = targets >= 0
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(targets, 0)[..., None], axis=-1)[..., 0]
+        return (logz - picked), mask
+
+    ev = ApproxEval(lambda b: loss_fn({k: jnp.asarray(v)
+                                       for k, v in b.items()}),
+                    vocab=cfg.vocab_padded, delta=1e-9)
+    rep = ev.run(scramble.batches(32), scramble.n_examples,
+                 target_width=0.5)
+    assert rep.stopped_early
+    assert rep.hi - rep.lo < 0.5
+    assert rep.lo <= rep.mean_estimate <= rep.hi
