@@ -1,0 +1,140 @@
+"""Microbenchmark: per-round CI refresh, scalar-loop vs batched.
+
+Sweeps the GROUP BY cardinality G in {1, 64, 4096, 65536} and measures the
+latency of one OptStop round's bound evaluation (the engine's step 3) done
+two ways over identical per-group states:
+
+  * ``scalar``  — the pre-refactor shape: a Python loop issuing one scalar
+    ``Bounder.interval`` call per group;
+  * ``batched`` — one ``interval_batch`` call over the whole ``StatsBatch``
+    (what ``FastFrame.run`` now does).
+
+Results go to ``benchmarks/results/BENCH_bound_eval.json`` and the
+``name,us_per_call,derived`` CSV contract is printed (derived = speedup).
+
+Run: ``PYTHONPATH=src python benchmarks/bench_bound_eval.py [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import StatsBatch, get_bounder
+from repro.core.bounders import Bounder
+
+A, B = -10.0, 50.0
+N_POP = 10_000_000.0
+DELTA = 1e-9
+SWEEP_G = (1, 64, 4096, 65536)
+
+
+def make_batch(rng: np.random.Generator, g: int,
+               hist_bins: int = 0) -> StatsBatch:
+    count = rng.integers(2, 5000, g).astype(np.float64)
+    mean = rng.uniform(A, B, g)
+    m2 = rng.uniform(0.0, 100.0, g) * count
+    vmin = mean - rng.uniform(0.0, mean - A)
+    vmax = mean + rng.uniform(0.0, B - mean)
+    hist = None
+    if hist_bins:
+        hist = rng.uniform(0.0, 10.0, (g, hist_bins))
+    return StatsBatch(count=count, mean=mean, m2=m2, vmin=vmin, vmax=vmax,
+                      hist=hist)
+
+
+def refresh_scalar(bounder: Bounder, sb: StatsBatch) -> np.ndarray:
+    g = len(sb)
+    lo = np.empty(g)
+    hi = np.empty(g)
+    for i in range(g):
+        lo[i], hi[i] = bounder.interval(sb[i], A, B, N_POP, DELTA)
+    return lo, hi
+
+
+def refresh_batched(bounder: Bounder, sb: StatsBatch) -> np.ndarray:
+    return bounder.interval_batch(sb, A, B, N_POP, DELTA)
+
+
+def _time(fn, *args, min_reps: int = 1, budget_s: float = 1.0) -> float:
+    """Best-of wall time per call, at least ``min_reps`` calls."""
+    fn(*args)  # warm-up
+    best = np.inf
+    reps = 0
+    t_start = time.perf_counter()
+    while reps < min_reps or time.perf_counter() - t_start < budget_s:
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+        if reps >= 50:
+            break
+    return best
+
+
+def run(sweep=SWEEP_G, bounder_name: str = "bernstein", rangetrim: bool = True,
+        budget_s: float = 1.0):
+    bounder = get_bounder(bounder_name, rangetrim=rangetrim)
+    hist_bins = 1024 if bounder_name == "anderson_dkw" else 0
+    rng = np.random.default_rng(0)
+    rows = []
+    for g in sweep:
+        sb = make_batch(rng, g, hist_bins=hist_bins)
+        t_scalar = _time(refresh_scalar, bounder, sb,
+                         budget_s=min(budget_s, 0.2) if g >= 4096
+                         else budget_s)
+        t_batched = _time(refresh_batched, bounder, sb, budget_s=budget_s)
+        lo_s, hi_s = refresh_scalar(bounder, sb)
+        lo_b, hi_b = refresh_batched(bounder, sb)
+        equiv = bool(np.allclose(lo_s, lo_b, atol=1e-12)
+                     and np.allclose(hi_s, hi_b, atol=1e-12))
+        rows.append(dict(
+            G=g, bounder=bounder.name,
+            scalar_us=t_scalar * 1e6, batched_us=t_batched * 1e6,
+            us_per_group_scalar=t_scalar * 1e6 / g,
+            us_per_group_batched=t_batched * 1e6 / g,
+            speedup=t_scalar / max(t_batched, 1e-12), equivalent=equiv))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the G=65536 point and shrink timing budget")
+    ap.add_argument("--bounder", default="bernstein",
+                    choices=["hoeffding", "hoeffding_serfling", "bernstein",
+                             "anderson_dkw"])
+    ap.add_argument("--no-rangetrim", action="store_true")
+    args = ap.parse_args(argv)
+
+    rangetrim = not args.no_rangetrim and args.bounder != "anderson_dkw"
+    sweep = SWEEP_G[:-1] if args.quick else SWEEP_G
+    rows = run(sweep, bounder_name=args.bounder, rangetrim=rangetrim,
+               budget_s=0.2 if args.quick else 1.0)
+
+    print(f"{'G':>7s} {'scalar_us':>12s} {'batched_us':>12s} "
+          f"{'speedup':>9s} {'equiv':>6s}")
+    for r in rows:
+        print(f"{r['G']:7d} {r['scalar_us']:12.1f} {r['batched_us']:12.1f} "
+              f"{r['speedup']:9.1f} {str(r['equivalent']):>6s}")
+
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    report = dict(bench="bound_eval", bounder=rows[0]["bounder"],
+                  delta=DELTA, rows=rows)
+    (out_dir / "BENCH_bound_eval.json").write_text(
+        json.dumps(report, indent=1, default=float))
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"bound_eval/{r['bounder']}/G={r['G']}/batched,"
+              f"{r['batched_us']:.1f},{r['speedup']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

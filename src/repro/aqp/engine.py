@@ -40,11 +40,34 @@ from repro.aqp.scramble import Scramble
 from repro.core import count_sum
 from repro.core.bounders import get_bounder
 from repro.core.optstop import delta_schedule
-from repro.core.state import (Stats, init_hist, init_moments_host,
+from repro.core.state import (StatsBatch, init_moments_host,
                               merge_moments_host, to_host)
 from repro.kernels import ops as kops
 
 _ALPHA = count_sum.ALPHA_DEFAULT
+
+
+def _batched_view_ci(q: AggQuery, sb: StatsBatch, a, b, r, R, dk,
+                     known_n, bounder, alpha):
+    """One round's CI refresh for a batch of views (module-level so tests
+    can swap in a scalar-loop oracle). Returns ``(lo, hi, est)`` arrays of
+    the batch length. ``r`` is the scalar clean-prefix row count; N+ and
+    all bounder math are evaluated elementwise over the batch."""
+    if q.agg == "count":
+        clo, chi = count_sum.count_ci(sb.count, r, R, dk)
+        return clo, chi, sb.count / max(r, 1) * R
+    if known_n:
+        alo, ahi = bounder.interval_batch(sb, a, b, R, dk)
+    else:
+        budget = dk if q.agg == "avg" else dk / 2.0
+        npl = count_sum.n_plus(sb.count, r, R, (1 - alpha) * budget)
+        alo, ahi = bounder.interval_batch(sb, a, b, npl, alpha * budget)
+    if q.agg == "avg":
+        return alo, ahi, sb.mean.copy()
+    # SUM = COUNT x AVG (paper §4.1)
+    cci = count_sum.count_ci(sb.count, r, R, dk / 2.0)
+    slo, shi = count_sum.sum_ci(cci, (alo, ahi))
+    return slo, shi, sb.mean * (sb.count / max(r, 1)) * R
 
 
 def _unpack_words(words: np.ndarray, cardinality: int) -> np.ndarray:
@@ -160,6 +183,26 @@ class FastFrame:
         gids = (sc.columns[gcol][idx] if gcol is not None
                 else np.zeros(mask.shape, dtype=np.int32))
         return values, gids.astype(np.int32), mask
+
+    # -- block folding ---------------------------------------------------------
+
+    def _fold_blocks(self, q, idx, value_src, gcol, G, center, a, b,
+                     state, hist, use_hist):
+        """Materialize blocks ``idx`` and fold them into the running
+        per-group moment state (+ histogram): the one shared ingest path
+        for the main round loop and the recovery pass."""
+        cfg = self.config
+        values, gids, mask = self._materialize(q, idx, value_src, gcol)
+        vf = jnp.asarray(values.reshape(-1))
+        gf = jnp.asarray(gids.reshape(-1))
+        mf = jnp.asarray(mask.reshape(-1).astype(np.float32))
+        upd = kops.grouped_moments(vf, gf, mf, G, center, impl=cfg.impl)
+        state = merge_moments_host(state, to_host(upd))
+        if use_hist:
+            hupd = kops.grouped_hist(vf, gf, mf, G, a, b,
+                                     nbins=cfg.hist_bins, impl=cfg.impl)
+            hist = hist + np.asarray(hupd.hist, np.float64)
+        return state, hist
 
     # -- cursor advance --------------------------------------------------------
 
@@ -318,46 +361,43 @@ class FastFrame:
             if len(idx):
                 processed[idx] = True
                 blocks_fetched += len(idx)
-                values, gids, mask = self._materialize(q, idx, value_src,
-                                                       gcol)
-                vf = jnp.asarray(values.reshape(-1))
-                gf = jnp.asarray(gids.reshape(-1))
-                mf = jnp.asarray(mask.reshape(-1).astype(np.float32))
-                upd = kops.grouped_moments(vf, gf, mf, G, center,
-                                           impl=cfg.impl)
-                state = merge_moments_host(state, to_host(upd))
-                if use_hist:
-                    hupd = kops.grouped_hist(vf, gf, mf, G, a, b,
-                                             nbins=cfg.hist_bins,
-                                             impl=cfg.impl)
-                    hist = hist + np.asarray(hupd.hist, np.float64)
+                state, hist = self._fold_blocks(q, idx, value_src, gcol, G,
+                                                center, a, b, state, hist,
+                                                use_hist)
                 seen_presence += presence[idx].sum(axis=0)
 
             r = int(cum_rows[pos - 1]) if pos > 0 else 0
-            exact |= (seen_presence >= presence_total) | (pos >= nb)
+            # Sweep exhaustion proves exactness only for untainted views: an
+            # untainted view's unprocessed blocks were all static-skipped
+            # (zero view rows), whereas a tainted view lost member rows to
+            # activity skips and must finish via the recovery pass below —
+            # collapsing it here would overwrite a valid frozen CI with a
+            # biased point estimate.
+            exact |= (seen_presence >= presence_total) | \
+                ((pos >= nb) & ~tainted)
 
             if exact_mode:
                 continue
 
-            # ---- 3. per-view CI refresh -------------------------------------
+            # ---- 3. per-view CI refresh (one batched call, no G-loop) ------
             dk = delta_schedule(delta_view, rounds)
-            counts, means, m2s = state.count, state.mean, state.m2
-            vmins, vmaxs = state.vmin, state.vmax
-            h_np = hist if use_hist else None
+            counts = state.count
             refresh = ~tainted & (counts > 0) & (active | ~refreshed)
-            for g in np.nonzero(refresh)[0]:
-                s = Stats(count=counts[g], mean=means[g], m2=m2s[g],
-                          vmin=vmins[g], vmax=vmaxs[g],
-                          hist=(h_np[g] if use_hist else None))
-                glo, ghi, gest = self._view_ci(q, s, a, b, r, R, dk,
-                                               known_n, bounder, cfg.alpha)
-                lo[g] = max(lo[g], glo)
-                hi[g] = min(hi[g], ghi)
-                est[g] = gest
-                refreshed[g] = True
+            gidx = np.nonzero(refresh)[0]
+            if gidx.size:
+                sb = StatsBatch(count=counts, mean=state.mean, m2=state.m2,
+                                vmin=state.vmin, vmax=state.vmax,
+                                hist=hist if use_hist else None).take(gidx)
+                glo, ghi, gest = _batched_view_ci(q, sb, a, b, r, R, dk,
+                                                  known_n, bounder,
+                                                  cfg.alpha)
+                lo[gidx] = np.maximum(lo[gidx], glo)
+                hi[gidx] = np.minimum(hi[gidx], ghi)
+                est[gidx] = gest
+                refreshed[gidx] = True
             pt_exact = exact & (counts > 0)
             if pt_exact.any():  # full coverage -> point interval
-                ex_est = self._exact_estimate(q, counts, means, R)
+                ex_est = self._exact_estimate(q, counts, state.mean, R)
                 lo[pt_exact] = hi[pt_exact] = est[pt_exact] = \
                     ex_est[pt_exact]
 
@@ -396,13 +436,9 @@ class FastFrame:
                 continue
             processed[idx] = True
             blocks_fetched += len(idx)
-            values, gids, mask = self._materialize(q, idx, value_src, gcol)
-            upd = kops.grouped_moments(
-                jnp.asarray(values.reshape(-1)),
-                jnp.asarray(gids.reshape(-1)),
-                jnp.asarray(mask.reshape(-1).astype(np.float32)),
-                G, center, impl=cfg.impl)
-            state = merge_moments_host(state, to_host(upd))
+            state, hist = self._fold_blocks(q, idx, value_src, gcol, G,
+                                            center, a, b, state, hist,
+                                            use_hist)
             seen_presence += presence[idx].sum(axis=0)
             exact |= seen_presence >= presence_total
             counts, means = state.count, state.mean
@@ -433,25 +469,8 @@ class FastFrame:
 
     # -- CI helpers -------------------------------------------------------------
 
-    def _view_ci(self, q: AggQuery, s: Stats, a, b, r, R, dk, known_n,
-                 bounder, alpha):
-        if q.agg == "count":
-            clo, chi = count_sum.count_ci(s.count, r, R, dk)
-            return clo, chi, s.count / max(r, 1) * R
-        if known_n:
-            alo, ahi = bounder.interval(s, a, b, R, dk)
-        else:
-            budget = dk if q.agg == "avg" else dk / 2.0
-            npl = count_sum.n_plus(s.count, r, R, (1 - alpha) * budget)
-            alo, ahi = bounder.interval(s, a, b, npl, alpha * budget)
-        if q.agg == "avg":
-            return alo, ahi, s.mean
-        # SUM = COUNT x AVG (paper §4.1)
-        cci = count_sum.count_ci(s.count, r, R, dk / 2.0)
-        slo, shi = count_sum.sum_ci(cci, (alo, ahi))
-        return slo, shi, s.mean * (s.count / max(r, 1)) * R
-
     def _exact_estimate(self, q, counts, means, R):
+        """Vectorized point estimate over fully-covered views."""
         if q.agg == "avg":
             return means
         if q.agg == "count":

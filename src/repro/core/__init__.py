@@ -30,7 +30,9 @@ from repro.core.state import (
     HistState,
     MomentState,
     Stats,
+    StatsBatch,
     downdate_extreme,
+    downdate_extreme_batch,
     hist_of_batch,
     init_hist,
     init_moments,

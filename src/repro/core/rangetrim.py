@@ -29,8 +29,10 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.bounders import Bounder
-from repro.core.state import Stats, downdate_extreme
+from repro.core.state import StatsBatch, downdate_extreme_batch
 
 __all__ = ["RangeTrimBounder"]
 
@@ -62,19 +64,23 @@ class RangeTrimBounder(Bounder):
         object.__setattr__(self, "has_pma", self.inner.has_pma)
         object.__setattr__(self, "has_phos", False)
 
-    def lbound(self, s: Stats, a: float, b: float, N: float,
-               delta: float) -> float:
+    def lbound_batch(self, s: StatsBatch, a, b, N, delta) -> np.ndarray:
         # NOTE: ``b`` is deliberately unused (PHOS elimination).
-        if s.count < 2:
-            return a  # cannot trim a 0/1-point sample; trivially valid
-        trimmed = downdate_extreme(s, "max")
-        return self.inner.lbound(trimmed, a, s.vmax, max(N - 1, trimmed.count),
-                                 delta)
+        a_arr = np.broadcast_to(np.asarray(a, np.float64), s.count.shape)
+        ok = s.count >= 2.0  # cannot trim a 0/1-point sample
+        trimmed = downdate_extreme_batch(s, "max")
+        # trimmed range: [a, max S]; dead lanes get a finite placeholder so
+        # the elementwise inner math stays warning-free (result discarded).
+        b_trim = np.where(ok, s.vmax, a_arr + 1.0)
+        n_trim = np.maximum(np.asarray(N, np.float64) - 1.0, trimmed.count)
+        lb = self.inner.lbound_batch(trimmed, a_arr, b_trim, n_trim, delta)
+        return np.where(ok, lb, a_arr)  # trivially valid for count < 2
 
-    def rbound(self, s: Stats, a: float, b: float, N: float,
-               delta: float) -> float:
-        if s.count < 2:
-            return b
-        trimmed = downdate_extreme(s, "min")
-        return self.inner.rbound(trimmed, s.vmin, b, max(N - 1, trimmed.count),
-                                 delta)
+    def rbound_batch(self, s: StatsBatch, a, b, N, delta) -> np.ndarray:
+        b_arr = np.broadcast_to(np.asarray(b, np.float64), s.count.shape)
+        ok = s.count >= 2.0
+        trimmed = downdate_extreme_batch(s, "min")
+        a_trim = np.where(ok, s.vmin, b_arr - 1.0)
+        n_trim = np.maximum(np.asarray(N, np.float64) - 1.0, trimmed.count)
+        rb = self.inner.rbound_batch(trimmed, a_trim, b_arr, n_trim, delta)
+        return np.where(ok, rb, b_arr)

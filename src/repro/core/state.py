@@ -257,6 +257,110 @@ class Stats:
         )
 
 
+# ---------------------------------------------------------------------------
+# Batched host snapshot: struct-of-arrays twin of ``Stats`` over G groups.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsBatch:
+    """Float64 snapshot of ``G`` independent aggregates (struct-of-arrays).
+
+    The batched twin of :class:`Stats`: every moment field is a float64
+    array of shape ``(G,)`` and ``hist`` (when present) is ``(G, K)``.  The
+    bound-evaluation layer (:mod:`repro.core.bounders`) operates on whole
+    batches so a round's CI refresh over 10k+ GROUP BY views is a handful of
+    numpy kernels instead of G scalar Python calls; the scalar :class:`Stats`
+    API survives as a size-1 view (``StatsBatch.from_stats`` / ``batch[g]``).
+    """
+
+    count: np.ndarray
+    mean: np.ndarray
+    m2: np.ndarray
+    vmin: np.ndarray
+    vmax: np.ndarray
+    hist: Optional[np.ndarray] = None  # (G, K) float64 counts over [a, b]
+
+    def __post_init__(self):
+        for f in ("count", "mean", "m2", "vmin", "vmax"):
+            object.__setattr__(self, f,
+                               np.atleast_1d(np.asarray(getattr(self, f),
+                                                        np.float64)))
+        if self.hist is not None:
+            h = np.asarray(self.hist, np.float64)
+            object.__setattr__(self, "hist", np.atleast_2d(h))
+
+    def __len__(self) -> int:
+        return self.count.shape[0]
+
+    def __getitem__(self, g: int) -> Stats:
+        """Scalar view of group ``g`` (copy; cheap, test/debug use)."""
+        return Stats(
+            count=float(self.count[g]), mean=float(self.mean[g]),
+            m2=float(self.m2[g]), vmin=float(self.vmin[g]),
+            vmax=float(self.vmax[g]),
+            hist=None if self.hist is None else self.hist[g].copy(),
+        )
+
+    @property
+    def variance(self) -> np.ndarray:
+        """Per-group \\hat{sigma}^2 = m2 / count (0 where count == 0)."""
+        return np.where(self.count > 0,
+                        self.m2 / np.maximum(self.count, 1.0), 0.0)
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.sqrt(np.maximum(self.variance, 0.0))
+
+    @staticmethod
+    def from_stats(s: Stats) -> "StatsBatch":
+        """Size-1 batch wrapping one scalar snapshot."""
+        return StatsBatch(count=[s.count], mean=[s.mean], m2=[s.m2],
+                          vmin=[s.vmin], vmax=[s.vmax],
+                          hist=None if s.hist is None else s.hist[None, :])
+
+    def take(self, idx) -> "StatsBatch":
+        """Sub-batch at ``idx`` (bool mask or index array); fields copied."""
+        return StatsBatch(
+            count=self.count[idx], mean=self.mean[idx], m2=self.m2[idx],
+            vmin=self.vmin[idx], vmax=self.vmax[idx],
+            hist=None if self.hist is None else self.hist[idx])
+
+    def reflect(self, a, b) -> "StatsBatch":
+        """Map x -> (a + b) - x per group; ``a``/``b`` scalar or (G,)."""
+        ab = np.asarray(a, np.float64) + np.asarray(b, np.float64)
+        h = None if self.hist is None else self.hist[:, ::-1].copy()
+        return StatsBatch(count=self.count, mean=ab - self.mean, m2=self.m2,
+                          vmin=ab - self.vmax, vmax=ab - self.vmin, hist=h)
+
+
+def downdate_extreme_batch(s: StatsBatch, which: str) -> StatsBatch:
+    """Batched Welford downdate: remove one occurrence of the per-group max
+    (``which='max'``) or min. Groups with ``count < 2`` collapse to the
+    empty state (matching :func:`downdate_extreme`); extremes are kept."""
+    ok = s.count >= 2.0
+    x = np.where(ok, s.vmax if which == "max" else s.vmin, 0.0)
+    n1 = np.where(ok, s.count - 1.0, 0.0)
+    safe = np.maximum(n1, 1.0)
+    mean1 = np.where(ok, (s.count * s.mean - x) / safe, 0.0)
+    m21 = np.where(ok, np.maximum(s.m2 - (x - s.mean) * (x - mean1), 0.0),
+                   0.0)
+    h = None
+    if s.hist is not None:
+        h = s.hist.copy()
+        pos = h > 0
+        hit = pos.any(axis=1) & ok
+        K = h.shape[1]
+        if which == "max":
+            k = (K - 1) - np.argmax(pos[:, ::-1], axis=1)
+        else:
+            k = np.argmax(pos, axis=1)
+        rows = np.nonzero(hit)[0]
+        h[rows, k[rows]] -= 1.0
+    return StatsBatch(count=n1, mean=mean1, m2=m21,
+                      vmin=s.vmin, vmax=s.vmax, hist=h)
+
+
 def downdate_extreme(s: Stats, which: str) -> Stats:
     """Remove one occurrence of the sample max (``which='max'``) or min from a
     Stats snapshot — the exact RangeTrim trim (DESIGN §2.1).

@@ -56,9 +56,6 @@ def compressed_psum(g: jax.Array, axes: Sequence[str]) -> jax.Array:
     Each participant quantizes against the *global* max scale (one scalar
     pmax — negligible), reduces the int32 payload, and dequantizes; the
     result equals psum(g) up to int8 rounding."""
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
     gmax = jax.lax.pmax(jnp.max(jnp.abs(g)), tuple(axes)) + 1e-30
     scale = gmax / 127.0
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)

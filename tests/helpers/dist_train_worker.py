@@ -89,9 +89,12 @@ def main():
                                        shard.named(mesh2, bspecs2)))
         with mesh2, logical_axis_rules(mesh2, default_rules(mesh2)):
             st2, m2 = jstep2(restored, batch)
-        # same step on the old mesh for comparison
+        # same step on the old mesh for comparison (the first jstep call's
+        # outputs carry compiler-chosen shardings; re-lay them out to the
+        # declared state spec before feeding them back in)
+        sh_state_in = jax.device_put(sh_state, shard.named(mesh, sspec))
         with mesh, logical_axis_rules(mesh, default_rules(mesh)):
-            st1, m1 = jstep(sh_state, batch)
+            st1, m1 = jstep(sh_state_in, batch)
         assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
     print("ELASTIC-RESTORE-OK", float(m2["loss"]))
 

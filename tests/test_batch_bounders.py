@@ -1,0 +1,249 @@
+"""Batch-vs-scalar equivalence of the vectorized bound-evaluation layer.
+
+The scalar ``Bounder`` API is a size-1 wrapper over the batched path, but
+the batched path contains genuinely different code (row-wise reversed
+cumsums, per-row argmax, ``np.where`` lane masking) whose indexing can
+break independently of the scalar view.  These tests drive randomized
+``StatsBatch`` inputs — including count==0/1/2 edge groups, RangeTrim
+wrapping, per-group N+ vectors, and Anderson/DKW histograms — and assert
+elementwise agreement with the scalar API to <= 1e-12, plus an engine
+regression: a high-cardinality GROUP BY query must return identical
+``(lo, hi, est)`` under the batched refresh and a scalar-loop oracle.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Stats,
+    StatsBatch,
+    downdate_extreme,
+    downdate_extreme_batch,
+    get_bounder,
+)
+from repro.core import count_sum
+from repro.core.bounders import BernsteinSerflingBounder
+
+A, B = -10.0, 50.0
+HIST_BINS = 128
+ATOL = 1e-12
+
+
+def _random_batch(rng, n_groups, hist_bins=None, ensure_edges=True):
+    """Random per-group Stats + the equivalent StatsBatch."""
+    stats = []
+    for g in range(n_groups):
+        if ensure_edges and g < 4:
+            n = g  # counts 0, 1, 2, 3: the degenerate/trim edge cases
+        else:
+            n = int(rng.integers(0, 200))
+        v = rng.uniform(A, B, n)
+        s = Stats.of_sample(v, hist_bins=hist_bins,
+                            hist_range=(A, B) if hist_bins else None)
+        if hist_bins and s.hist is None:  # empty sample: empty histogram
+            s = dataclasses.replace(s, hist=np.zeros(hist_bins))
+        stats.append(s)
+    batch = StatsBatch(
+        count=[s.count for s in stats], mean=[s.mean for s in stats],
+        m2=[s.m2 for s in stats], vmin=[s.vmin for s in stats],
+        vmax=[s.vmax for s in stats],
+        hist=np.stack([s.hist for s in stats]) if hist_bins else None)
+    return stats, batch
+
+
+def _all_bounders():
+    for name in ("hoeffding", "hoeffding_serfling", "bernstein",
+                 "anderson_dkw"):
+        yield get_bounder(name)
+    for name in ("hoeffding", "hoeffding_serfling", "bernstein"):
+        yield get_bounder(name, rangetrim=True)
+    yield BernsteinSerflingBounder(sigma=4.2)
+
+
+@pytest.mark.parametrize("bounder", list(_all_bounders()),
+                         ids=lambda b: b.name)
+@pytest.mark.parametrize("delta", [0.05, 1e-9])
+def test_interval_batch_matches_scalar(bounder, delta):
+    rng = np.random.default_rng(0)
+    hist_bins = HIST_BINS if "anderson" in bounder.name else None
+    stats, batch = _random_batch(rng, 64, hist_bins=hist_bins)
+    N = 50_000.0
+    lo_b, hi_b = bounder.interval_batch(batch, A, B, N, delta)
+    lb_b = bounder.lbound_batch(batch, A, B, N, delta)
+    rb_b = bounder.rbound_batch(batch, A, B, N, delta)
+    for g, s in enumerate(stats):
+        lo_s, hi_s = bounder.interval(s, A, B, N, delta)
+        assert abs(lo_s - lo_b[g]) <= ATOL, (g, lo_s, lo_b[g])
+        assert abs(hi_s - hi_b[g]) <= ATOL, (g, hi_s, hi_b[g])
+        assert abs(bounder.lbound(s, A, B, N, delta) - lb_b[g]) <= ATOL
+        assert abs(bounder.rbound(s, A, B, N, delta) - rb_b[g]) <= ATOL
+        assert lo_b[g] <= hi_b[g]
+
+
+@pytest.mark.parametrize("bounder", list(_all_bounders()),
+                         ids=lambda b: b.name)
+def test_interval_batch_per_group_n(bounder):
+    """N may be a per-group vector (the engine's Theorem-3 N+ path)."""
+    rng = np.random.default_rng(1)
+    hist_bins = HIST_BINS if "anderson" in bounder.name else None
+    stats, batch = _random_batch(rng, 48, hist_bins=hist_bins)
+    N = rng.uniform(500.0, 80_000.0, len(stats))
+    lo_b, hi_b = bounder.interval_batch(batch, A, B, N, 0.01)
+    for g, s in enumerate(stats):
+        lo_s, hi_s = bounder.interval(s, A, B, float(N[g]), 0.01)
+        assert abs(lo_s - lo_b[g]) <= ATOL
+        assert abs(hi_s - hi_b[g]) <= ATOL
+
+
+@pytest.mark.parametrize("which", ["max", "min"])
+def test_downdate_extreme_batch_matches_scalar(which):
+    rng = np.random.default_rng(2)
+    stats, batch = _random_batch(rng, 64, hist_bins=HIST_BINS)
+    down = downdate_extreme_batch(batch, which)
+    for g, s in enumerate(stats):
+        ds = downdate_extreme(s, which)
+        db = down[g]
+        assert abs(ds.count - db.count) <= ATOL
+        assert abs(ds.mean - db.mean) <= 1e-9 * max(1.0, abs(ds.mean))
+        assert abs(ds.m2 - db.m2) <= 1e-9 * max(1.0, ds.m2)
+        assert ds.vmin == db.vmin and ds.vmax == db.vmax
+        np.testing.assert_allclose(db.hist, ds.hist, atol=ATOL)
+
+
+def test_count_sum_vectorized_matches_scalar():
+    rng = np.random.default_rng(3)
+    R = 1_000_000.0
+    r = 12_345.0
+    m_v = np.concatenate([[0.0, 1.0], rng.integers(0, 12_000, 62)]
+                         ).astype(np.float64)
+    delta = 1e-6
+    lo_v, hi_v = count_sum.selectivity_ci(m_v, r, R, delta)
+    clo_v, chi_v = count_sum.count_ci(m_v, r, R, delta)
+    npl_v = count_sum.n_plus(m_v, r, R, delta)
+    avg_lo = rng.uniform(-5, 5, m_v.shape)
+    avg_hi = avg_lo + rng.uniform(0, 5, m_v.shape)
+    slo_v, shi_v = count_sum.sum_ci((clo_v, chi_v), (avg_lo, avg_hi))
+    for g in range(m_v.shape[0]):
+        lo_s, hi_s = count_sum.selectivity_ci(float(m_v[g]), r, R, delta)
+        assert abs(lo_s - lo_v[g]) <= ATOL and abs(hi_s - hi_v[g]) <= ATOL
+        clo_s, chi_s = count_sum.count_ci(float(m_v[g]), r, R, delta)
+        assert abs(clo_s - clo_v[g]) <= ATOL * R
+        assert abs(chi_s - chi_v[g]) <= ATOL * R
+        assert abs(count_sum.n_plus(float(m_v[g]), r, R, delta)
+                   - npl_v[g]) <= ATOL * R
+        slo_s, shi_s = count_sum.sum_ci(
+            (float(clo_s), float(chi_s)),
+            (float(avg_lo[g]), float(avg_hi[g])))
+        assert abs(slo_s - slo_v[g]) <= 1e-9 * max(1.0, abs(slo_s))
+        assert abs(shi_s - shi_v[g]) <= 1e-9 * max(1.0, abs(shi_s))
+    # scalar inputs keep returning plain floats (old contract)
+    lo_s, hi_s = count_sum.selectivity_ci(10.0, r, R, delta)
+    assert isinstance(lo_s, float) and isinstance(hi_s, float)
+    assert isinstance(count_sum.n_plus(10.0, r, R, delta), float)
+
+
+def test_anderson_dkw_rejects_per_group_range():
+    """Per-group [a, b] would reinterpret the pinned histogram grid; the
+    batch path must refuse loudly rather than truncate to group 0's range."""
+    rng = np.random.default_rng(4)
+    _, batch = _random_batch(rng, 4, hist_bins=HIST_BINS)
+    bd = get_bounder("anderson_dkw")
+    with pytest.raises(ValueError, match="uniform"):
+        bd.lbound_batch(batch, A, np.array([B, B, B, B + 1.0]), 1e4, 0.1)
+    # a uniform array range is fine (broadcast scalars take this path)
+    lb = bd.lbound_batch(batch, A, np.full(4, B), 1e4, 0.1)
+    assert lb.shape == (4,)
+
+
+def test_count_sum_array_population_size():
+    """R may be an array even when m_v/r are scalars (elementwise contract)."""
+    R = np.array([100.0, 200.0])
+    lo, hi = count_sum.count_ci(5.0, 10.0, R, 0.1)
+    assert lo.shape == (2,) and hi.shape == (2,)
+    for i, Ri in enumerate(R):
+        lo_s, hi_s = count_sum.count_ci(5.0, 10.0, float(Ri), 0.1)
+        assert abs(lo_s - lo[i]) <= ATOL * Ri and abs(hi_s - hi[i]) <= ATOL * Ri
+    assert count_sum.n_plus(5.0, 10.0, R, 0.1).shape == (2,)
+
+
+def test_count_sum_zero_rows_scanned():
+    assert count_sum.selectivity_ci(0.0, 0.0, 100.0, 0.1) == (0.0, 1.0)
+    assert count_sum.count_ci(0.0, 0.0, 100.0, 0.1) == (0.0, 100.0)
+    assert count_sum.n_plus(0.0, 0.0, 100.0, 0.1) == 100.0
+    lo, hi = count_sum.selectivity_ci(np.zeros(3), 0.0, 100.0, 0.1)
+    assert np.all(lo == 0.0) and np.all(hi == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine regression: batched refresh vs a per-group scalar-loop oracle.
+# ---------------------------------------------------------------------------
+
+
+def _scalar_loop_view_ci(q, sb, a, b, r, R, dk, known_n, bounder, alpha):
+    """The pre-refactor per-group Python loop, as a drop-in oracle for
+    ``engine._batched_view_ci``."""
+    n = len(sb)
+    lo = np.empty(n)
+    hi = np.empty(n)
+    est = np.empty(n)
+    for g in range(n):
+        s = sb[g]
+        if q.agg == "count":
+            clo, chi = count_sum.count_ci(s.count, r, R, dk)
+            lo[g], hi[g] = clo, chi
+            est[g] = s.count / max(r, 1) * R
+            continue
+        if known_n:
+            alo, ahi = bounder.interval(s, a, b, R, dk)
+        else:
+            budget = dk if q.agg == "avg" else dk / 2.0
+            npl = count_sum.n_plus(s.count, r, R, (1 - alpha) * budget)
+            alo, ahi = bounder.interval(s, a, b, npl, alpha * budget)
+        if q.agg == "avg":
+            lo[g], hi[g], est[g] = alo, ahi, s.mean
+        else:
+            cci = count_sum.count_ci(s.count, r, R, dk / 2.0)
+            slo, shi = count_sum.sum_ci(cci, (alo, ahi))
+            lo[g], hi[g] = slo, shi
+            est[g] = s.mean * (s.count / max(r, 1)) * R
+    return lo, hi, est
+
+
+@pytest.mark.parametrize("agg,bname,rt", [
+    ("avg", "bernstein", True),
+    ("sum", "hoeffding_serfling", False),
+    ("count", "bernstein", True),
+    ("avg", "anderson_dkw", False),
+])
+def test_engine_high_cardinality_regression(agg, bname, rt, monkeypatch):
+    """A high-cardinality GROUP BY query answers identically whether the
+    round refresh runs batched or as the old per-group scalar loop."""
+    from repro.aqp import (AggQuery, EngineConfig, FastFrame,
+                           build_scramble, engine)
+    from repro.core.optstop import AbsoluteWidth
+    from repro.data import flights
+
+    ds = flights.generate(n_rows=60_000, n_airports=48, n_airlines=8,
+                          seed=11)
+    frame = FastFrame(
+        build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                       seed=12),
+        EngineConfig(round_blocks=32, lookahead_blocks=128, hist_bins=256))
+    eps = 40.0 if agg == "avg" else 3e5
+    q = AggQuery(agg=agg,
+                 column=None if agg == "count" else "dep_delay",
+                 group_by=("origin", "airline"),  # G = 48 * 8 = 384 views
+                 stop=AbsoluteWidth(eps), bounder=bname, rangetrim=rt,
+                 delta=1e-6)
+
+    res_batched = frame.run(q, start_block=0, seed=5, max_rounds=50)
+    monkeypatch.setattr(engine, "_batched_view_ci", _scalar_loop_view_ci)
+    res_scalar = frame.run(q, start_block=0, seed=5, max_rounds=50)
+
+    np.testing.assert_array_equal(res_batched.lo, res_scalar.lo)
+    np.testing.assert_array_equal(res_batched.hi, res_scalar.hi)
+    np.testing.assert_array_equal(res_batched.estimate, res_scalar.estimate)
+    assert res_batched.rounds == res_scalar.rounds
+    assert res_batched.blocks_fetched == res_scalar.blocks_fetched

@@ -1,6 +1,9 @@
 """Welford state algebra: merge correctness, associativity, grouped shapes."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

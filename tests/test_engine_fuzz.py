@@ -8,6 +8,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

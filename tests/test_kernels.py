@@ -3,6 +3,7 @@ swept over shapes/dtypes, plus hypothesis invariants."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

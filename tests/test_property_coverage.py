@@ -5,6 +5,9 @@ delta should essentially never fail, so ANY failure in this fuzz is a bug.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
