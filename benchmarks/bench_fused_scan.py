@@ -1,0 +1,235 @@
+"""Microbenchmark: per-round scan pipeline (engine steps 1-2), fused vs
+the per-block and per-round reference paths.
+
+Sweeps the scramble size and measures scan throughput (covered blocks per
+second) of the steady-state round loop — cursor advance + activity probe
++ grouped-moment fold — isolated from the CI-refresh step, three ways
+over the same query:
+
+  * ``per_block``  — the paper-style naive walk the ISSUE motivates
+    against: one bitmap-probe dispatch and one fold dispatch *per block*,
+    with a host round-trip in between (this is what a direct port of the
+    paper's per-tuple ``update_state`` loop looks like at block
+    granularity);
+  * ``per_round``  — the engine's reference path (``EngineConfig(
+    fused=False)``): Python cursor loop, one probe dispatch per lookahead
+    batch, host materialization, one eager fold per round;
+  * ``fused``      — the fused superkernel path (default engine config):
+    one jitted dispatch + one host sync per round
+    (:func:`repro.kernels.fused_scan.fused_round`).
+
+The three drivers share the engine's own building blocks so they compute
+identical aggregates (asserted); ``fused`` vs ``per_round`` states are
+bitwise-equal by construction.  Results go to
+``benchmarks/results/BENCH_fused_scan.json`` and the
+``name,us_per_call,derived`` CSV contract is printed (derived = speedup
+vs per_block).
+
+Run: ``PYTHONPATH=src python benchmarks/bench_fused_scan.py [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp import AggQuery, EngineConfig, FastFrame, Filter, \
+    build_scramble
+from repro.aqp.bitmap import pack_mask
+from repro.aqp.engine import _FusedScan
+from repro.core.optstop import AbsoluteWidth
+from repro.core.state import init_moments_host, merge_moments_host, to_host
+from repro.data import flights
+
+BLOCK_ROWS = 256
+SWEEP_NB = (1024, 4096, 8192)
+PER_BLOCK_SAMPLE_ROUNDS = 3   # per_block is slow; extrapolate from a few
+
+
+class ScanHarness:
+    """One query's scan context, shared by the three drivers."""
+
+    def __init__(self, nb: int, hist: bool = False, seed: int = 7):
+        ds = flights.generate(n_rows=nb * BLOCK_ROWS, n_airports=120,
+                              n_airlines=14, seed=seed)
+        sc = build_scramble(ds.columns, catalog=ds.catalog,
+                            block_rows=BLOCK_ROWS, seed=seed + 1)
+        self.cfg = EngineConfig(round_blocks=64, lookahead_blocks=1024,
+                                hist_bins=256)
+        self.frame = FastFrame(sc, self.cfg)
+        self.q = AggQuery(
+            agg="avg", column="dep_delay", group_by="origin",
+            filters=(Filter("dep_time", "gt", 300.0),),
+            bounder="anderson_dkw" if hist else "bernstein",
+            rangetrim=not hist, stop=AbsoluteWidth(eps=1e-9), delta=1e-9)
+        f = self.frame
+        self.gcol, self.G = f._composite_group(self.q.group_cols)
+        self.value_src, (self.a, self.b) = f._values_and_bounds(self.q)
+        self.center = 0.5 * (self.a + self.b)
+        self.use_hist = hist
+        self.nb = sc.n_blocks
+        self.order = np.arange(self.nb)
+        self.static_ok, _ = f._static_ok(self.q)
+        self.group_bm = f.bitmap(self.gcol)
+        self.cover_cap = self.cfg.round_blocks * self.cfg.cover_cap_factor
+        # steady-state scan: every group still active (nothing skipped)
+        self.active_words = jnp.asarray(pack_mask(np.ones(self.G, bool)))
+        self.presence = np.ones((self.nb, self.G), bool)
+
+    def _fresh(self):
+        state = init_moments_host((self.G,))
+        hist = (np.zeros((self.G, self.cfg.hist_bins), np.float64)
+                if self.use_hist else None)
+        metrics = {"skipped_static": 0, "skipped_active": 0, "probes": 0}
+        return state, hist, np.zeros(self.G, bool), metrics
+
+    # -- drivers (each sweeps [0, stop_at) and returns the folded state) ----
+
+    def drive_per_block(self, stop_at: int):
+        """Naive walk: one probe + one fold dispatch per block."""
+        from repro.kernels import ops as kops
+        s = self
+        state, hist, tainted, _ = self._fresh()
+        pos = 0
+        while pos < stop_at:
+            blk = s.order[pos]
+            act = np.asarray(kops.active_blocks(
+                jnp.asarray(s.group_bm.words[blk:blk + 1]),
+                s.active_words, impl=s.cfg.impl)) > 0
+            if s.static_ok[blk] and act[0]:
+                state, hist = s.frame._fold_blocks(
+                    s.q, np.array([blk]), s.value_src, s.gcol, s.G,
+                    s.center, s.a, s.b, state, hist, s.use_hist)
+            pos += 1
+        return pos, state
+
+    def drive_per_round(self, stop_at: int):
+        """The engine's per-round reference path (fused=False)."""
+        s = self
+        state, hist, tainted, metrics = self._fresh()
+        pos = 0
+        while pos < stop_at:
+            idx, pos = s.frame._advance(
+                s.order, pos, s.static_ok, s.group_bm, s.active_words,
+                s.presence, tainted, s.cfg.lookahead_blocks,
+                s.cfg.round_blocks, s.cover_cap, True, metrics)
+            if len(idx):
+                state, hist = s.frame._fold_blocks(
+                    s.q, idx, s.value_src, s.gcol, s.G, s.center, s.a,
+                    s.b, state, hist, s.use_hist)
+        return pos, state
+
+    def drive_fused(self, stop_at: int):
+        """The fused superkernel path (one dispatch + one sync/round)."""
+        s = self
+        fs = getattr(self, "_fs", None)
+        if fs is None:
+            fs = self._fs = _FusedScan(
+                s.frame, s.q, s.value_src, s.gcol, s.G, s.center, s.a,
+                s.b, s.use_hist, True, s.cfg.lookahead_blocks,
+                s.cfg.round_blocks, s.cover_cap, s.static_ok, s.group_bm,
+                s.order)
+        state, hist, tainted, metrics = self._fresh()
+        pos = 0
+        while pos < stop_at:
+            upd, hupd, ok_w, flags_w, new_pos = fs.round(
+                pos, s.active_words)
+            s.frame._fused_accounting(
+                s.order, pos, new_pos, ok_w, flags_w, s.presence, tainted,
+                s.cfg.lookahead_blocks, s.cfg.round_blocks, s.cover_cap,
+                True, metrics)
+            pos = new_pos
+            state = merge_moments_host(state, to_host(upd))
+            if s.use_hist:
+                hist = hist + np.asarray(hupd, np.float64)
+        return pos, state
+
+
+def _blocks_per_s(drive, stop_at: int) -> float:
+    """Wall-time a sweep of [0, stop_at) scan positions."""
+    drive(min(stop_at, 256))          # warm-up / compile
+    t0 = time.perf_counter()
+    covered, _ = drive(stop_at)
+    return covered / (time.perf_counter() - t0)
+
+
+def run(sweep=SWEEP_NB, hist: bool = False):
+    rows = []
+    for nb in sweep:
+        h = ScanHarness(nb, hist=hist)
+        # steady-state region: stop before the scramble tail, where the
+        # reference path's shrinking lookahead batches force per-round
+        # XLA recompiles (the fused path's constant window never does —
+        # a design property, but it would skew a throughput comparison)
+        steady = max(nb - h.cfg.lookahead_blocks, 256)
+        bs_fused = _blocks_per_s(h.drive_fused, steady)
+        bs_round = _blocks_per_s(h.drive_per_round, steady)
+        bs_block = _blocks_per_s(
+            h.drive_per_block,
+            PER_BLOCK_SAMPLE_ROUNDS * h.cfg.round_blocks)
+        # same answer, all three ways: fused == per_round bitwise over the
+        # full sweep; per_block (per-block host merges) allclose over a
+        # shared 256-block prefix
+        _, st_f = h.drive_fused(nb)
+        _, st_r = h.drive_per_round(nb)
+        assert all(np.array_equal(x, y) for x, y in zip(st_f, st_r))
+        _, st_b = h.drive_per_block(256)
+        _, st_p = h.drive_per_round(256)
+        assert np.array_equal(st_b.count, st_p.count)
+        # f32 fold granularity differs (1-block vs 64-block partials)
+        assert np.allclose(st_b.mean, st_p.mean, rtol=1e-3, atol=1e-3)
+        rows.append(dict(
+            nb=nb, hist=hist, G=h.G, block_rows=BLOCK_ROWS,
+            fused_blocks_per_s=bs_fused,
+            per_round_blocks_per_s=bs_round,
+            per_block_blocks_per_s=bs_block,
+            speedup_vs_per_block=bs_fused / bs_block,
+            speedup_vs_per_round=bs_fused / bs_round,
+            bitwise_equal_per_round=True))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest scramble only (CI smoke)")
+    ap.add_argument("--hist", action="store_true",
+                    help="Anderson/DKW scenario (histogram fold included)")
+    args = ap.parse_args(argv)
+
+    sweep = SWEEP_NB[:1] if args.quick else SWEEP_NB
+    rows = run(sweep, hist=args.hist)
+
+    print(f"{'nb':>6s} {'fused':>10s} {'per_round':>10s} {'per_block':>10s}"
+          f" {'x/blk':>7s} {'x/rnd':>7s}   (blocks/sec)")
+    for r in rows:
+        print(f"{r['nb']:6d} {r['fused_blocks_per_s']:10.0f} "
+              f"{r['per_round_blocks_per_s']:10.0f} "
+              f"{r['per_block_blocks_per_s']:10.0f} "
+              f"{r['speedup_vs_per_block']:7.1f} "
+              f"{r['speedup_vs_per_round']:7.1f}")
+
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    report = dict(bench="fused_scan", block_rows=BLOCK_ROWS,
+                  hist=args.hist, rows=rows)
+    # --quick is a CI/dev smoke: don't clobber the committed full sweep
+    name = ("BENCH_fused_scan_quick.json" if args.quick
+            else "BENCH_fused_scan.json")
+    (out_dir / name).write_text(json.dumps(report, indent=1, default=float))
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        us = 1e6 / r["fused_blocks_per_s"]
+        print(f"fused_scan/nb={r['nb']}/fused,"
+              f"{us:.2f},{r['speedup_vs_per_block']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,34 +2,56 @@
 
 Builds a synthetic FLIGHTS relation, loads it into FastFrame (scramble +
 bitmap indexes), and answers an AVG query with the paper's Bernstein+RT
-bounder — early-stopping with a 1-1e-15 correctness guarantee.
+bounder — early-stopping with a 1-1e-15 correctness guarantee. The scan
+runs through the fused Pallas superkernel (one device dispatch per
+round); pass ``--per-block`` to use the reference path instead.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--rows N] [--per-block]
 """
+
+import argparse
 
 import numpy as np
 
-from repro.aqp import AggQuery, FastFrame, Filter, build_scramble
+from repro.aqp import (AggQuery, EngineConfig, FastFrame, Filter,
+                       build_scramble)
 from repro.core.optstop import RelativeWidth
 from repro.data import flights
 
-ds = flights.generate(n_rows=2_000_000, seed=0)
-frame = FastFrame(build_scramble(ds.columns, catalog=ds.catalog, seed=1))
 
-query = AggQuery(
-    agg="avg", column="dep_delay",
-    filters=(Filter("origin", "eq", 0),),
-    stop=RelativeWidth(eps=0.5),
-    bounder="bernstein", rangetrim=True, delta=1e-15)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=2_000_000,
+                    help="synthetic FLIGHTS rows (CI smoke uses fewer)")
+    ap.add_argument("--per-block", action="store_true",
+                    help="use the per-block reference scan path")
+    args = ap.parse_args(argv)
 
-res = frame.run(query, sampling="active_peek")
-truth = ds.columns["dep_delay"][ds.columns["origin"] == 0].mean()
+    ds = flights.generate(n_rows=args.rows, seed=0)
+    frame = FastFrame(
+        build_scramble(ds.columns, catalog=ds.catalog, seed=1),
+        EngineConfig(fused=not args.per_block))
 
-print(f"estimate : {res.estimate[0]:8.3f} minutes")
-print(f"CI       : [{res.lo[0]:.3f}, {res.hi[0]:.3f}]  (delta=1e-15)")
-tol = 1e-4 * abs(truth)  # f32 data path
-print(f"truth    : {truth:8.3f}  "
-      f"(covered: {res.lo[0] - tol <= truth <= res.hi[0] + tol})")
-print(f"fetched  : {res.blocks_fetched} / {frame.scramble.n_blocks} blocks "
-      f"({res.blocks_fetched/frame.scramble.n_blocks:.1%}), "
-      f"early stop: {res.stopped_early}")
+    query = AggQuery(
+        agg="avg", column="dep_delay",
+        filters=(Filter("origin", "eq", 0),),
+        stop=RelativeWidth(eps=0.5),
+        bounder="bernstein", rangetrim=True, delta=1e-15)
+
+    res = frame.run(query, sampling="active_peek")
+    truth = ds.columns["dep_delay"][ds.columns["origin"] == 0].mean()
+
+    print(f"estimate : {res.estimate[0]:8.3f} minutes")
+    print(f"CI       : [{res.lo[0]:.3f}, {res.hi[0]:.3f}]  (delta=1e-15)")
+    tol = 1e-4 * abs(truth)  # f32 data path
+    covered = res.lo[0] - tol <= truth <= res.hi[0] + tol
+    print(f"truth    : {truth:8.3f}  (covered: {covered})")
+    print(f"fetched  : {res.blocks_fetched} / {frame.scramble.n_blocks} "
+          f"blocks ({res.blocks_fetched / frame.scramble.n_blocks:.1%}), "
+          f"early stop: {res.stopped_early}")
+    assert covered, "interval failed to cover the truth"
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,17 @@ class BlockBitmap:
         return self.words.shape[1]
 
 
+def unpack_words(words: np.ndarray, cardinality: int) -> np.ndarray:
+    """Inverse of the word packing: ``(B, W)`` uint32 words -> ``(B, C)``
+    bool presence matrix. The engine uses this to turn a group bitmap
+    into the per-block view-presence matrix that drives taint accounting
+    and exactness tracking."""
+    u8 = words.astype("<u4").view(np.uint8)
+    bits = np.unpackbits(u8.reshape(words.shape[0], -1), axis=1,
+                         bitorder="little")
+    return bits[:, :cardinality].astype(bool)
+
+
 def pack_mask(mask: np.ndarray) -> np.ndarray:
     """Boolean (C,) category mask -> packed (ceil(C/32),) uint32 words."""
     c = mask.shape[0]

@@ -4,12 +4,29 @@ Per round (Algorithm 5 at block granularity, §4.2/§4.3):
   1. advance the scan cursor through the shuffled block order, using the
      static predicate bitmap and the (group-bitmap AND active-mask) lookahead
      kernel to *skip* blocks that cannot help any active view;
-  2. fetch the selected blocks and fold them into the per-group mergeable
-     moment states (``repro.kernels.grouped_moments`` — the Pallas hot path);
+  2. fold the selected blocks into the per-group mergeable moment states
+     (+ the DKW histogram when the Anderson/DKW bounder is in play);
   3. re-evaluate per-view CIs at delta_k = (6/pi^2) delta_view / k^2 with the
      Theorem-3 ``N+`` upper bound standing in for the unknown view size;
   4. intersect with the running interval, update the active mask from the
      query's stopping condition, and stop when no view is active.
+
+Steps 1–2 have two implementations sharing the same semantics (bitwise
+identical on the shared fold backends — see ``EngineConfig.fused``):
+
+  * **fused** (default, ``EngineConfig.fused=True``): the query's value
+    column, predicate mask and group codes are materialized once and kept
+    device-resident; each round is ONE dispatch of the
+    :func:`repro.kernels.fused_scan.fused_round` superkernel (activity
+    test -> budgeted selection -> gather -> moment/histogram fold), and
+    the host syncs once per round to merge the emitted
+    ``StatsBatch``-compatible deltas and run the soundness bookkeeping;
+  * **per-block reference** (``fused=False``): the original path — a
+    Python cursor loop issuing separate bitmap-probe and fold dispatches
+    per lookahead batch with host materialization in between. It is kept
+    as the oracle the fused path is tested bitwise against
+    (``tests/test_fused_scan.py``) and as the baseline for
+    ``benchmarks/bench_fused_scan.py``.
 
 Soundness bookkeeping beyond the paper's prose:
   * ``tainted`` views: a view that occurred in an *activity-skipped* block
@@ -34,7 +51,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.aqp.bitmap import BlockBitmap, build_bitmap, pack_mask
+from repro.aqp.bitmap import (BlockBitmap, build_bitmap, pack_mask,
+                              unpack_words)
 from repro.aqp.query import AggQuery, Expression, QueryResult
 from repro.aqp.scramble import Scramble
 from repro.core import count_sum
@@ -42,6 +60,7 @@ from repro.core.bounders import get_bounder
 from repro.core.optstop import delta_schedule
 from repro.core.state import (StatsBatch, init_moments_host,
                               merge_moments_host, to_host)
+from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
 _ALPHA = count_sum.ALPHA_DEFAULT
@@ -70,16 +89,34 @@ def _batched_view_ci(q: AggQuery, sb: StatsBatch, a, b, r, R, dk,
     return slo, shi, sb.mean * (sb.count / max(r, 1)) * R
 
 
-def _unpack_words(words: np.ndarray, cardinality: int) -> np.ndarray:
-    """(B, W) uint32 -> (B, C) bool presence matrix."""
-    u8 = words.astype("<u4").view(np.uint8)
-    bits = np.unpackbits(u8.reshape(words.shape[0], -1), axis=1,
-                         bitorder="little")
-    return bits[:, :cardinality].astype(bool)
-
-
 @dataclasses.dataclass
 class EngineConfig:
+    """Engine tuning knobs (defaults follow the paper's §4.3 settings).
+
+    Attributes:
+        round_blocks: processed-block budget per OptStop round — the number
+            of blocks folded into the states between two CI refreshes.
+        lookahead_blocks: ActivePeek bitmap-probe batch (paper §4.3).
+        sync_lookahead_blocks: ActiveSync probe batch (the paper's
+            cache-unfriendly synchronous variant).
+        cover_cap_factor: cap on cursor positions covered per round, as a
+            multiple of ``round_blocks`` (bounds per-round skip scanning).
+        hist_bins: DKW histogram resolution (Anderson/DKW bounder only).
+        alpha: COUNT/AVG delta split for unknown-``N`` SUM/AVG queries.
+        impl: kernel backend — ``'pallas'`` (compiled, TPU),
+            ``'interpret'`` (Pallas interpreter), ``'ref'`` (pure-jnp
+            oracle) or ``None`` = auto (pallas on TPU, ref elsewhere).
+        fused: drive scan rounds through the fused superkernel
+            (:mod:`repro.kernels.fused_scan`, one dispatch + one host sync
+            per round). ``False`` falls back to the per-block reference
+            path. Results are bitwise identical either way on the shared
+            fold backends (``impl='ref'``, the off-TPU default, and any
+            backend when no histogram is required); the Anderson/DKW
+            histogram fold under ``impl='pallas'|'interpret'`` uses the
+            combined superkernel's smaller tiles, so it agrees only to
+            f32 tile-order rounding.
+    """
+
     round_blocks: int = 64          # processed-block budget per round
     lookahead_blocks: int = 1024    # ActivePeek batch (paper §4.3)
     sync_lookahead_blocks: int = 32 # ActiveSync batch (cache-unfriendly)
@@ -87,10 +124,89 @@ class EngineConfig:
     hist_bins: int = 1024
     alpha: float = _ALPHA
     impl: Optional[str] = None      # kernel impl: pallas | interpret | ref
+    fused: bool = True              # fused scan superkernel (vs per-block)
+
+
+class _FusedScan:
+    """Device-resident scan context for one query: materializes the value
+    column, predicate mask, group codes and bitmap words once, then drives
+    :func:`repro.kernels.fused_scan.fused_round` — one device dispatch and
+    one host sync per round.
+
+    Materialization is identical (bitwise) to the per-block reference
+    path's per-round ``_materialize``: predicates and value expressions
+    are elementwise, so evaluating them over the full blocked columns and
+    gathering on device yields the same rows the reference gathers on
+    host.
+    """
+
+    def __init__(self, frame: "FastFrame", q: AggQuery, value_src, gcol,
+                 G: int, center: float, a: float, b: float, use_hist: bool,
+                 probe: bool, lookahead: int, budget: int, cover_cap: int,
+                 static_ok: np.ndarray, group_bm, order: np.ndarray):
+        sc = frame.scramble
+        nb = sc.n_blocks
+        # Maximum cursor coverage per round: the reference path accumulates
+        # whole lookahead batches until the cover cap (then clamps to nb).
+        window = lookahead * (-(-cover_cap // lookahead))
+        window = min(window, lookahead * (-(-nb // lookahead)))
+        self.window = window
+        self.budget = budget
+        self.nb = nb
+        self.probe = probe
+        self.use_hist = use_hist
+        self.center = float(center)
+        self.a = float(a)
+        self.b = float(b)
+        self.G = G
+        self.nbins = frame.config.hist_bins
+        self.impl = kops.resolve_impl(frame.config.impl)
+
+        mask = sc.valid.copy()
+        for f in q.filters:
+            mask &= f.evaluate(sc.columns)
+        if isinstance(value_src, Expression):
+            values = value_src.evaluate(sc.columns)
+        elif isinstance(value_src, str):
+            values = sc.columns[value_src].astype(np.float32)
+        else:  # COUNT: value column unused
+            values = np.zeros(sc.valid.shape, np.float32)
+        gids = (sc.columns[gcol].astype(np.int32) if gcol is not None
+                else np.zeros(sc.valid.shape, np.int32))
+
+        self.values = jnp.asarray(values, jnp.float32)
+        self.gids = jnp.asarray(gids)
+        self.mask = jnp.asarray(mask.astype(np.float32))
+        self.words = (jnp.asarray(group_bm.words) if group_bm is not None
+                      else jnp.zeros((1, 1), jnp.uint32))
+        opad = np.zeros(nb + window, np.int32)
+        opad[:nb] = order
+        self.order_pad = jnp.asarray(opad)
+        self.static_ok = jnp.asarray(static_ok)
+        self._dummy_active = jnp.zeros(self.words.shape[1], jnp.uint32)
+
+    def round(self, pos: int, active_words):
+        """One fused round from cursor ``pos``. Returns host-side
+        ``(moment_delta, hist_delta, ok, flags, new_pos)``."""
+        aw = active_words if active_words is not None else self._dummy_active
+        state, hist, ok, flags, new_pos = kfused.fused_round(
+            self.values, self.gids, self.mask, self.words, self.order_pad,
+            self.static_ok, jnp.asarray(pos, jnp.int32), aw,
+            nb=self.nb, window=self.window, budget=self.budget,
+            center=self.center, a=self.a, b=self.b, num_groups=self.G,
+            nbins=self.nbins, use_hist=self.use_hist, probe=self.probe,
+            impl=self.impl)
+        return (state, hist, np.asarray(ok), np.asarray(flags),
+                int(new_pos))
 
 
 class FastFrame:
-    """Sampling-optimized in-memory column store (paper §4)."""
+    """Sampling-optimized in-memory column store (paper §4).
+
+    Wraps a :class:`~repro.aqp.scramble.Scramble` with block bitmap
+    indexes and the OptStop round loop; :meth:`run` answers one
+    :class:`~repro.aqp.query.AggQuery` with anytime-valid intervals.
+    """
 
     def __init__(self, scramble: Scramble, config: EngineConfig = None):
         self.scramble = scramble
@@ -261,6 +377,35 @@ class FastFrame:
                else np.zeros(0, dtype=np.int64))
         return idx, new_pos
 
+    def _fused_accounting(self, order, pos, new_pos, ok, flags, presence,
+                          tainted, lookahead, budget, cover_cap, probe,
+                          metrics):
+        """Host-side bookkeeping for one fused round: replicates the
+        reference `_advance` skip/taint/probe accounting bit-for-bit from
+        the per-position verdicts the kernel returned, and materializes
+        the selected block ids."""
+        nb = order.shape[0]
+        if probe:
+            # probe metric: the reference path probes whole lookahead
+            # batches until the budget is met (or cap/end reached)
+            win_len = min(len(flags), nb - pos)
+            total, p = 0, 0
+            while total < budget and p < win_len and p < cover_cap:
+                end = min(p + lookahead, win_len)
+                metrics["probes"] += end - p
+                total += int(flags[p:end].sum())
+                p = end
+        covered = new_pos - pos
+        okc, flagsc = ok[:covered], flags[:covered]
+        metrics["skipped_static"] += int((~okc).sum())
+        act_skip = okc & ~flagsc
+        metrics["skipped_active"] += int(act_skip.sum())
+        if act_skip.any():
+            tainted |= presence[order[pos:new_pos][act_skip]].any(axis=0)
+        sel = np.nonzero(flagsc)[0][:budget]
+        return (order[pos + sel] if sel.size
+                else np.zeros(0, dtype=np.int64))
+
     # -- main entry ------------------------------------------------------------
 
     def run(self, q: AggQuery, sampling: str = "active_peek",
@@ -268,7 +413,23 @@ class FastFrame:
             max_rounds: int = 100_000) -> QueryResult:
         """Execute one aggregate query.
 
-        sampling: 'active_peek' | 'active_sync' | 'scan' | 'exact'
+        Args:
+            q: the query (aggregate, filters, GROUP BY, stopping
+                condition, bounder configuration).
+            sampling: scan strategy — ``'active_peek'`` (batched bitmap
+                lookahead, paper §4.3), ``'active_sync'`` (synchronous
+                probes), ``'scan'`` (no activity skipping) or ``'exact'``
+                (full sequential sweep, the paper's strawman baseline;
+                also forced when ``q.stop is None``).
+            start_block: scan start position (default: random from
+                ``seed``); the scan order wraps around the scramble.
+            seed: RNG seed for the scan start.
+            max_rounds: hard cap on OptStop rounds (safety valve).
+
+        Returns:
+            :class:`~repro.aqp.query.QueryResult` with per-group
+            estimates, anytime-valid ``(1 - q.delta)`` intervals and scan
+            metrics.
         """
         t0 = time.perf_counter()
         cfg = self.config
@@ -294,7 +455,7 @@ class FastFrame:
 
         static_ok, probes0 = self._static_ok(q)
         group_bm = self.bitmap(gcol) if gcol is not None else None
-        presence = (_unpack_words(group_bm.words, G) if group_bm is not None
+        presence = (unpack_words(group_bm.words, G) if group_bm is not None
                     else np.ones((nb, 1), dtype=bool))
         presence_total = presence.sum(axis=0)
 
@@ -342,28 +503,50 @@ class FastFrame:
         active = ~exact
         active_words = (jnp.asarray(pack_mask(active)) if gcol is not None
                         else None)
+        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
+        fscan = None
+        if cfg.fused and not exact_mode:
+            probe = skipping and group_bm is not None
+            fscan = _FusedScan(self, q, value_src, gcol, G, center, a, b,
+                               use_hist, probe, lookahead,
+                               cfg.round_blocks, cover_cap, static_ok,
+                               group_bm if probe else None, order)
 
         while pos < nb and rounds < max_rounds:
             rounds += 1
-            # ---- 1. cursor advance -----------------------------------------
+            # ---- 1+2. cursor advance + fold --------------------------------
+            upd = hupd = None
             if exact_mode:
                 end = min(pos + cfg.lookahead_blocks, nb)
                 idx = order[pos:end]  # full sweep, no skipping (strawman)
                 pos = end
+            elif fscan is not None:
+                # fused: one device dispatch + one host sync per round
+                upd, hupd, ok_w, flags_w, new_pos = \
+                    fscan.round(pos, active_words)
+                idx = self._fused_accounting(
+                    order, pos, new_pos, ok_w, flags_w, presence, tainted,
+                    lookahead, cfg.round_blocks, cover_cap, fscan.probe,
+                    metrics)
+                pos = new_pos
             else:
                 idx, pos = self._advance(
                     order, pos, static_ok, group_bm, active_words, presence,
-                    tainted, lookahead, cfg.round_blocks,
-                    cfg.round_blocks * cfg.cover_cap_factor, skipping,
-                    metrics)
+                    tainted, lookahead, cfg.round_blocks, cover_cap,
+                    skipping, metrics)
 
-            # ---- 2. fold blocks into states --------------------------------
             if len(idx):
                 processed[idx] = True
                 blocks_fetched += len(idx)
-                state, hist = self._fold_blocks(q, idx, value_src, gcol, G,
-                                                center, a, b, state, hist,
-                                                use_hist)
+                if upd is not None:
+                    # merge the fused round's mergeable deltas
+                    state = merge_moments_host(state, to_host(upd))
+                    if use_hist:
+                        hist = hist + np.asarray(hupd, np.float64)
+                else:
+                    state, hist = self._fold_blocks(q, idx, value_src, gcol,
+                                                    G, center, a, b, state,
+                                                    hist, use_hist)
                 seen_presence += presence[idx].sum(axis=0)
 
             r = int(cum_rows[pos - 1]) if pos > 0 else 0
@@ -385,9 +568,8 @@ class FastFrame:
             refresh = ~tainted & (counts > 0) & (active | ~refreshed)
             gidx = np.nonzero(refresh)[0]
             if gidx.size:
-                sb = StatsBatch(count=counts, mean=state.mean, m2=state.m2,
-                                vmin=state.vmin, vmax=state.vmax,
-                                hist=hist if use_hist else None).take(gidx)
+                sb = StatsBatch.from_state(
+                    state, hist if use_hist else None).take(gidx)
                 glo, ghi, gest = _batched_view_ci(q, sb, a, b, r, R, dk,
                                                   known_n, bounder,
                                                   cfg.alpha)
@@ -459,6 +641,7 @@ class FastFrame:
         return QueryResult(
             group_codes=np.arange(G), estimate=est, lo=lo, hi=hi,
             count_seen=counts, nonempty=nonempty, exact=exact,
+            tainted=tainted,
             rows_covered=int(cum_rows[pos - 1]) if pos else 0,
             blocks_fetched=blocks_fetched,
             blocks_skipped_active=metrics["skipped_active"],

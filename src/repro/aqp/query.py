@@ -77,7 +77,25 @@ class Expression:
 
 @dataclasses.dataclass(frozen=True)
 class AggQuery:
-    """One aggregate query (one Figure-5 template instance)."""
+    """One aggregate query (one Figure-5 template instance).
+
+    Attributes:
+        agg: aggregate function — ``'avg'`` | ``'sum'`` | ``'count'``.
+        column: value column name, or an :class:`Expression` over several
+            columns (Appendix B); unused for COUNT.
+        filters: conjunction of row predicates (:class:`Filter`).
+        group_by: optional GROUP BY column, or a tuple of columns for a
+            composite grouping.
+        stop: the :class:`~repro.core.optstop.StoppingCondition` that ends
+            sampling (HAVING / ORDER BY ... LIMIT / accuracy targets are
+            all expressed this way); ``None`` forces exact processing.
+        bounder: SSI bounder name (see
+            :func:`repro.core.bounders.get_bounder`).
+        rangetrim: wrap the bounder in the RangeTrim asymmetrization
+            (the paper's best configuration with ``'bernstein'``).
+        delta: total failure probability budget; the returned intervals
+            all hold simultaneously w.p. >= 1 - delta (Theorem 4).
+    """
 
     agg: str                                   # 'avg' | 'sum' | 'count'
     column: Optional[Union[str, Expression]] = None
@@ -103,7 +121,17 @@ class AggQuery:
 
 @dataclasses.dataclass
 class QueryResult:
-    """Engine output: per-group estimates + (1-delta) intervals + metrics."""
+    """Engine output: per-group estimates + (1-delta) intervals + metrics.
+
+    ``[lo[g], hi[g]]`` contains view ``g``'s true aggregate for ALL groups
+    simultaneously w.p. >= 1 - delta (anytime-valid: the guarantee is
+    unaffected by the data-dependent stopping rule). ``exact`` views were
+    fully covered and collapse to a point; ``tainted`` views lost their
+    clean scan prefix to an activity skip and carry the last clean
+    (frozen) interval unless the recovery pass finished them exactly.
+    The scan metrics (``blocks_*``, ``bitmap_probes``, ``rounds``) feed
+    the paper's Table-5/Figure-7 style comparisons.
+    """
 
     group_codes: np.ndarray       # (G,) composite codes (or [0])
     estimate: np.ndarray          # (G,)
@@ -112,6 +140,7 @@ class QueryResult:
     count_seen: np.ndarray        # (G,) sample rows per view
     nonempty: np.ndarray          # (G,) bool: view observed at least once
     exact: np.ndarray             # (G,) bool: view fully covered (exact)
+    tainted: np.ndarray           # (G,) bool: clean scan prefix broken
     rows_covered: int
     blocks_fetched: int
     blocks_skipped_active: int

@@ -276,8 +276,18 @@ _REGISTRY = {
 
 
 def get_bounder(name: str, rangetrim: bool = False) -> Bounder:
-    """Bounder factory: ``get_bounder('bernstein', rangetrim=True)`` is the
-    paper's best configuration (Bernstein+RT: no PMA, no PHOS)."""
+    """Bounder factory.
+
+    Args:
+        name: one of ``'hoeffding'``, ``'hoeffding_serfling'``,
+            ``'bernstein'`` (Empirical-Bernstein-Serfling) or
+            ``'anderson_dkw'`` (requires histogram state).
+        rangetrim: wrap the base bounder in the RangeTrim
+            asymmetrization (exact Welford downdate of the sample
+            extreme at bound-evaluation time).
+
+    ``get_bounder('bernstein', rangetrim=True)`` is the paper's best
+    configuration (Bernstein+RT: no PMA, no PHOS pathologies)."""
     from repro.core.rangetrim import RangeTrimBounder  # cycle guard
 
     base = _REGISTRY[name]

@@ -319,6 +319,21 @@ class StatsBatch:
                           vmin=[s.vmin], vmax=[s.vmax],
                           hist=None if s.hist is None else s.hist[None, :])
 
+    @staticmethod
+    def from_state(state: MomentState,
+                   hist: Optional[np.ndarray] = None) -> "StatsBatch":
+        """Float64 snapshot of a ``(G,)``-shaped :class:`MomentState`
+        (+ optional ``(G, K)`` histogram counts) — the engine's per-round
+        bridge from the kernel-side mergeable states (e.g. the fused scan
+        superkernel's deltas) to the batched bound evaluator."""
+        return StatsBatch(
+            count=np.asarray(state.count, np.float64),
+            mean=np.asarray(state.mean, np.float64),
+            m2=np.asarray(state.m2, np.float64),
+            vmin=np.asarray(state.vmin, np.float64),
+            vmax=np.asarray(state.vmax, np.float64),
+            hist=None if hist is None else np.asarray(hist, np.float64))
+
     def take(self, idx) -> "StatsBatch":
         """Sub-batch at ``idx`` (bool mask or index array); fields copied."""
         return StatsBatch(

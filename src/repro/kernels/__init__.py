@@ -1,6 +1,10 @@
 """repro.kernels — Pallas TPU kernels for the scan hot path (block-level
-group aggregation, DKW histograms, bitmap lookahead) with jnp oracles."""
+group aggregation, DKW histograms, bitmap lookahead, and the fused
+per-round scan superkernel) with jnp oracles."""
 
-from repro.kernels.ops import active_blocks, grouped_hist, grouped_moments
+from repro.kernels.ops import (active_blocks, grouped_hist, grouped_moments,
+                               moments_from_sums, resolve_impl)
+from repro.kernels.fused_scan import fused_fold, fused_round
 
-__all__ = ["active_blocks", "grouped_hist", "grouped_moments"]
+__all__ = ["active_blocks", "fused_fold", "fused_round", "grouped_hist",
+           "grouped_moments", "moments_from_sums", "resolve_impl"]

@@ -23,12 +23,17 @@ from jax.experimental import pallas as pl
 BLOCK_TILE = 1024  # blocks per grid step
 
 
-def _kernel(bitmap_ref, active_ref, out_ref):
-    bm = bitmap_ref[...]                       # (Bt, W) uint32
-    act = active_ref[...]                      # (1, W) uint32
+def tile_hit_any(bm, act):
+    """(Bt, W) uint32 words AND the (1, W) active mask -> (Bt, 1) int32
+    flags. Shared by this kernel and the fused scan superkernel's
+    activity stage."""
     hit = jnp.bitwise_and(bm, act)
     any_hit = jnp.max(hit, axis=1, keepdims=True)  # uint32 max: 0 iff none
-    out_ref[...] = (any_hit > 0).astype(jnp.int32)
+    return (any_hit > 0).astype(jnp.int32)
+
+
+def _kernel(bitmap_ref, active_ref, out_ref):
+    out_ref[...] = tile_hit_any(bitmap_ref[...], active_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block_tile", "interpret"))

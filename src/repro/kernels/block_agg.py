@@ -38,6 +38,31 @@ ROW_TILE = 2048   # rows per grid step (must be a multiple of 128)
 GROUP_TILE = 256  # groups per grid step (must be a multiple of 128)
 
 
+def tile_moments(v, gid, m, center, gbase, gt):
+    """Per-tile moment math shared by this kernel and the fused scan
+    superkernel (:mod:`repro.kernels.fused_scan`).
+
+    Inputs are flat (R,) tile vectors; returns the MXU partial
+    ``(3, gt)`` = (count, dsum, dsq), the VPU min/max partials
+    ``(1, gt)``, and the masked group one-hot ``(R, gt)`` so callers can
+    reuse it (the fused kernel feeds it to the histogram matmul).
+    """
+    group_ids = gbase + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)
+    onehot = (gid[:, None] == group_ids).astype(jnp.float32) * m[:, None]
+
+    dv = v - center
+    rows = jnp.stack([jnp.ones_like(v), dv, dv * dv])          # (3, R)
+    partial = jax.lax.dot(rows, onehot,
+                          preferred_element_type=jnp.float32)  # (3, Gt) MXU
+
+    sel = onehot > 0.0
+    vmin_p = jnp.min(jnp.where(sel, v[:, None], jnp.inf), axis=0,
+                     keepdims=True)
+    vmax_p = jnp.max(jnp.where(sel, v[:, None], -jnp.inf), axis=0,
+                     keepdims=True)
+    return partial, vmin_p, vmax_p, onehot
+
+
 def _kernel(center_ref, values_ref, gids_ref, mask_ref,
             sums_ref, vmin_ref, vmax_ref):
     r = pl.program_id(1)
@@ -49,20 +74,7 @@ def _kernel(center_ref, values_ref, gids_ref, mask_ref,
     gid = gids_ref[...].reshape(-1)
     m = mask_ref[...].reshape(-1).astype(jnp.float32)
 
-    gbase = g * gt
-    group_ids = gbase + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)
-    onehot = (gid[:, None] == group_ids).astype(jnp.float32) * m[:, None]
-
-    dv = v - c
-    rows = jnp.stack([jnp.ones_like(v), dv, dv * dv])          # (3, R)
-    partial = jax.lax.dot(rows, onehot,
-                          preferred_element_type=jnp.float32)  # (3, Gt) MXU
-
-    sel = onehot > 0.0
-    vmin_p = jnp.min(jnp.where(sel, v[:, None], jnp.inf), axis=0,
-                     keepdims=True)
-    vmax_p = jnp.max(jnp.where(sel, v[:, None], -jnp.inf), axis=0,
-                     keepdims=True)
+    partial, vmin_p, vmax_p, _ = tile_moments(v, gid, m, c, g * gt, gt)
 
     @pl.when(r == 0)
     def _init():

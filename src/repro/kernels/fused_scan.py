@@ -1,0 +1,252 @@
+"""Fused Pallas scan superkernel: one device dispatch per OptStop round.
+
+The engine's per-round scan work used to be three separate dispatches with
+host round-trips between them: the (group-bitmap AND active-mask) activity
+probe (``bitmap_active``), the grouped-moment fold (``block_agg``) and the
+per-group histogram update (``hist``), glued together by a Python loop
+that walked the scramble block-batch by block-batch. :func:`fused_round`
+fuses the whole round — cursor window slice, activity test, budgeted
+block selection, device-side gather, moment fold and histogram fold —
+into a single jitted computation over *device-resident* column data, so
+the host syncs exactly once per round (to fetch the mergeable deltas and
+the per-position flags it needs for soundness bookkeeping).
+
+Pipeline (all on device)::
+
+    order[pos : pos+window] ──> static_ok ──┐
+    bitmap.words[window]  ──ActiveTest──────┴─> flags ──cumsum──> take mask
+                                                           │         │
+                                                      new_pos   gather blocks
+                                                                     │
+                                     MomentState delta  <──fold──────┤
+                                     hist delta         <──fold──────┘
+
+Selection reproduces the reference cursor semantics bit-for-bit: the round
+takes the first ``budget`` blocks whose static prefilter AND activity test
+pass, and the cursor stops just past the budget-th selected block (or at
+the window end).  The fold then sees exactly the rows the per-block
+reference path would fold, in the same order, so moment/histogram deltas
+are bitwise identical (padding lanes carry ``mask == 0`` and contribute
+exact zeros).
+
+Backends (same selector as :mod:`repro.kernels.ops`):
+
+  * ``impl='ref'``       — the fold reuses the pure-jnp oracles (XLA
+    fuses the whole round into one CPU computation; default off-TPU);
+  * ``impl='pallas'``    — :func:`fused_fold`, a single ``pallas_call``
+    whose grid revisits each group tile across row tiles; Pallas's
+    pipeline machinery double-buffers the HBM->VMEM tile copies so the
+    moment + histogram matmuls of row tile ``r`` overlap the copy-in of
+    row tile ``r+1`` (one double-buffered pass over block data);
+  * ``impl='interpret'`` — the same superkernel under the Pallas
+    interpreter (CPU-testable).
+
+VMEM per program at the defaults (ROW_TILE=1024, GROUP_TILE=128,
+nbins<=2048): group one-hot 0.5 MiB + bin one-hot <= 8 MiB + hist output
+block <= 1 MiB — under the ~16 MiB/core budget of TPU v5e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import bitmap_active as _bitmap
+from repro.kernels import block_agg as _block_agg
+from repro.kernels import hist as _hist
+from repro.kernels import ops as kops
+
+ROW_TILE = 1024   # rows per grid step (multiple of 128)
+GROUP_TILE = 128  # groups per grid step (multiple of 128)
+
+
+def _fold_kernel(scale_ref, values_ref, gids_ref, mask_ref,
+                 sums_ref, vmin_ref, vmax_ref, hist_ref):
+    """Moments + histogram in one pass: the group one-hot is built once
+    per (group, row) tile and feeds both MXU matmuls."""
+    r = pl.program_id(1)
+    g = pl.program_id(0)
+    gt = sums_ref.shape[1]
+    kt = hist_ref.shape[1]
+
+    c = scale_ref[0, 0]
+    a = scale_ref[0, 1]
+    inv_width = scale_ref[0, 2]
+    nbins_data = scale_ref[0, 3]
+
+    v = values_ref[...].reshape(-1)
+    gid = gids_ref[...].reshape(-1)
+    m = mask_ref[...].reshape(-1).astype(jnp.float32)
+
+    partial, vmin_p, vmax_p, onehot_g = _block_agg.tile_moments(
+        v, gid, m, c, g * gt, gt)
+    hpartial = _hist.tile_hist(v, onehot_g, a, inv_width, nbins_data, 0, kt)
+
+    @pl.when(r == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        vmin_ref[...] = jnp.full_like(vmin_ref, jnp.inf)
+        vmax_ref[...] = jnp.full_like(vmax_ref, -jnp.inf)
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    sums_ref[...] += partial
+    vmin_ref[...] = jnp.minimum(vmin_ref[...], vmin_p)
+    vmax_ref[...] = jnp.maximum(vmax_ref[...], vmax_p)
+    hist_ref[...] += hpartial
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "a", "b", "num_groups", "nbins", "row_tile", "group_tile", "interpret"))
+def fused_fold(values: jax.Array, gids: jax.Array, mask: jax.Array,
+               center: jax.Array, *, a: float, b: float, num_groups: int,
+               nbins: int, row_tile: int = ROW_TILE,
+               group_tile: int = GROUP_TILE, interpret: bool = False):
+    """Raw fused moment+histogram launch over 1-D padded inputs
+    (``values.shape[0] % row_tile == 0``, ``num_groups % group_tile == 0``,
+    ``nbins`` a multiple of 128; padding rows carry ``mask == 0``).
+
+    Returns ``(sums (3, G), vmin (1, G), vmax (1, G), hist (G, nbins))``.
+    Grid = (group_tiles, row_tiles), row minor: each (group, bin) output
+    block is revisited across row tiles and accumulated in place while
+    the pipeline prefetches the next row tile (double buffering).
+    """
+    n = values.shape[0]
+    assert n % row_tile == 0 and num_groups % group_tile == 0
+    assert nbins % 128 == 0
+    lanes = 128
+    v2 = values.astype(jnp.float32).reshape(n // lanes, lanes)
+    g2 = gids.astype(jnp.int32).reshape(n // lanes, lanes)
+    m2 = mask.astype(jnp.float32).reshape(n // lanes, lanes)
+    rt = row_tile // lanes
+    grid = (num_groups // group_tile, n // row_tile)
+    inv_width = float(nbins) / max(float(b) - float(a), 1e-30)
+    scale = jnp.stack([jnp.asarray(center, jnp.float32),
+                       jnp.asarray(a, jnp.float32),
+                       jnp.asarray(inv_width, jnp.float32),
+                       jnp.asarray(float(nbins), jnp.float32)]).reshape(1, 4)
+
+    return pl.pallas_call(
+        _fold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda g, r: (0, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+            pl.BlockSpec((rt, lanes), lambda g, r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((3, group_tile), lambda g, r: (0, g)),
+            pl.BlockSpec((1, group_tile), lambda g, r: (0, g)),
+            pl.BlockSpec((1, group_tile), lambda g, r: (0, g)),
+            pl.BlockSpec((group_tile, nbins), lambda g, r: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((3, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((num_groups, nbins), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scale, v2, g2, m2)
+
+
+def _pad_groups(x, mult):
+    pad = (-x) % mult
+    return x + pad
+
+
+def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl):
+    """Dispatch one round's fold: ref oracle or the fused superkernel."""
+    if impl == "ref" or not use_hist:
+        # No histogram: the plain block_agg kernel already is the fused
+        # moment pass; ref: XLA segment ops (bitwise-identical to the
+        # per-block reference path, which calls the same functions).
+        state = kops.grouped_moments(v, g, m, num_groups, center, impl=impl)
+        hist = None
+        if use_hist:
+            hist = kops.grouped_hist(v, g, m, num_groups, a, b, nbins=nbins,
+                                     impl=impl).hist
+        return state, hist
+    gpad = _pad_groups(num_groups, GROUP_TILE)
+    kpad = _pad_groups(nbins, 128)
+    n = v.shape[0]
+    rpad = (-n) % ROW_TILE
+    if rpad:
+        v = jnp.concatenate([v, jnp.zeros(rpad, v.dtype)])
+        g = jnp.concatenate([g, jnp.zeros(rpad, g.dtype)])
+        m = jnp.concatenate([m, jnp.zeros(rpad, m.dtype)])
+    sums, vmin, vmax, hist = fused_fold(
+        v, g, m, jnp.asarray(center, jnp.float32), a=a, b=b,
+        num_groups=gpad, nbins=kpad, interpret=(impl == "interpret"))
+    state = kops.moments_from_sums(sums[:, :num_groups],
+                                   vmin[:, :num_groups],
+                                   vmax[:, :num_groups], center)
+    return state, hist[:num_groups, :nbins]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nb", "window", "budget", "center", "a", "b", "num_groups", "nbins",
+    "use_hist", "probe", "impl"))
+def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
+                words: jax.Array, order_pad: jax.Array,
+                static_ok: jax.Array, pos: jax.Array,
+                active_words: jax.Array, *, nb: int, window: int,
+                budget: int, center: float, a: float, b: float,
+                num_groups: int, nbins: int, use_hist: bool, probe: bool,
+                impl: str):
+    """One fused scan round over device-resident column data.
+
+    Args (device arrays unless noted):
+      values/gids/mask: ``(nb, block_rows)`` materialized value column
+        (f32), group codes (i32) and predicate*valid mask (f32);
+      words: ``(nb, W)`` uint32 group-bitmap words (unused when
+        ``probe=False``);
+      order_pad: ``(nb + window,)`` i32 scan order, zero-padded;
+      static_ok: ``(nb,)`` bool static-prefilter verdict per block;
+      pos: i32 scalar scan cursor (device-resident across rounds);
+      active_words: ``(W,)`` uint32 packed active-group mask.
+
+    Static config: ``window`` is the round's maximum cursor coverage
+    (the reference path's ``lookahead``-batched cover cap, rounded up to
+    whole lookahead batches); ``budget`` the processed-block budget.
+
+    Returns ``(state, hist, ok, flags, new_pos)``: the mergeable
+    :class:`~repro.core.state.MomentState` / histogram deltas for the
+    round, the per-window-position static/activity verdicts the host
+    needs for taint + skip accounting, and the advanced cursor.
+    """
+    offs = jnp.arange(window, dtype=jnp.int32)
+    in_range = (pos + offs) < nb
+    win = jax.lax.dynamic_slice(order_pad, (pos,), (window,))
+    ok = static_ok[win] & in_range
+    if probe:
+        act = kops.active_blocks(words[win], active_words, impl=impl) > 0
+        flags = ok & act
+    else:
+        flags = ok
+
+    # Budgeted selection, replicating the reference cursor bit-for-bit:
+    # take the first `budget` flagged blocks; the cursor cut is one past
+    # the budget-th selected block, else the (nb-clamped) window end.
+    csum = jnp.cumsum(flags.astype(jnp.int32))
+    take = flags & (csum <= budget)
+    n_sel = csum[window - 1]
+    cut = jnp.argmax((csum == budget) & flags).astype(jnp.int32)
+    covered = jnp.where(n_sel >= budget, cut + 1,
+                        jnp.minimum(jnp.int32(window),
+                                    jnp.int32(nb) - pos))
+    new_pos = pos + covered
+
+    take_idx = jnp.nonzero(take, size=budget, fill_value=window)[0]
+    tvalid = take_idx < window
+    blk = jnp.where(tvalid, win[jnp.minimum(take_idx, window - 1)], 0)
+    v = values[blk].reshape(-1)
+    g = gids[blk].reshape(-1)
+    m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+
+    state, hist = _fold(v, g, m, center, a, b, num_groups, nbins,
+                        use_hist, impl)
+    return state, hist, ok, flags, new_pos

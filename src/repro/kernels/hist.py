@@ -26,6 +26,22 @@ GROUP_TILE = 128
 BIN_TILE = 512
 
 
+def tile_hist(v, onehot_g, a, inv_width, nbins, kbase, kt):
+    """Per-tile histogram matmul shared by this kernel and the fused scan
+    superkernel.
+
+    ``onehot_g`` is the masked (R, Gt) group one-hot (the same matrix the
+    moment matmul consumes, so the fused kernel builds it once); returns
+    the (Gt, kt) partial for bin tile ``[kbase, kbase + kt)``.
+    """
+    bin_idx = jnp.clip(((v - a) * inv_width), 0.0, nbins - 1.0
+                       ).astype(jnp.int32)
+    bins_tile = kbase + jax.lax.broadcasted_iota(jnp.int32, (1, kt), 1)
+    onehot_b = (bin_idx[:, None] == bins_tile).astype(jnp.float32)
+    return jax.lax.dot(onehot_g.T, onehot_b,
+                       preferred_element_type=jnp.float32)  # (Gt, Kt)
+
+
 def _kernel(scale_ref, values_ref, gids_ref, mask_ref, hist_ref):
     r = pl.program_id(2)
     g = pl.program_id(0)
@@ -40,15 +56,9 @@ def _kernel(scale_ref, values_ref, gids_ref, mask_ref, hist_ref):
     gid = gids_ref[...].reshape(-1)
     m = mask_ref[...].reshape(-1).astype(jnp.float32)
 
-    bin_idx = jnp.clip(((v - a) * inv_width), 0.0, nbins - 1.0
-                       ).astype(jnp.int32)
     gids_tile = g * gt + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)
-    bins_tile = k * kt + jax.lax.broadcasted_iota(jnp.int32, (1, kt), 1)
     onehot_g = (gid[:, None] == gids_tile).astype(jnp.float32) * m[:, None]
-    onehot_b = (bin_idx[:, None] == bins_tile).astype(jnp.float32)
-
-    partial = jax.lax.dot(onehot_g.T, onehot_b,
-                          preferred_element_type=jnp.float32)  # (Gt, Kt)
+    partial = tile_hist(v, onehot_g, a, inv_width, nbins, k * kt, kt)
 
     @pl.when(r == 0)
     def _init():

@@ -28,10 +28,32 @@ from repro.kernels import hist as _hist
 from repro.kernels import ref as _ref
 
 
-def _auto_impl(impl: Optional[str]) -> str:
+def resolve_impl(impl: Optional[str]) -> str:
+    """Resolve the backend selector: ``None`` (auto) means compiled Pallas
+    on TPU hosts and the pure-jnp oracle everywhere else."""
     if impl is not None:
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def moments_from_sums(sums: jax.Array, vmin: jax.Array, vmax: jax.Array,
+                      center) -> MomentState:
+    """Convert raw kernel outputs — ``sums`` = (count, dsum, dsq) rows of a
+    ``(3, G)`` array plus ``(1, G)``-or-``(G,)`` extremes — into a
+    :class:`MomentState` via the exact shifted-moment identity. Shared by
+    :func:`grouped_moments` and the fused scan path."""
+    count, dsum, dsq = sums[0], sums[1], sums[2]
+    safe = jnp.maximum(count, 1.0)
+    mean = jnp.asarray(center, jnp.float32) + dsum / safe
+    m2 = jnp.maximum(dsq - dsum * dsum / safe, 0.0)
+    empty = count == 0
+    return MomentState(
+        count=count,
+        mean=jnp.where(empty, 0.0, mean),
+        m2=jnp.where(empty, 0.0, m2),
+        vmin=vmin.reshape(-1),
+        vmax=vmax.reshape(-1),
+    )
 
 
 def _pad_to(x: jax.Array, mult: int, fill=0):
@@ -51,7 +73,7 @@ def grouped_moments(values: jax.Array, gids: jax.Array,
     ``num_groups``. ``center`` should be a data-scale constant (catalog
     midpoint) for f32 stability; the result is mathematically independent
     of it (exact shifted-moment identity)."""
-    impl = _auto_impl(impl)
+    impl = resolve_impl(impl)
     if mask is None:
         mask = jnp.ones_like(values, dtype=jnp.float32)
     values = values.reshape(-1)
@@ -73,18 +95,7 @@ def grouped_moments(values: jax.Array, gids: jax.Array,
         sums = sums[:, :num_groups]
         vmin = vmin[:, :num_groups]
         vmax = vmax[:, :num_groups]
-    count, dsum, dsq = sums[0], sums[1], sums[2]
-    safe = jnp.maximum(count, 1.0)
-    mean = jnp.asarray(center, jnp.float32) + dsum / safe
-    m2 = jnp.maximum(dsq - dsum * dsum / safe, 0.0)
-    empty = count == 0
-    return MomentState(
-        count=count,
-        mean=jnp.where(empty, 0.0, mean),
-        m2=jnp.where(empty, 0.0, m2),
-        vmin=vmin.reshape(-1),
-        vmax=vmax.reshape(-1),
-    )
+    return moments_from_sums(sums, vmin, vmax, center)
 
 
 def grouped_hist(values: jax.Array, gids: jax.Array,
@@ -95,7 +106,7 @@ def grouped_hist(values: jax.Array, gids: jax.Array,
                  group_tile: int = _hist.GROUP_TILE,
                  bin_tile: int = _hist.BIN_TILE) -> HistState:
     """Per-group DKW histogram -> HistState (num_groups, nbins)."""
-    impl = _auto_impl(impl)
+    impl = resolve_impl(impl)
     if mask is None:
         mask = jnp.ones_like(values, dtype=jnp.float32)
     values = values.reshape(-1)
@@ -119,7 +130,7 @@ def active_blocks(bitmap: jax.Array, active_words: jax.Array, *,
                   impl: Optional[str] = None,
                   block_tile: int = _bitmap.BLOCK_TILE) -> jax.Array:
     """Packed-bitmap lookahead -> int32 (nblocks,) activity flags."""
-    impl = _auto_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.active_blocks_ref(bitmap, active_words).reshape(-1)
     nblocks = bitmap.shape[0]

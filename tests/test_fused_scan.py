@@ -1,0 +1,204 @@
+"""Fused-scan equivalence suite: the fused superkernel path must produce
+BITWISE-identical query results to the per-block reference path
+(``EngineConfig(fused=False)``) — estimates, intervals, soundness
+bookkeeping (tainted / exact) and scan metrics — across randomized query
+shapes, including activity-skipped (tainted) and exhausted (exact) views.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.aqp import (AggQuery, EngineConfig, Expression, FastFrame,
+                       Filter, build_scramble)
+from repro.core.optstop import (AbsoluteWidth, GroupsOrdered, ThresholdSide,
+                                TopKSeparated)
+from repro.data import flights
+
+RESULT_FIELDS = [
+    "group_codes", "estimate", "lo", "hi", "count_seen", "nonempty",
+    "exact", "tainted", "rows_covered", "blocks_fetched",
+    "blocks_skipped_active", "blocks_skipped_static", "bitmap_probes",
+    "rounds", "stopped_early",
+]
+
+
+def assert_bitwise_equal(r_fused, r_ref):
+    for f in RESULT_FIELDS:
+        a, b = getattr(r_fused, f), getattr(r_ref, f)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        else:
+            assert a == b, (f, a, b)
+
+
+def run_both(sc, q, sampling, seed=1, start=0, **cfg_kw):
+    r_f = FastFrame(sc, EngineConfig(fused=True, **cfg_kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start)
+    r_r = FastFrame(sc, EngineConfig(fused=False, **cfg_kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start)
+    return r_f, r_r
+
+
+@pytest.fixture(scope="module")
+def sc():
+    ds = flights.generate(n_rows=100_000, n_airports=80, n_airlines=6,
+                          seed=3)
+    return build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                          seed=4)
+
+
+SCENARIOS = [
+    ("avg-group-topk-peek",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=TopKSeparated(k=2, largest=True), delta=1e-9),
+     "active_peek"),
+    ("avg-group-thresh-sync",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=ThresholdSide(threshold=0.0), delta=1e-9),
+     "active_sync"),
+    ("sum-filter-scan",
+     AggQuery(agg="sum", column="dep_delay",
+              filters=(Filter("airline", "eq", 2),),
+              stop=AbsoluteWidth(eps=1e6), delta=1e-9),
+     "scan"),
+    ("count-filter-peek",
+     AggQuery(agg="count", filters=(Filter("origin", "eq", 3),),
+              stop=AbsoluteWidth(eps=5e3), delta=1e-9),
+     "active_peek"),
+    ("avg-anderson-dkw-scan",
+     AggQuery(agg="avg", column="dep_delay", bounder="anderson_dkw",
+              rangetrim=False, stop=AbsoluteWidth(eps=30.0), delta=1e-9),
+     "scan"),
+    ("expr-composite-ordered-peek",
+     AggQuery(agg="avg",
+              column=Expression(fn=lambda c: (c["dep_delay"] / 60.0) ** 2,
+                                columns=("dep_delay",), convex=True),
+              group_by=("airline", "day_of_week"),
+              stop=GroupsOrdered(), delta=1e-6),
+     "active_peek"),
+    # eps too tight to ever satisfy -> full-sweep exhaustion, exact views
+    ("avg-exhaust-peek",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=AbsoluteWidth(eps=1e-7), delta=1e-9),
+     "active_peek"),
+]
+
+
+@pytest.mark.parametrize("name,q,sampling",
+                         SCENARIOS, ids=[s[0] for s in SCENARIOS])
+def test_fused_bitwise_equals_reference(sc, name, q, sampling):
+    r_f, r_r = run_both(sc, q, sampling, seed=1, start=0,
+                        round_blocks=16, lookahead_blocks=64,
+                        sync_lookahead_blocks=16, hist_bins=256)
+    assert_bitwise_equal(r_f, r_r)
+    if name == "avg-exhaust-peek":
+        assert r_f.exact.all()  # exhaustion collapsed every view
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fused_bitwise_randomized_starts(sc, seed):
+    """Random scan starts (wrap-around windows) and seeds."""
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 filters=(Filter("dep_time", "gt", 400.0),),
+                 stop=ThresholdSide(threshold=10.0), delta=1e-9)
+    r_f, r_r = run_both(sc, q, "active_peek", seed=seed, start=None,
+                        round_blocks=8, lookahead_blocks=64)
+    assert_bitwise_equal(r_f, r_r)
+
+
+@pytest.mark.parametrize("sampling", ["active_peek", "active_sync"])
+def test_fused_bitwise_with_tainted_views(sampling):
+    """Activity skips must taint (and freeze) identically on both paths:
+    a dominant group resolves instantly, so blocks without the rare
+    straddling group get skipped and the dominant group loses its clean
+    prefix; the recovery pass then finishes it exactly."""
+    rng = np.random.default_rng(0)
+    n = 40_000
+    g = (rng.random(n) < 0.02).astype(np.int32)  # rare group 1
+    v = np.where(g == 1, rng.normal(50.0, 30.0, n),
+                 rng.normal(100.0, 1.0, n)).astype(np.float32)
+    sc = build_scramble({"g": g, "v": v}, catalog={"v": (-100.0, 250.0)},
+                        block_rows=64, seed=1)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=ThresholdSide(threshold=50.0), delta=1e-6)
+    r_f, r_r = run_both(sc, q, sampling, seed=1, start=0,
+                        round_blocks=8, lookahead_blocks=64,
+                        sync_lookahead_blocks=16)
+    assert_bitwise_equal(r_f, r_r)
+    assert r_f.blocks_skipped_active > 0   # scenario exercised skipping
+    assert r_f.tainted[0] and not r_f.tainted[1]
+    # the skipped-prefix view still carries a valid interval
+    truth0 = v[g == 0].astype(np.float64).mean()
+    assert r_f.lo[0] - 1e-3 <= truth0 <= r_f.hi[0] + 1e-3
+
+
+def test_fused_exact_mode_unaffected():
+    """sampling='exact' (and stop=None) bypasses the fused path; results
+    must be identical regardless of the flag."""
+    ds = flights.generate(n_rows=30_000, n_airports=16, n_airlines=4,
+                          seed=9)
+    sc = build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                        seed=10)
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 stop=None)
+    r_f, r_r = run_both(sc, q, "exact", seed=0, start=0)
+    assert_bitwise_equal(r_f, r_r)
+    assert r_f.exact.all()
+
+
+# -- kernel level: the fused fold superkernel vs the oracles ------------------
+
+
+def test_fused_fold_matches_oracles():
+    """fused_fold (interpret) == grouped_moments + grouped_hist oracles."""
+    from repro.kernels import fused_scan, ops
+
+    rng = np.random.default_rng(0)
+    n, g, k = 4096, 120, 256
+    v = jnp.asarray(rng.normal(50.0, 10.0, n).astype(np.float32))
+    gid = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    m = jnp.asarray((rng.random(n) < 0.8).astype(np.float32))
+    a, b = 0.0, 100.0
+
+    gpad, kpad = 128, 256
+    sums, vmin, vmax, hist = fused_scan.fused_fold(
+        v, gid, m, jnp.float32(50.0), a=a, b=b, num_groups=gpad,
+        nbins=kpad, interpret=True)
+    state = ops.moments_from_sums(sums[:, :g], vmin[:, :g], vmax[:, :g],
+                                  50.0)
+    want = ops.grouped_moments(v, gid, m, g, 50.0, impl="ref")
+    for got_f, want_f, tol in zip(state, want, [1e-6, 1e-4, 5e-2, 1e-6,
+                                                1e-6]):
+        np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                                   rtol=tol, atol=tol)
+    want_h = ops.grouped_hist(v, gid, m, g, a, b, nbins=k, impl="ref")
+    np.testing.assert_allclose(np.asarray(hist[:g, :k]),
+                               np.asarray(want_h.hist))
+
+
+def test_fused_round_interpret_engine_close_to_ref():
+    """The engine driven through the fused superkernel (interpret) agrees
+    with the ref backend within f32 tile-order tolerance."""
+    ds = flights.generate(n_rows=20_000, n_airports=12, n_airlines=4,
+                          seed=5)
+    sc = build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                        seed=6)
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 bounder="anderson_dkw", rangetrim=False,
+                 stop=AbsoluteWidth(eps=25.0), delta=1e-6)
+    r_int = FastFrame(sc, EngineConfig(fused=True, impl="interpret",
+                                       round_blocks=8,
+                                       lookahead_blocks=32,
+                                       hist_bins=256)).run(
+        q, sampling="scan", seed=2, start_block=0)
+    r_ref = FastFrame(sc, EngineConfig(fused=True, impl="ref",
+                                       round_blocks=8,
+                                       lookahead_blocks=32,
+                                       hist_bins=256)).run(
+        q, sampling="scan", seed=2, start_block=0)
+    np.testing.assert_allclose(r_int.estimate, r_ref.estimate,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(r_int.lo, r_ref.lo, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(r_int.hi, r_ref.hi, rtol=1e-3, atol=1e-2)

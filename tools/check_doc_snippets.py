@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs snippet runner: every fenced ```python block in README.md and
+docs/*.md must import and run cleanly, so documentation cannot rot
+silently. Wired into CI (.github/workflows/ci.yml, docs job).
+
+Each snippet runs in its own subprocess from the repo root with
+``PYTHONPATH=src``. A block can opt out by placing the marker
+
+    <!-- snippet: no-run -->
+
+on any of the three lines above its opening fence (use sparingly — e.g.
+for illustrative pseudo-code).
+
+Usage: python tools/check_doc_snippets.py [files...]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+NO_RUN = "<!-- snippet: no-run -->"
+TIMEOUT_S = 600
+
+
+def extract_snippets(path: Path):
+    """Yield (start_line, source) for each runnable ```python block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip().startswith("```python"):
+            skip = any(NO_RUN in lines[j]
+                       for j in range(max(0, i - 3), i))
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].strip().startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if not skip:
+                yield start + 1, "\n".join(body)
+        i += 1
+
+
+def run_snippet(src: str, label: str) -> bool:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(src)
+        tmp = f.name
+    try:
+        proc = subprocess.run([sys.executable, tmp], cwd=ROOT, env=env,
+                              capture_output=True, text=True,
+                              timeout=TIMEOUT_S)
+    finally:
+        os.unlink(tmp)
+    if proc.returncode != 0:
+        print(f"FAIL {label}\n--- stdout ---\n{proc.stdout}"
+              f"\n--- stderr ---\n{proc.stderr}")
+        return False
+    print(f"ok   {label}")
+    return True
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    files = ([Path(a) for a in args] if args
+             else [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))])
+    n = failures = 0
+    for path in files:
+        for line, src in extract_snippets(path):
+            n += 1
+            if not run_snippet(src, f"{path.relative_to(ROOT)}:{line}"):
+                failures += 1
+    print(f"\n{n - failures}/{n} snippets passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
