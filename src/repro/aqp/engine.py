@@ -26,7 +26,23 @@ identical on the shared fold backends — see ``EngineConfig.fused``):
     per lookahead batch with host materialization in between. It is kept
     as the oracle the fused path is tested bitwise against
     (``tests/test_fused_scan.py``) and as the baseline for
-    ``benchmarks/bench_fused_scan.py``.
+    ``benchmarks/bench_fused_scan.py``. Probe batches and fold inputs are
+    padded to static shapes so the tail of the scramble does not retrace
+    the XLA computations (padding rows carry ``mask == 0`` and contribute
+    exact zeros).
+
+The per-query execution state is split into two composable pieces so
+:class:`repro.serve.FrameServer` can serve many concurrent queries off
+one shared scan:
+
+  * :class:`_ScanViews` — everything determined by the *scan signature*
+    ``(filters, column, group-by)`` alone: device materialization,
+    per-view fold states, coverage, and taint bookkeeping. Several
+    queries (different stopping conditions / bounders / deltas) can share
+    one instance.
+  * :class:`_QueryIntervals` — one query's OptStop state: running
+    intervals, delta schedule, CI refresh and the active mask from its
+    stopping condition.
 
 Soundness bookkeeping beyond the paper's prose:
   * ``tainted`` views: a view that occurred in an *activity-skipped* block
@@ -46,7 +62,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,11 +76,12 @@ from repro.core import count_sum
 from repro.core.bounders import get_bounder
 from repro.core.optstop import delta_schedule
 from repro.core.state import (StatsBatch, init_moments_host,
-                              merge_moments_host, to_host)
+                              merge_hist_host, merge_moments_host, to_host)
 from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
 _ALPHA = count_sum.ALPHA_DEFAULT
+_INT32_MAX = np.iinfo(np.int32).max
 
 
 def _batched_view_ci(q: AggQuery, sb: StatsBatch, a, b, r, R, dk,
@@ -87,6 +105,23 @@ def _batched_view_ci(q: AggQuery, sb: StatsBatch, a, b, r, R, dk,
     cci = count_sum.count_ci(sb.count, r, R, dk / 2.0)
     slo, shi = count_sum.sum_ci(cci, (alo, ahi))
     return slo, shi, sb.mean * (sb.count / max(r, 1)) * R
+
+
+def _exact_estimate(q: AggQuery, counts, means, R):
+    """Vectorized point estimate over fully-covered views."""
+    if q.agg == "avg":
+        return means
+    if q.agg == "count":
+        return counts
+    return means * counts  # sum
+
+
+def _round_window(nb: int, lookahead: int, cover_cap: int) -> int:
+    """Maximum cursor coverage per fused round: the reference path
+    accumulates whole lookahead batches until the cover cap (then clamps
+    to ``nb``)."""
+    window = lookahead * (-(-cover_cap // lookahead))
+    return min(window, lookahead * (-(-nb // lookahead)))
 
 
 @dataclasses.dataclass
@@ -125,19 +160,210 @@ class EngineConfig:
     alpha: float = _ALPHA
     impl: Optional[str] = None      # kernel impl: pallas | interpret | ref
     fused: bool = True              # fused scan superkernel (vs per-block)
+    mat_cache_entries: int = 32     # LRU cap per device materialization
+                                    # cache (each entry pins one full
+                                    # (n_blocks, block_rows) buffer)
+
+
+class _ScanViews:
+    """State determined by one scan signature ``(filters, column,
+    group-by)``: the aggregate views' fold / coverage / soundness
+    bookkeeping, independent of any one query's stopping condition.
+
+    One instance can back several concurrent queries
+    (:class:`repro.serve.FrameServer`): the moment/histogram states,
+    coverage, exactness and taint are functions of the scan alone, so
+    queries that differ only in aggregate, bounder, delta or stopping
+    condition share them.
+    """
+
+    def __init__(self, frame: "FastFrame", q: AggQuery,
+                 use_hist: Optional[bool] = None):
+        self.frame = frame
+        self.rep_q = q
+        sc = frame.scramble
+        self.gcol, self.G = (None, 1)
+        if q.group_by is not None:
+            self.gcol, self.G = frame._composite_group(q.group_cols)
+        self.value_src, (self.a, self.b) = frame._values_and_bounds(q)
+        self.center = 0.5 * (self.a + self.b)
+        self.use_hist = use_hist if use_hist is not None else q.needs_hist
+        self.static_ok, self.probes0 = frame._static_ok(q)
+        self.group_bm = (frame.bitmap(self.gcol) if self.gcol is not None
+                         else None)
+        self.presence = (unpack_words(self.group_bm.words, self.G)
+                         if self.group_bm is not None
+                         else np.ones((sc.n_blocks, 1), dtype=bool))
+        self.presence_total = self.presence.sum(axis=0)
+        self.valid = self.presence_total > 0
+        self.state = init_moments_host((self.G,))
+        self.hist = (np.zeros((self.G, frame.config.hist_bins), np.float64)
+                     if self.use_hist else None)
+        self.seen_presence = np.zeros(self.G, dtype=np.int64)
+        self.processed = np.zeros(sc.n_blocks, dtype=bool)
+        self.exact = self.presence_total == 0   # group code never occurs
+        self.tainted = np.zeros(self.G, dtype=bool)
+        self.blocks_fetched = 0
+
+    @property
+    def counts(self) -> np.ndarray:
+        return self.state.count
+
+    def ingest_delta(self, idx: np.ndarray, upd, hupd) -> None:
+        """Merge one fused round's device-side mergeable deltas for the
+        selected blocks ``idx``."""
+        self.processed[idx] = True
+        self.blocks_fetched += len(idx)
+        self.state = merge_moments_host(self.state, to_host(upd))
+        if self.use_hist:
+            self.hist = merge_hist_host(self.hist, hupd)
+        self.seen_presence += self.presence[idx].sum(axis=0)
+
+    def ingest_blocks(self, idx: np.ndarray,
+                      pad_to: Optional[int] = None) -> None:
+        """Host materialize-and-fold path (per-block reference, exact
+        sweep and the recovery pass)."""
+        self.processed[idx] = True
+        self.blocks_fetched += len(idx)
+        self.state, self.hist = self.frame._fold_blocks(
+            self.rep_q, idx, self.value_src, self.gcol, self.G, self.center,
+            self.a, self.b, self.state, self.hist, self.use_hist,
+            pad_to=pad_to)
+        self.seen_presence += self.presence[idx].sum(axis=0)
+
+    def update_exact(self, pos: Optional[int] = None) -> None:
+        """Mark fully-covered views exact; on sweep exhaustion
+        (``pos >= n_blocks``) also untainted views — an untainted view's
+        unprocessed blocks were all static-skipped (zero view rows),
+        whereas a tainted view lost member rows to activity skips and must
+        finish via the recovery pass (collapsing it early would overwrite
+        a valid frozen CI with a biased point estimate)."""
+        cov = self.seen_presence >= self.presence_total
+        if pos is not None and pos >= self.frame.scramble.n_blocks:
+            cov = cov | ~self.tainted
+        self.exact |= cov
+
+
+class _QueryIntervals:
+    """One query's OptStop / interval state over a :class:`_ScanViews`
+    slot: running intervals, delta schedule, batched CI refresh and the
+    active mask from the query's stopping condition."""
+
+    def __init__(self, frame: "FastFrame", q: AggQuery, slot: _ScanViews):
+        self.q = q
+        self.slot = slot
+        self.cfg = frame.config
+        self.R = frame.scramble.n_rows
+        self.bounder = (get_bounder(q.bounder, rangetrim=q.rangetrim)
+                        if q.agg != "count" else None)
+        self.use_hist = q.needs_hist
+        # The per-view delta budget is split over views that can ever emit
+        # an interval (presence_total > 0, known a priori from the group
+        # bitmap). Phantom composite codes never refresh (their counts
+        # stay 0), so excluding them keeps the union bound sound while
+        # tightening every real view's CI for free.
+        self.delta_view = q.delta / max(int(slot.valid.sum()), 1)
+        self.known_n = (not q.filters) and (q.group_by is None)
+        G = slot.G
+        # trivial a-priori bounds (valid before any sample is seen)
+        if q.agg == "avg":
+            lo0, hi0 = slot.a, slot.b
+        elif q.agg == "count":
+            lo0, hi0 = 0.0, float(self.R)
+        else:  # sum
+            lo0 = min(0.0, self.R * slot.a)
+            hi0 = max(0.0, self.R * slot.b)
+        self.lo = np.full(G, lo0)
+        self.hi = np.full(G, hi0)
+        self.est = np.full(G, slot.center)
+        self.refreshed = np.zeros(G, dtype=bool)
+        self.active = slot.valid.copy()
+        self.finished = False
+
+    def cond_active(self) -> np.ndarray:
+        """Stopping-condition activity over EXISTING views only (phantom
+        composite codes must not distort orderings)."""
+        slot = self.slot
+        out = np.zeros(slot.G, dtype=bool)
+        v = slot.valid
+        if v.any():
+            out[v] = self.q.stop.active(self.lo[v], self.hi[v],
+                                        self.est[v], slot.counts[v])
+        return out
+
+    def refresh(self, k: int, r: int) -> None:
+        """Step 3: batched CI refresh at OptStop round ``k`` with ``r``
+        clean-prefix rows, then collapse fully-covered views to their
+        exact point (one batched call, no G-loop)."""
+        slot = self.slot
+        dk = delta_schedule(self.delta_view, k)
+        counts = slot.counts
+        refresh = ~slot.tainted & (counts > 0) & (self.active
+                                                  | ~self.refreshed)
+        gidx = np.nonzero(refresh)[0]
+        if gidx.size:
+            sb = StatsBatch.from_state(
+                slot.state, slot.hist if self.use_hist else None).take(gidx)
+            glo, ghi, gest = _batched_view_ci(
+                self.q, sb, slot.a, slot.b, r, self.R, dk, self.known_n,
+                self.bounder, self.cfg.alpha)
+            self.lo[gidx] = np.maximum(self.lo[gidx], glo)
+            self.hi[gidx] = np.minimum(self.hi[gidx], ghi)
+            self.est[gidx] = gest
+            self.refreshed[gidx] = True
+        self.collapse_exact()
+
+    def collapse_exact(self) -> None:
+        """Full coverage -> point interval at the exact aggregate."""
+        slot = self.slot
+        counts = slot.counts
+        full = slot.exact & (counts > 0)
+        if full.any():
+            ex = _exact_estimate(self.q, counts, slot.state.mean, self.R)
+            self.lo[full] = self.hi[full] = self.est[full] = ex[full]
+
+    def update_active(self) -> bool:
+        """Step 4: recompute the active mask from the stopping condition;
+        returns True while any view is still active."""
+        self.active = self.cond_active() & ~self.slot.exact & self.slot.valid
+        return bool(self.active.any())
+
+    def result(self, rounds: int, pos: int, cum_rows: np.ndarray,
+               metrics: Dict[str, int], t0: float,
+               stopped_early: bool) -> QueryResult:
+        """Build the QueryResult from the CURRENT slot/query state (the
+        arrays are copied, so the result is a consistent snapshot even if
+        a shared scan keeps mutating the slot afterwards — the serving
+        layer calls this the moment a query finishes)."""
+        slot = self.slot
+        counts = slot.counts
+        return QueryResult(
+            group_codes=np.arange(slot.G), estimate=self.est.copy(),
+            lo=self.lo.copy(), hi=self.hi.copy(), count_seen=counts,
+            nonempty=counts > 0, exact=slot.exact.copy(),
+            tainted=slot.tainted.copy(),
+            rows_covered=int(cum_rows[pos - 1]) if pos else 0,
+            blocks_fetched=slot.blocks_fetched,
+            blocks_skipped_active=metrics["skipped_active"],
+            blocks_skipped_static=metrics["skipped_static"],
+            bitmap_probes=metrics["probes"], rounds=rounds,
+            wall_time_s=time.perf_counter() - t0,
+            stopped_early=stopped_early)
 
 
 class _FusedScan:
-    """Device-resident scan context for one query: materializes the value
-    column, predicate mask, group codes and bitmap words once, then drives
-    :func:`repro.kernels.fused_scan.fused_round` — one device dispatch and
-    one host sync per round.
+    """Device-resident scan context for one query: assembles the cached
+    value column, predicate mask, group codes and bitmap words, then
+    drives :func:`repro.kernels.fused_scan.fused_round` — one device
+    dispatch and one host sync per round.
 
     Materialization is identical (bitwise) to the per-block reference
     path's per-round ``_materialize``: predicates and value expressions
     are elementwise, so evaluating them over the full blocked columns and
     gathering on device yields the same rows the reference gathers on
-    host.
+    host. The device arrays come from :class:`FastFrame`'s materialization
+    caches, so repeat queries (and :class:`repro.serve.FrameServer`
+    slots) reuse the same buffers.
     """
 
     def __init__(self, frame: "FastFrame", q: AggQuery, value_src, gcol,
@@ -146,11 +372,7 @@ class _FusedScan:
                  static_ok: np.ndarray, group_bm, order: np.ndarray):
         sc = frame.scramble
         nb = sc.n_blocks
-        # Maximum cursor coverage per round: the reference path accumulates
-        # whole lookahead batches until the cover cap (then clamps to nb).
-        window = lookahead * (-(-cover_cap // lookahead))
-        window = min(window, lookahead * (-(-nb // lookahead)))
-        self.window = window
+        self.window = _round_window(nb, lookahead, cover_cap)
         self.budget = budget
         self.nb = nb
         self.probe = probe
@@ -162,24 +384,12 @@ class _FusedScan:
         self.nbins = frame.config.hist_bins
         self.impl = kops.resolve_impl(frame.config.impl)
 
-        mask = sc.valid.copy()
-        for f in q.filters:
-            mask &= f.evaluate(sc.columns)
-        if isinstance(value_src, Expression):
-            values = value_src.evaluate(sc.columns)
-        elif isinstance(value_src, str):
-            values = sc.columns[value_src].astype(np.float32)
-        else:  # COUNT: value column unused
-            values = np.zeros(sc.valid.shape, np.float32)
-        gids = (sc.columns[gcol].astype(np.int32) if gcol is not None
-                else np.zeros(sc.valid.shape, np.int32))
-
-        self.values = jnp.asarray(values, jnp.float32)
-        self.gids = jnp.asarray(gids)
-        self.mask = jnp.asarray(mask.astype(np.float32))
+        self.values = frame._device_values(value_src)
+        self.gids = frame._device_gids(gcol)
+        self.mask = frame._device_mask(q.filters)
         self.words = (jnp.asarray(group_bm.words) if group_bm is not None
                       else jnp.zeros((1, 1), jnp.uint32))
-        opad = np.zeros(nb + window, np.int32)
+        opad = np.zeros(nb + self.window, np.int32)
         opad[:nb] = order
         self.order_pad = jnp.asarray(opad)
         self.static_ok = jnp.asarray(static_ok)
@@ -206,6 +416,8 @@ class FastFrame:
     Wraps a :class:`~repro.aqp.scramble.Scramble` with block bitmap
     indexes and the OptStop round loop; :meth:`run` answers one
     :class:`~repro.aqp.query.AggQuery` with anytime-valid intervals.
+    Concurrent batches of queries are served with shared scans by
+    :class:`repro.serve.FrameServer`.
     """
 
     def __init__(self, scramble: Scramble, config: EngineConfig = None):
@@ -214,6 +426,16 @@ class FastFrame:
         self._bitmaps: Dict[str, BlockBitmap] = {}
         self._static_cache: Dict[Tuple, np.ndarray] = {}
         self._valid_counts = scramble.valid.sum(axis=1).astype(np.int64)
+        # device-resident materialization caches, keyed by the components
+        # of the (filters, column, group-by) scan signature; LRU-bounded
+        # (config.mat_cache_entries) so a long-lived server receiving
+        # ad-hoc filter values cannot grow device memory without limit —
+        # in-flight scans hold direct references, so eviction only drops
+        # the cache's pin, never a buffer a pass is using
+        self._dev_masks: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
+        self._dev_values: "OrderedDict[object, jnp.ndarray]" = OrderedDict()
+        self._dev_gids: "OrderedDict[Optional[str], jnp.ndarray]" = \
+            OrderedDict()
 
     # -- index plumbing ------------------------------------------------------
 
@@ -223,18 +445,31 @@ class FastFrame:
         return self._bitmaps[column]
 
     def _composite_group(self, cols: Tuple[str, ...]) -> Tuple[str, int]:
-        """Synthesize (and cache) a composite group-code column."""
+        """Synthesize (and cache) a composite group-code column.
+
+        Raises:
+            ValueError: when the cardinality product exceeds the int32
+                group-code space the kernels operate in — composite codes
+                would silently wrap and merge unrelated groups.
+        """
         if len(cols) == 1:
             return cols[0], self.scramble.categorical[cols[0]]
         name = "__grp_" + "_".join(cols)
         if name not in self.scramble.columns:
             card = 1
+            for c in cols:
+                card *= int(self.scramble.categorical[c])
+            if card > _INT32_MAX:
+                raise ValueError(
+                    f"composite GROUP BY over {cols} has cardinality "
+                    f"product {card} > int32 max ({_INT32_MAX}); group "
+                    "codes would wrap and merge unrelated groups. Reduce "
+                    "the grouping cardinality (e.g. pre-bucket a column).")
             codes = np.zeros_like(self.scramble.columns[cols[0]],
                                   dtype=np.int64)
             for c in cols:
                 cc = self.scramble.categorical[c]
                 codes = codes * cc + self.scramble.columns[c]
-                card *= cc
             self.scramble.columns[name] = codes.astype(np.int32)
             self.scramble.categorical[name] = card
         return name, self.scramble.categorical[name]
@@ -242,7 +477,7 @@ class FastFrame:
     def _static_ok(self, q: AggQuery) -> Tuple[np.ndarray, int]:
         """Block-level predicate prefilter from categorical eq/isin filters
         (available to every approximate strategy, incl. Scan — §5.2)."""
-        key = tuple((f.column, f.op, str(f.value)) for f in q.filters
+        key = tuple(f.key() for f in q.filters
                     if f.categorical_eq and f.column in
                     self.scramble.categorical)
         if not key:
@@ -276,6 +511,58 @@ class FastFrame:
             return q.column, q.column.derived_bounds(self.scramble.catalog)
         return q.column, self.scramble.catalog[q.column]
 
+    def _cache_lru(self, cache: OrderedDict, key,
+                   build: Callable[[], jnp.ndarray]) -> jnp.ndarray:
+        hit = cache.get(key)
+        if hit is not None:
+            cache.move_to_end(key)
+            return hit
+        val = cache[key] = build()
+        while len(cache) > self.config.mat_cache_entries:
+            cache.popitem(last=False)
+        return val
+
+    def _device_mask(self, filters) -> jnp.ndarray:
+        """Device-resident (n_blocks, block_rows) f32 predicate*valid
+        mask, cached by the filters' key."""
+
+        def build():
+            sc = self.scramble
+            mask = sc.valid.copy()
+            for f in filters:
+                mask &= f.evaluate(sc.columns)
+            return jnp.asarray(mask.astype(np.float32))
+
+        return self._cache_lru(self._dev_masks,
+                               tuple(f.key() for f in filters), build)
+
+    def _device_values(self, value_src) -> jnp.ndarray:
+        """Device-resident f32 value column (zeros for COUNT), cached by
+        the column name / Expression."""
+
+        def build():
+            sc = self.scramble
+            if isinstance(value_src, Expression):
+                values = value_src.evaluate(sc.columns)
+            elif isinstance(value_src, str):
+                values = sc.columns[value_src].astype(np.float32)
+            else:  # COUNT: value column unused
+                values = np.zeros(sc.valid.shape, np.float32)
+            return jnp.asarray(values, jnp.float32)
+
+        return self._cache_lru(self._dev_values, value_src, build)
+
+    def _device_gids(self, gcol: Optional[str]) -> jnp.ndarray:
+        """Device-resident int32 group-code column, cached by name."""
+
+        def build():
+            sc = self.scramble
+            gids = (sc.columns[gcol].astype(np.int32) if gcol is not None
+                    else np.zeros(sc.valid.shape, np.int32))
+            return jnp.asarray(gids)
+
+        return self._cache_lru(self._dev_gids, gcol, build)
+
     def _materialize(self, q: AggQuery, idx: np.ndarray, value_src,
                      gcol: Optional[str]):
         sc = self.scramble
@@ -303,12 +590,24 @@ class FastFrame:
     # -- block folding ---------------------------------------------------------
 
     def _fold_blocks(self, q, idx, value_src, gcol, G, center, a, b,
-                     state, hist, use_hist):
+                     state, hist, use_hist, pad_to: Optional[int] = None):
         """Materialize blocks ``idx`` and fold them into the running
         per-group moment state (+ histogram): the one shared ingest path
-        for the main round loop and the recovery pass."""
+        for the main round loop and the recovery pass.
+
+        ``pad_to`` pads the fold input to a static block count so tail
+        rounds do not retrace the XLA fold computation; padding rows
+        carry ``mask == 0`` and contribute exact zeros.
+        """
         cfg = self.config
         values, gids, mask = self._materialize(q, idx, value_src, gcol)
+        if pad_to is not None and len(idx) < pad_to:
+            pr = pad_to - len(idx)
+            br = mask.shape[1]
+            values = np.concatenate(
+                [values, np.zeros((pr, br), values.dtype)])
+            gids = np.concatenate([gids, np.zeros((pr, br), gids.dtype)])
+            mask = np.concatenate([mask, np.zeros((pr, br), mask.dtype)])
         vf = jnp.asarray(values.reshape(-1))
         gf = jnp.asarray(gids.reshape(-1))
         mf = jnp.asarray(mask.reshape(-1).astype(np.float32))
@@ -317,7 +616,7 @@ class FastFrame:
         if use_hist:
             hupd = kops.grouped_hist(vf, gf, mf, G, a, b,
                                      nbins=cfg.hist_bins, impl=cfg.impl)
-            hist = hist + np.asarray(hupd.hist, np.float64)
+            hist = merge_hist_host(hist, hupd.hist)
         return state, hist
 
     # -- cursor advance --------------------------------------------------------
@@ -339,9 +638,17 @@ class FastFrame:
             ok = static_ok[batch]
             flags = ok.copy()
             if skipping and group_bm is not None:
+                # pad the tail batch to a full lookahead so the probe
+                # shapes stay static (no per-shape XLA retrace at the
+                # scramble tail); padded zero-words can never be active
+                bwords = group_bm.words[batch]
+                if len(batch) < lookahead:
+                    bwords = np.concatenate(
+                        [bwords, np.zeros((lookahead - len(batch),
+                                           group_bm.n_words), np.uint32)])
                 act = np.asarray(kops.active_blocks(
-                    jnp.asarray(group_bm.words[batch]), active_words,
-                    impl=self.config.impl)) > 0
+                    jnp.asarray(bwords), active_words,
+                    impl=self.config.impl))[:len(batch)] > 0
                 metrics["probes"] += len(batch)
                 flags &= act
             records.append((p, batch, ok, flags))
@@ -406,6 +713,53 @@ class FastFrame:
         return (order[pos + sel] if sel.size
                 else np.zeros(0, dtype=np.int64))
 
+    # -- recovery (soundness of termination) -----------------------------------
+
+    def _recovery_pass(self, slot: _ScanViews,
+                       qcis: List[_QueryIntervals], rounds: int,
+                       max_rounds: int) -> int:
+        """After the cursor exhausts the scramble, any still-active view is
+        either tainted (its CI froze when its blocks were skipped while it
+        was inactive) or empty. Tainted views cannot tighten via sampling
+        (their scan prefix is broken), but full coverage is always sound:
+        process their remaining unprocessed blocks until the aggregate is
+        exact. Guarantees termination for every stopping condition
+        (e.g. top-K with a moving midpoint re-activating frozen views).
+
+        Shared by :meth:`run` (one query) and ``FrameServer`` (all of a
+        slot's unfinished queries at once — the needed-block union covers
+        every query's active views). Returns the updated round count.
+        """
+        cfg = self.config
+
+        def union_active():
+            u = np.zeros(slot.G, dtype=bool)
+            for qc in qcis:
+                qc.active = qc.cond_active() & ~slot.exact & slot.valid
+                u |= qc.active
+            return u
+
+        while rounds < max_rounds:
+            counts = slot.counts
+            union = union_active()
+            if not union.any():
+                break
+            rounds += 1
+            need = slot.presence[:, union].any(axis=1) & ~slot.processed
+            idx = np.nonzero(need)[0][:cfg.lookahead_blocks]
+            if len(idx) == 0:
+                # active views with zero observed rows over full coverage
+                # are empty views: drop them
+                slot.exact |= union & (counts == 0)
+                if not union_active().any():
+                    break
+                continue
+            slot.ingest_blocks(idx, pad_to=cfg.lookahead_blocks)
+            slot.update_exact()
+            for qc in qcis:
+                qc.collapse_exact()
+        return rounds
+
     # -- main entry ------------------------------------------------------------
 
     def run(self, q: AggQuery, sampling: str = "active_peek",
@@ -438,79 +792,34 @@ class FastFrame:
         rng = np.random.default_rng(seed)
         exact_mode = (sampling == "exact") or (q.stop is None)
 
-        gcol, G = (None, 1)
-        if q.group_by is not None:
-            gcol, G = self._composite_group(q.group_cols)
-        value_src, (a, b) = self._values_and_bounds(q)
-        center = 0.5 * (a + b)
-        use_hist = (q.bounder == "anderson_dkw") and q.agg != "count"
-        bounder = (get_bounder(q.bounder, rangetrim=q.rangetrim)
-                   if q.agg != "count" else None)
-
         # scan order: random start, wrap around (paper §5.2)
         start = (rng.integers(nb) if start_block is None else start_block)
         order = (start + np.arange(nb)) % nb
         cum_rows = np.cumsum(self._valid_counts[order])
-        R = sc.n_rows
 
-        static_ok, probes0 = self._static_ok(q)
-        group_bm = self.bitmap(gcol) if gcol is not None else None
-        presence = (unpack_words(group_bm.words, G) if group_bm is not None
-                    else np.ones((nb, 1), dtype=bool))
-        presence_total = presence.sum(axis=0)
-
-        state = init_moments_host((G,))
-        hist = (np.zeros((G, cfg.hist_bins), np.float64) if use_hist
-                else None)
-        seen_presence = np.zeros(G, dtype=np.int64)
-        processed = np.zeros(nb, dtype=bool)
-        exact = presence_total == 0      # group code never occurs
-        tainted = np.zeros(G, dtype=bool)
-        # trivial a-priori bounds (valid before any sample is seen)
-        if q.agg == "avg":
-            lo0, hi0 = a, b
-        elif q.agg == "count":
-            lo0, hi0 = 0.0, float(R)
-        else:  # sum
-            lo0 = min(0.0, R * a)
-            hi0 = max(0.0, R * b)
-        lo = np.full(G, lo0)
-        hi = np.full(G, hi0)
-        est = np.full(G, center)
-        valid = presence_total > 0
-
-        def cond_active_mask(counts_arr):
-            """Stopping-condition activity over EXISTING views only
-            (phantom composite codes must not distort orderings)."""
-            out = np.zeros(G, dtype=bool)
-            if valid.any():
-                out[valid] = q.stop.active(lo[valid], hi[valid],
-                                           est[valid], counts_arr[valid])
-            return out
-        refreshed = np.zeros(G, dtype=bool)
-        pos = 0
+        slot = _ScanViews(self, q)
+        qci = _QueryIntervals(self, q, slot)
         metrics = {"skipped_static": 0, "skipped_active": 0,
-                   "probes": probes0}
-        blocks_fetched = 0
+                   "probes": slot.probes0}
+
+        pos = 0
         rounds = 0
         stopped_early = False
-        delta_view = q.delta / max(G, 1)
-        known_n = (not q.filters) and (q.group_by is None)
         skipping = (not exact_mode) and sampling in ("active_peek",
                                                      "active_sync")
         lookahead = (cfg.sync_lookahead_blocks if sampling == "active_sync"
                      else cfg.lookahead_blocks)
-        active = ~exact
-        active_words = (jnp.asarray(pack_mask(active)) if gcol is not None
-                        else None)
+        active_words = (jnp.asarray(pack_mask(qci.active))
+                        if slot.gcol is not None else None)
         cover_cap = cfg.round_blocks * cfg.cover_cap_factor
         fscan = None
         if cfg.fused and not exact_mode:
-            probe = skipping and group_bm is not None
-            fscan = _FusedScan(self, q, value_src, gcol, G, center, a, b,
-                               use_hist, probe, lookahead,
-                               cfg.round_blocks, cover_cap, static_ok,
-                               group_bm if probe else None, order)
+            probe = skipping and slot.group_bm is not None
+            fscan = _FusedScan(self, q, slot.value_src, slot.gcol, slot.G,
+                               slot.center, slot.a, slot.b, slot.use_hist,
+                               probe, lookahead, cfg.round_blocks,
+                               cover_cap, slot.static_ok,
+                               slot.group_bm if probe else None, order)
 
         while pos < nb and rounds < max_rounds:
             rounds += 1
@@ -525,137 +834,45 @@ class FastFrame:
                 upd, hupd, ok_w, flags_w, new_pos = \
                     fscan.round(pos, active_words)
                 idx = self._fused_accounting(
-                    order, pos, new_pos, ok_w, flags_w, presence, tainted,
-                    lookahead, cfg.round_blocks, cover_cap, fscan.probe,
-                    metrics)
+                    order, pos, new_pos, ok_w, flags_w, slot.presence,
+                    slot.tainted, lookahead, cfg.round_blocks, cover_cap,
+                    fscan.probe, metrics)
                 pos = new_pos
             else:
                 idx, pos = self._advance(
-                    order, pos, static_ok, group_bm, active_words, presence,
-                    tainted, lookahead, cfg.round_blocks, cover_cap,
-                    skipping, metrics)
+                    order, pos, slot.static_ok, slot.group_bm,
+                    active_words, slot.presence, slot.tainted, lookahead,
+                    cfg.round_blocks, cover_cap, skipping, metrics)
 
             if len(idx):
-                processed[idx] = True
-                blocks_fetched += len(idx)
                 if upd is not None:
-                    # merge the fused round's mergeable deltas
-                    state = merge_moments_host(state, to_host(upd))
-                    if use_hist:
-                        hist = hist + np.asarray(hupd, np.float64)
+                    slot.ingest_delta(idx, upd, hupd)
                 else:
-                    state, hist = self._fold_blocks(q, idx, value_src, gcol,
-                                                    G, center, a, b, state,
-                                                    hist, use_hist)
-                seen_presence += presence[idx].sum(axis=0)
-
-            r = int(cum_rows[pos - 1]) if pos > 0 else 0
-            # Sweep exhaustion proves exactness only for untainted views: an
-            # untainted view's unprocessed blocks were all static-skipped
-            # (zero view rows), whereas a tainted view lost member rows to
-            # activity skips and must finish via the recovery pass below —
-            # collapsing it here would overwrite a valid frozen CI with a
-            # biased point estimate.
-            exact |= (seen_presence >= presence_total) | \
-                ((pos >= nb) & ~tainted)
+                    slot.ingest_blocks(
+                        idx, pad_to=(cfg.lookahead_blocks if exact_mode
+                                     else cfg.round_blocks))
+            slot.update_exact(pos)
 
             if exact_mode:
                 continue
 
-            # ---- 3. per-view CI refresh (one batched call, no G-loop) ------
-            dk = delta_schedule(delta_view, rounds)
-            counts = state.count
-            refresh = ~tainted & (counts > 0) & (active | ~refreshed)
-            gidx = np.nonzero(refresh)[0]
-            if gidx.size:
-                sb = StatsBatch.from_state(
-                    state, hist if use_hist else None).take(gidx)
-                glo, ghi, gest = _batched_view_ci(q, sb, a, b, r, R, dk,
-                                                  known_n, bounder,
-                                                  cfg.alpha)
-                lo[gidx] = np.maximum(lo[gidx], glo)
-                hi[gidx] = np.minimum(hi[gidx], ghi)
-                est[gidx] = gest
-                refreshed[gidx] = True
-            pt_exact = exact & (counts > 0)
-            if pt_exact.any():  # full coverage -> point interval
-                ex_est = self._exact_estimate(q, counts, state.mean, R)
-                lo[pt_exact] = hi[pt_exact] = est[pt_exact] = \
-                    ex_est[pt_exact]
+            # ---- 3. per-view CI refresh ------------------------------------
+            r = int(cum_rows[pos - 1]) if pos > 0 else 0
+            qci.refresh(rounds, r)
 
-            # ---- 4. stopping / activity -------------------------------------
-            cond_active = cond_active_mask(counts)
-            active = cond_active & ~exact & valid
-            if not active.any():
+            # ---- 4. stopping / activity ------------------------------------
+            if not qci.update_active():
                 stopped_early = pos < nb
                 break
-            if gcol is not None:
-                active_words = jnp.asarray(pack_mask(active))
+            if slot.gcol is not None:
+                active_words = jnp.asarray(pack_mask(qci.active))
 
-        # ---- recovery pass (soundness of termination) --------------------
-        # After the cursor exhausts the scramble, any still-active view is
-        # either tainted (its CI froze when its blocks were skipped while it
-        # was inactive) or empty. Tainted views cannot tighten via sampling
-        # (their scan prefix is broken), but full coverage is always sound:
-        # process their remaining unprocessed blocks until the aggregate is
-        # exact. Guarantees termination for every stopping condition
-        # (e.g. top-K with a moving midpoint re-activating frozen views).
-        while not exact_mode and rounds < max_rounds:
-            counts = state.count
-            cond_active = cond_active_mask(counts)
-            active = cond_active & ~exact & valid
-            if not active.any():
-                break
-            rounds += 1
-            need = presence[:, active].any(axis=1) & ~processed
-            idx = np.nonzero(need)[0][:cfg.lookahead_blocks]
-            if len(idx) == 0:
-                # active views with zero observed rows over full coverage
-                # are empty views: drop them
-                exact |= active & (counts == 0)
-                if not (cond_active_mask(counts) & ~exact & valid).any():
-                    break
-                continue
-            processed[idx] = True
-            blocks_fetched += len(idx)
-            state, hist = self._fold_blocks(q, idx, value_src, gcol, G,
-                                            center, a, b, state, hist,
-                                            use_hist)
-            seen_presence += presence[idx].sum(axis=0)
-            exact |= seen_presence >= presence_total
-            counts, means = state.count, state.mean
-            full = exact & (counts > 0)
-            if full.any():
-                ex_est = self._exact_estimate(q, counts, means, R)
-                lo[full] = hi[full] = est[full] = ex_est[full]
+        if not exact_mode:
+            rounds = self._recovery_pass(slot, [qci], rounds, max_rounds)
 
-        counts, means = state.count, state.mean
-        nonempty = counts > 0
-        full = exact & nonempty
-        if full.any():
-            ex_est = self._exact_estimate(q, counts, means, R)
-            lo[full] = hi[full] = est[full] = ex_est[full]
+        qci.collapse_exact()
         if exact_mode:
             stopped_early = False
 
-        return QueryResult(
-            group_codes=np.arange(G), estimate=est, lo=lo, hi=hi,
-            count_seen=counts, nonempty=nonempty, exact=exact,
-            tainted=tainted,
-            rows_covered=int(cum_rows[pos - 1]) if pos else 0,
-            blocks_fetched=blocks_fetched,
-            blocks_skipped_active=metrics["skipped_active"],
-            blocks_skipped_static=metrics["skipped_static"],
-            bitmap_probes=metrics["probes"], rounds=rounds,
-            wall_time_s=time.perf_counter() - t0,
-            stopped_early=stopped_early)
-
-    # -- CI helpers -------------------------------------------------------------
-
-    def _exact_estimate(self, q, counts, means, R):
-        """Vectorized point estimate over fully-covered views."""
-        if q.agg == "avg":
-            return means
-        if q.agg == "count":
-            return counts
-        return means * counts  # sum
+        return qci.result(rounds, pos, cum_rows, metrics, t0,
+                          stopped_early)

@@ -51,6 +51,11 @@ class Filter:
     def categorical_eq(self) -> bool:
         return self.op in ("eq", "isin")
 
+    def key(self) -> Tuple[str, str, str]:
+        """Hashable identity of this predicate (array values normalized),
+        used to key shared materialization caches and scan signatures."""
+        return (self.column, self.op, repr(np.asarray(self.value).tolist()))
+
 
 @dataclasses.dataclass(frozen=True)
 class Expression:
@@ -117,6 +122,33 @@ class AggQuery:
         if isinstance(self.group_by, str):
             return (self.group_by,)
         return tuple(self.group_by)
+
+    @property
+    def needs_hist(self) -> bool:
+        """Whether this query's bounder consumes the DKW histogram state
+        (single source of truth for the engine, the CI refresh and the
+        serving planner)."""
+        return self.bounder == "anderson_dkw" and self.agg != "count"
+
+    @property
+    def value_key(self):
+        """Hashable identity of the value column (None for COUNT, which
+        never reads values). :class:`Expression` hashes by its ``fn``
+        callable's identity — two lambdas with identical source are
+        distinct keys — so serving workloads should construct an
+        Expression once and reuse it across queries to share device
+        materialization and fold slots."""
+        return None if self.agg == "count" else self.column
+
+    def scan_signature(self) -> Tuple:
+        """(filters, column, group-by) identity. Two queries with equal
+        signatures scan bitwise-identical device-resident value / mask /
+        group-code columns, so they can share one fused-scan fold — this
+        is the :class:`repro.serve.FrameServer` slot key and the key of
+        :class:`~repro.aqp.engine.FastFrame`'s device materialization
+        caches."""
+        return (tuple(f.key() for f in self.filters), self.value_key,
+                self.group_cols)
 
 
 @dataclasses.dataclass

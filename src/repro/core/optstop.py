@@ -124,7 +124,13 @@ class RelativeWidth(StoppingCondition):
         with np.errstate(divide="ignore", invalid="ignore"):
             rel = np.maximum((hi - est) / np.abs(hi), (est - lo) / np.abs(lo))
         undecided = (lo <= 0.0) & (hi >= 0.0)
-        return undecided | ~np.isfinite(rel) | (rel >= self.eps)
+        # A zero-width interval is exact: relative error is 0 no matter the
+        # sign, including at 0, where the `undecided` guard below would
+        # otherwise keep the view active forever (the interval [0, 0]
+        # covers 0 on both sides and rel is NaN there).  Deactivate before
+        # the undecided check.
+        point = hi <= lo
+        return ~point & (undecided | ~np.isfinite(rel) | (rel >= self.eps))
 
 
 @dataclasses.dataclass

@@ -135,6 +135,15 @@ def to_host(state: MomentState) -> MomentState:
     return MomentState(*(np.asarray(f, np.float64) for f in state))
 
 
+def merge_hist_host(hist: Optional[np.ndarray], delta) -> np.ndarray:
+    """Float64 histogram accumulation twin of :func:`merge_moments_host`:
+    fold a device-side f32 ``(G, K)`` bin-count delta into the host's f64
+    running histogram (bin counts are integers, so f64 keeps them exact
+    for any realistic scan length). ``hist=None`` starts a fresh state."""
+    d = np.asarray(delta, np.float64)
+    return d.copy() if hist is None else hist + d
+
+
 def merge_moments_host(a: MomentState, b: MomentState) -> MomentState:
     """Float64 numpy pairwise merge. Device kernels emit f32 per-round
     partial states; the engine's *running* state accumulates on host in

@@ -29,6 +29,13 @@ reference path would fold, in the same order, so moment/histogram deltas
 are bitwise identical (padding lanes carry ``mask == 0`` and contribute
 exact zeros).
 
+:func:`fused_round_multi` generalizes the round to a *batch* of queries
+sharing one cursor walk (the :class:`repro.serve.FrameServer` serving
+path): per-query active-word stacks drive the activity test, selection
+takes the union across queries, and each distinct (column, group-by)
+slot folds its own moment/histogram state from the shared gather — still
+one device dispatch and one host sync per round for the whole batch.
+
 Backends (same selector as :mod:`repro.kernels.ops`):
 
   * ``impl='ref'``       — the fold reuses the pure-jnp oracles (XLA
@@ -187,6 +194,33 @@ def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl):
     return state, hist[:num_groups, :nbins]
 
 
+def _budget_select(flags: jax.Array, pos: jax.Array, nb: int, window: int,
+                   budget: int):
+    """Budgeted selection, replicating the reference cursor bit-for-bit:
+    take the first ``budget`` flagged blocks; the cursor cut is one past
+    the budget-th selected block, else the (nb-clamped) window end.
+    Returns ``(take mask over the window, new_pos)``."""
+    csum = jnp.cumsum(flags.astype(jnp.int32))
+    take = flags & (csum <= budget)
+    n_sel = csum[window - 1]
+    cut = jnp.argmax((csum == budget) & flags).astype(jnp.int32)
+    covered = jnp.where(n_sel >= budget, cut + 1,
+                        jnp.minimum(jnp.int32(window),
+                                    jnp.int32(nb) - pos))
+    return take, pos + covered
+
+
+def _gather_blocks(take: jax.Array, win: jax.Array, window: int,
+                   budget: int):
+    """Selected window positions -> padded block ids + padding-lane mask.
+    Padding lanes point at block 0 with ``tvalid`` False (their rows are
+    masked out of the fold)."""
+    take_idx = jnp.nonzero(take, size=budget, fill_value=window)[0]
+    tvalid = take_idx < window
+    blk = jnp.where(tvalid, win[jnp.minimum(take_idx, window - 1)], 0)
+    return blk, tvalid
+
+
 @functools.partial(jax.jit, static_argnames=(
     "nb", "window", "budget", "center", "a", "b", "num_groups", "nbins",
     "use_hist", "probe", "impl"))
@@ -228,21 +262,8 @@ def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
     else:
         flags = ok
 
-    # Budgeted selection, replicating the reference cursor bit-for-bit:
-    # take the first `budget` flagged blocks; the cursor cut is one past
-    # the budget-th selected block, else the (nb-clamped) window end.
-    csum = jnp.cumsum(flags.astype(jnp.int32))
-    take = flags & (csum <= budget)
-    n_sel = csum[window - 1]
-    cut = jnp.argmax((csum == budget) & flags).astype(jnp.int32)
-    covered = jnp.where(n_sel >= budget, cut + 1,
-                        jnp.minimum(jnp.int32(window),
-                                    jnp.int32(nb) - pos))
-    new_pos = pos + covered
-
-    take_idx = jnp.nonzero(take, size=budget, fill_value=window)[0]
-    tvalid = take_idx < window
-    blk = jnp.where(tvalid, win[jnp.minimum(take_idx, window - 1)], 0)
+    take, new_pos = _budget_select(flags, pos, nb, window, budget)
+    blk, tvalid = _gather_blocks(take, win, window, budget)
     v = values[blk].reshape(-1)
     g = gids[blk].reshape(-1)
     m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
@@ -250,3 +271,74 @@ def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
     state, hist = _fold(v, g, m, center, a, b, num_groups, nbins,
                         use_hist, impl)
     return state, hist, ok, flags, new_pos
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nb", "window", "budget", "meta", "impl"))
+def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
+                      static_ok: jax.Array, pos: jax.Array,
+                      values, gids, words, active, *, nb: int, window: int,
+                      budget: int, meta, impl: str):
+    """One fused scan round shared by several queries (one device
+    dispatch per round for a whole :class:`repro.serve.FrameServer`
+    pass). All queries share the predicate mask, static prefilter and the
+    cursor walk; each *slot* (distinct ``(column, group-by)`` over the
+    shared filters) gets its own value/group columns and fold, and each
+    *query* contributes one row of its slot's active-word stack to the
+    activity test.
+
+    Args (device arrays unless noted):
+      mask: ``(nb, block_rows)`` shared predicate*valid mask (f32);
+      order_pad / static_ok / pos: as in :func:`fused_round`;
+      values / gids: length-S tuples of ``(nb, block_rows)`` per-slot
+        value (f32) / group-code (i32) columns;
+      words: length-S tuple of ``(nb, W_s)`` uint32 bitmap words — the
+        slot's group bitmap, or an all-ones ``(nb, 1)`` engagement bitmap
+        for slots that do not activity-skip (their queries then gate
+        selection with a single engaged/finished bit);
+      active: length-S tuple of ``(Q_s, W_s)`` uint32 per-query
+        active-word stacks.
+
+    Static config: ``meta`` is a length-S tuple of per-slot
+    ``(num_groups, nbins, use_hist, a, b, center)`` tuples; ``nb`` /
+    ``window`` / ``budget`` as in :func:`fused_round`.
+
+    Selection takes the UNION of every query's activity flags — a block
+    is skipped only when no query in the pass wants it, so each query's
+    skipped blocks contain only views inactive for that query (the taint
+    invariant holds per query). With a single slot and a single query the
+    selection and fold are the same computation as :func:`fused_round`,
+    so a served singleton stays bitwise identical to ``FastFrame.run``.
+
+    Returns ``(states, hists, flag_stacks, ok, new_pos)``: per-slot
+    mergeable deltas (``hists[s]`` is None when the slot has no
+    histogram), per-slot ``(Q_s, window)`` bool per-query activity
+    verdicts, the shared static verdicts and the advanced cursor.
+    """
+    offs = jnp.arange(window, dtype=jnp.int32)
+    in_range = (pos + offs) < nb
+    win = jax.lax.dynamic_slice(order_pad, (pos,), (window,))
+    ok = static_ok[win] & in_range
+
+    flag_stacks = []
+    union = jnp.zeros((window,), bool)
+    for s in range(len(meta)):
+        act = kops.active_blocks_multi(words[s][win], active[s],
+                                       impl=impl) > 0
+        fl = ok[None, :] & act
+        flag_stacks.append(fl)
+        union = union | fl.any(axis=0)
+
+    take, new_pos = _budget_select(union, pos, nb, window, budget)
+    blk, tvalid = _gather_blocks(take, win, window, budget)
+    m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+
+    states, hists = [], []
+    for s, (num_groups, nbins, use_hist, a, b, center) in enumerate(meta):
+        v = values[s][blk].reshape(-1)
+        g = gids[s][blk].reshape(-1)
+        st, h = _fold(v, g, m, center, a, b, num_groups, nbins,
+                      use_hist, impl)
+        states.append(st)
+        hists.append(h)
+    return tuple(states), tuple(hists), tuple(flag_stacks), ok, new_pos

@@ -138,3 +138,26 @@ def active_blocks(bitmap: jax.Array, active_words: jax.Array, *,
     out = _bitmap.active_blocks(bm, active_words, block_tile=block_tile,
                                 interpret=(impl == "interpret"))
     return out.reshape(-1)[:nblocks]
+
+
+def active_blocks_multi(bitmap: jax.Array, active_stack: jax.Array, *,
+                        impl: Optional[str] = None,
+                        block_tile: int = _bitmap.BLOCK_TILE) -> jax.Array:
+    """Per-query activity probe against one bitmap: ``active_stack`` is a
+    ``(Q, W)`` stack of packed active-group masks (one row per query
+    sharing the scan — see :func:`repro.kernels.fused_scan.
+    fused_round_multi`); returns int32 ``(Q, nblocks)`` flags, row ``q``
+    bitwise identical to ``active_blocks(bitmap, active_stack[q])``.
+
+    The ref backend broadcasts the AND-any over the stack in one jnp
+    computation; kernel backends probe per row (the Pallas kernel's
+    block-tile layout is per-mask)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        hit = jnp.bitwise_and(bitmap.astype(jnp.uint32)[None, :, :],
+                              active_stack.astype(jnp.uint32)[:, None, :])
+        return (jnp.max(hit, axis=2) > 0).astype(jnp.int32)
+    return jnp.stack([
+        active_blocks(bitmap, active_stack[q], impl=impl,
+                      block_tile=block_tile)
+        for q in range(active_stack.shape[0])])

@@ -1,1 +1,10 @@
-"""repro.serve — decode/prefill step builders and batching."""
+"""repro.serve — query serving layer.
+
+:class:`FrameServer` plans batches of concurrent aggregate queries over
+one :class:`~repro.aqp.engine.FastFrame` into shared fused-scan passes
+(see :mod:`repro.serve.frame_server` and ``docs/serving.md``).
+"""
+
+from repro.serve.frame_server import FrameServer
+
+__all__ = ["FrameServer"]

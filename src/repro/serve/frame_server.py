@@ -1,0 +1,260 @@
+"""FrameServer: shared-scan serving of concurrent AggQuery batches.
+
+``FastFrame.run`` answers one query per scan: it materializes device
+columns, walks the scramble, and folds blocks for that query alone. Under
+concurrent traffic most of that work is redundant — queries over the same
+table share filters, value columns and groupings, and every query walks
+the same scramble. :class:`FrameServer` amortizes it three ways:
+
+  1. **Materialization caching** — the device-resident value / mask /
+     group-code columns are cached on the :class:`~repro.aqp.engine.
+     FastFrame` keyed by the components of the ``(filters, column,
+     group-by)`` scan signature, so repeat queries (within a batch and
+     across batches) never re-upload columns.
+  2. **Shared fused-scan passes** — queries with the same filters are
+     planned into one *pass*: a single cursor walk whose per-round device
+     dispatch (:func:`repro.kernels.fused_scan.fused_round_multi`) folds
+     every distinct ``(column, group-by)`` *slot* of the pass at once,
+     with per-query active-word stacks driving the activity test and
+     selection taking the union across queries.
+  3. **Fold sharing** — queries with bitwise-equal scan signatures map to
+     the same slot and share one :class:`~repro.aqp.engine._ScanViews`
+     fold state; each keeps its own :class:`~repro.aqp.engine.
+     _QueryIntervals` (OptStop schedule, CI refresh, stopping condition),
+     which is the cheap part of a round.
+
+Soundness: a pass skips a block only when NO query in it has an active
+view there, so each query's skipped blocks contain only views inactive
+for that query — exactly the single-query taint invariant, enforced per
+query by the shared accounting. Every query keeps its own delta schedule
+(evaluated at the shared pass round number, a valid OptStop schedule),
+and the recovery pass finishes any view left active at exhaustion.
+
+A batch containing a single query (or a pass whose slots reduce to one
+query) runs the same selection/fold computation as ``FastFrame.run`` and
+returns a bitwise-identical :class:`~repro.aqp.query.QueryResult`
+(``tests/test_serve.py`` asserts this against the engine's own fused and
+per-block reference paths).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp.bitmap import pack_mask
+from repro.aqp.engine import (FastFrame, _QueryIntervals, _round_window,
+                              _ScanViews)
+from repro.aqp.query import AggQuery, QueryResult
+from repro.kernels import fused_scan as kfused
+from repro.kernels import ops as kops
+
+__all__ = ["FrameServer"]
+
+
+class _SlotExec:
+    """One (filters, column, group-by) signature inside a pass: the shared
+    fold state plus the device buffers and per-query interval states."""
+
+    def __init__(self, frame: FastFrame, rep_q: AggQuery, skipping: bool,
+                 queries: Sequence[AggQuery]):
+        use_hist_any = any(q.needs_hist for q in queries)
+        self.views = _ScanViews(frame, rep_q, use_hist=use_hist_any)
+        self.qcis = [_QueryIntervals(frame, q, self.views) for q in queries]
+        v = self.views
+        # probe slots activity-test their real group bitmap; non-probe
+        # slots (no GROUP BY, or non-skipping sampling) carry an all-ones
+        # engagement bitmap so a finished query stops pulling blocks
+        # without changing which blocks it saw while running
+        self.probe = skipping and v.group_bm is not None
+        self.values = frame._device_values(v.value_src)
+        self.gids = frame._device_gids(v.gcol)
+        nb = frame.scramble.n_blocks
+        self.words = (jnp.asarray(v.group_bm.words) if self.probe
+                      else jnp.ones((nb, 1), jnp.uint32))
+        self.meta = (v.G, frame.config.hist_bins, v.use_hist,
+                     float(v.a), float(v.b), float(v.center))
+        self.metrics = {"skipped_static": 0, "skipped_active": 0,
+                        "probes": v.probes0}
+
+    def active_stack(self) -> jnp.ndarray:
+        """(Q, W) uint32 per-query active words for this round."""
+        if self.probe:
+            rows = [pack_mask(qc.active) for qc in self.qcis]
+        else:
+            rows = [np.asarray([0 if qc.finished else 1], np.uint32)
+                    for qc in self.qcis]
+        return jnp.asarray(np.stack(rows))
+
+
+class FrameServer:
+    """Serve batches of :class:`~repro.aqp.query.AggQuery` over one
+    :class:`~repro.aqp.engine.FastFrame` with shared fused-scan passes.
+
+    Example::
+
+        server = FrameServer(frame)
+        results = server.run_batch([q1, q2, q3])   # one scan, 3 answers
+
+    The server is stateless between batches except for the device
+    materialization caches it shares with the frame, so it is safe to
+    interleave ``run_batch`` with direct ``frame.run`` calls.
+    """
+
+    def __init__(self, frame: FastFrame):
+        self.frame = frame
+
+    # -- planning --------------------------------------------------------------
+
+    def plan(self, queries: Sequence[AggQuery]
+             ) -> Dict[Tuple, List[int]]:
+        """Group query indices into shared-scan passes by filters key.
+        Exposed for tests/benchmarks; ``run_batch`` uses the same
+        grouping."""
+        passes: Dict[Tuple, List[int]] = {}
+        for i, q in enumerate(queries):
+            pkey = tuple(f.key() for f in q.filters)
+            passes.setdefault(pkey, []).append(i)
+        return passes
+
+    def run_batch(self, queries: Sequence[AggQuery],
+                  sampling: str = "active_peek",
+                  start_block: Optional[int] = None, seed: int = 0,
+                  max_rounds: int = 100_000) -> List[QueryResult]:
+        """Answer every query, sharing scans where signatures allow.
+
+        Args mirror :meth:`FastFrame.run`; all queries of a batch use the
+        same sampling strategy and scan start (queries are only merged
+        into a pass when they share filters, and only into a slot when
+        their full scan signature matches). Exact-mode queries
+        (``sampling='exact'`` or ``stop is None``) cannot share a
+        budgeted cursor walk and are delegated to ``frame.run``.
+
+        Returns results in input order.
+        """
+        results: List[Optional[QueryResult]] = [None] * len(queries)
+        shared: List[int] = []
+        for i, q in enumerate(queries):
+            if sampling == "exact" or q.stop is None:
+                results[i] = self.frame.run(
+                    q, sampling=sampling, start_block=start_block,
+                    seed=seed, max_rounds=max_rounds)
+            else:
+                shared.append(i)
+        for pkey, members in self.plan(
+                [queries[i] for i in shared]).items():
+            idxs = [shared[m] for m in members]
+            out = self._run_pass([queries[i] for i in idxs], sampling,
+                                 start_block, seed, max_rounds)
+            for i, res in zip(idxs, out):
+                results[i] = res
+        return results
+
+    # -- one shared pass -------------------------------------------------------
+
+    def _run_pass(self, queries: Sequence[AggQuery], sampling: str,
+                  start_block: Optional[int], seed: int,
+                  max_rounds: int) -> List[QueryResult]:
+        t0 = time.perf_counter()
+        frame = self.frame
+        cfg = frame.config
+        sc = frame.scramble
+        nb = sc.n_blocks
+        rng = np.random.default_rng(seed)
+        start = (rng.integers(nb) if start_block is None else start_block)
+        order = (start + np.arange(nb)) % nb
+        cum_rows = np.cumsum(frame._valid_counts[order])
+
+        skipping = sampling in ("active_peek", "active_sync")
+        lookahead = (cfg.sync_lookahead_blocks
+                     if sampling == "active_sync" else cfg.lookahead_blocks)
+        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
+        window = _round_window(nb, lookahead, cover_cap)
+        impl = kops.resolve_impl(cfg.impl)
+
+        # slots: one fold per distinct scan signature
+        by_sig: Dict[Tuple, List[AggQuery]] = {}
+        for q in queries:
+            by_sig.setdefault(q.scan_signature(), []).append(q)
+        slots = [_SlotExec(frame, qs[0], skipping, qs)
+                 for qs in by_sig.values()]
+        qci_of = {id(q): qc for s in slots
+                  for q, qc in zip(by_sig[s.views.rep_q.scan_signature()],
+                                   s.qcis)}
+
+        mask_dev = frame._device_mask(queries[0].filters)
+        static_ok = slots[0].views.static_ok
+        static_ok_dev = jnp.asarray(static_ok)
+        opad = np.zeros(nb + window, np.int32)
+        opad[:nb] = order
+        order_pad_dev = jnp.asarray(opad)
+        values_t = tuple(s.values for s in slots)
+        gids_t = tuple(s.gids for s in slots)
+        words_t = tuple(s.words for s in slots)
+        meta_t = tuple(s.meta for s in slots)
+
+        # a query's QueryResult is built the moment it finishes, so its
+        # metrics AND per-view state are one consistent snapshot (the
+        # slot keeps scanning for the pass's remaining queries afterwards)
+        finished: Dict[int, QueryResult] = {}   # id(qci) -> result
+        pos = 0
+        rounds = 0
+        n_live = sum(len(s.qcis) for s in slots)
+        while pos < nb and rounds < max_rounds and n_live:
+            rounds += 1
+            stacks = tuple(s.active_stack() for s in slots)
+            states, hists, flag_stacks, ok_d, new_pos_d = \
+                kfused.fused_round_multi(
+                    mask_dev, order_pad_dev, static_ok_dev,
+                    jnp.asarray(pos, jnp.int32), values_t, gids_t,
+                    words_t, stacks, nb=nb, window=window,
+                    budget=cfg.round_blocks, meta=meta_t, impl=impl)
+            ok = np.asarray(ok_d)
+            new_pos = int(new_pos_d)
+            union = np.logical_or.reduce(
+                [np.asarray(fl).any(axis=0) for fl in flag_stacks])
+            for s, st, h in zip(slots, states, hists):
+                idx = frame._fused_accounting(
+                    order, pos, new_pos, ok, union, s.views.presence,
+                    s.views.tainted, lookahead, cfg.round_blocks,
+                    cover_cap, s.probe, s.metrics)
+                if len(idx):
+                    s.views.ingest_delta(idx, st, h)
+                s.views.update_exact(new_pos)
+            pos = new_pos
+            r = int(cum_rows[pos - 1]) if pos > 0 else 0
+            for s in slots:
+                for qc in s.qcis:
+                    if qc.finished:
+                        continue
+                    qc.refresh(rounds, r)
+                    if not qc.update_active():
+                        qc.finished = True
+                        n_live -= 1
+                        finished[id(qc)] = qc.result(
+                            rounds, pos, cum_rows, dict(s.metrics), t0,
+                            stopped_early=pos < nb)
+
+        # recovery per slot for queries that exhausted the scramble while
+        # still active (shared block fetches across the slot's queries)
+        rec_rounds: Dict[int, int] = {}
+        for s in slots:
+            rec = [qc for qc in s.qcis if not qc.finished]
+            if rec:
+                rec_rounds[id(s)] = frame._recovery_pass(
+                    s.views, rec, rounds, max_rounds)
+
+        out = []
+        for q in queries:
+            qc = qci_of[id(q)]
+            if id(qc) in finished:
+                out.append(finished[id(qc)])
+                continue
+            s = next(s for s in slots if qc in s.qcis)
+            qc.collapse_exact()
+            out.append(qc.result(rec_rounds.get(id(s), rounds), pos,
+                                 cum_rows, s.metrics, t0, False))
+        return out

@@ -1,0 +1,75 @@
+"""Subprocess worker: the distributed psum/pmin/pmax merge must match the
+single-device ``grouped_moments`` fold BITWISE on an 8-device CPU mesh
+(with and without the histogram).
+
+The data is constructed so every intermediate of both pipelines is exact
+in f32 — then the two computations evaluate the same real numbers and
+bitwise equality is forced, not a rounding coincidence:
+
+  * values are small integers (|dv| <= 2 about an integer center), so
+    every sum / sum-of-squares is an exact small integer;
+  * every group gets a power-of-two row count on every shard (gids cycle
+    0..G-1 and G divides the shard size), so the Welford mean division
+    and the ``_state_to_raw`` round trip ``(mean - center) * count`` are
+    exact exponent shifts;
+  * the mask is all-ones to preserve those counts.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
+test sets it). Exits nonzero on any bitwise mismatch.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.aqp.distributed import make_distributed_round, shard_rows  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    g = 32
+    n = 8 * 512                       # 16 rows per group per shard (2^4)
+    center = 2.0
+    gids = (np.arange(n) % g).astype(np.int32)
+    # integer values in {0..4}, deterministic but varied across groups
+    values = (((np.arange(n) * 7) // 5 + gids) % 5).astype(np.float32)
+    mask = np.ones(n, np.float32)
+
+    v, gi, m = shard_rows(mesh, ("pod", "data"), values, gids, mask)
+    ref = kops.grouped_moments(jnp.asarray(values), jnp.asarray(gids),
+                               jnp.asarray(mask), g, center, impl="ref")
+
+    round_fn = make_distributed_round(mesh, ("pod", "data"), g, center)
+    with mesh:
+        merged = round_fn(v, gi, m)
+    for name in ("count", "mean", "m2", "vmin", "vmax"):
+        got = np.asarray(getattr(merged, name))
+        want = np.asarray(getattr(ref, name))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+    # with histogram: integer bin counts psum exactly
+    round_fn_h = make_distributed_round(
+        mesh, ("pod", "data"), g, center, with_hist=True, hist_bins=128,
+        hist_range=(0.0, 5.0))
+    with mesh:
+        merged_h, hist = round_fn_h(v, gi, m)
+    for name in ("count", "mean", "m2", "vmin", "vmax"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(merged_h, name)),
+            np.asarray(getattr(ref, name)), err_msg="hist-" + name)
+    ref_h = kops.grouped_hist(jnp.asarray(values), jnp.asarray(gids),
+                              jnp.asarray(mask), g, 0.0, 5.0, nbins=128,
+                              impl="ref")
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(ref_h.hist))
+    print("DIST-AQP-BITWISE-OK")
+
+
+if __name__ == "__main__":
+    main()

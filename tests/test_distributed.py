@@ -29,6 +29,14 @@ def test_distributed_aqp_round():
     assert "DIST-AQP-OK" in out
 
 
+def test_distributed_merge_bitwise():
+    """psum/pmin/pmax merge == single-device grouped_moments fold, bit
+    for bit, with and without the histogram (exactly-representable data
+    forces bitwise equality — see the worker's docstring)."""
+    out = run_worker("dist_aqp_bitwise_worker.py")
+    assert "DIST-AQP-BITWISE-OK" in out
+
+
 def test_distributed_train_step_elastic_checkpoint():
     out = run_worker("dist_train_worker.py", timeout=900)
     assert "SHARDED-STEP-OK" in out

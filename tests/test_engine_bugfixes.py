@@ -1,0 +1,230 @@
+"""Regression tests for the round-loop correctness fixes:
+
+  1. the per-view delta budget is split over *valid* views only (phantom
+     composite codes, known a priori from the bitmap, no longer widen
+     every real view's CI);
+  2. composite GROUP BY cardinality products that overflow int32 raise a
+     clear error instead of silently wrapping and merging groups;
+  3. ``RelativeWidth`` deactivates zero-width intervals (a view whose
+     true aggregate is 0 no longer stays active forever);
+  4. probe/fold shapes stay static through the scramble tail (no
+     per-round XLA retrace when the final window shrinks).
+
+Each test fails on the pre-fix engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.aqp import (AggQuery, EngineConfig, FastFrame, Filter,
+                       build_scramble)
+from repro.aqp import engine as engine_mod
+from repro.core.optstop import AbsoluteWidth, RelativeWidth, ThresholdSide
+from repro.kernels import ops as kops
+
+
+def _toy_scramble(card, n=20_000, seed=0, block_rows=64):
+    """Group column with codes only in {0..3} but a declared cardinality
+    of ``card`` — codes 4..card-1 are phantom views."""
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, 4, n).astype(np.int32)
+    v = (g * 10.0 + rng.normal(0.0, 2.0, n)).astype(np.float32)
+    return build_scramble({"g": g, "v": v}, catalog={"v": (-20.0, 60.0)},
+                          categorical={"g": card}, block_rows=block_rows,
+                          seed=seed + 1)
+
+
+# -- 1. delta split over valid views only -------------------------------------
+
+
+def test_phantom_codes_do_not_widen_intervals():
+    """A group space padded with phantom codes must produce EXACTLY the
+    intervals of the unpadded space: delta is split over the 4 views that
+    exist (presence_total > 0), not over the declared cardinality.
+    Pre-fix, the padded run split delta 16x thinner and returned wider
+    CIs for the same scan."""
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1.0), delta=1e-9)
+    kw = dict(sampling="scan", seed=1, start_block=0)
+    res4 = FastFrame(_toy_scramble(card=4),
+                     EngineConfig(round_blocks=8)).run(q, **kw)
+    res64 = FastFrame(_toy_scramble(card=64),
+                      EngineConfig(round_blocks=8)).run(q, **kw)
+    np.testing.assert_array_equal(res64.lo[:4], res4.lo)
+    np.testing.assert_array_equal(res64.hi[:4], res4.hi)
+    np.testing.assert_array_equal(res64.estimate[:4], res4.estimate)
+    assert res64.rounds == res4.rounds
+    # phantom views never emit: still at the trivial a-priori interval
+    assert (~res64.nonempty[4:]).all()
+    assert res64.exact[4:].all()
+
+
+def test_phantom_split_is_sound():
+    """The tightened split must still cover the truth (the union bound
+    now runs over emitting views only)."""
+    sc = _toy_scramble(card=64)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=0.5), delta=1e-9)
+    res = FastFrame(sc, EngineConfig(round_blocks=8)).run(
+        q, sampling="active_peek", seed=3)
+    g = sc.columns["g"][sc.valid]
+    v = sc.columns["v"][sc.valid].astype(np.float64)
+    for c in range(4):
+        truth = v[g == c].mean()
+        assert res.lo[c] - 1e-3 <= truth <= res.hi[c] + 1e-3, c
+
+
+# -- 2. composite-code int32 overflow -----------------------------------------
+
+
+def test_composite_group_overflow_raises():
+    rng = np.random.default_rng(0)
+    n = 1024
+    cols = {"a": rng.integers(0, 7, n).astype(np.int32),
+            "b": rng.integers(0, 7, n).astype(np.int32),
+            "v": rng.normal(size=n).astype(np.float32)}
+    sc = build_scramble(cols, categorical={"a": 2 ** 16, "b": 2 ** 16},
+                        block_rows=64)
+    frame = FastFrame(sc)
+    with pytest.raises(ValueError, match="int32"):
+        frame._composite_group(("a", "b"))
+    # engine entry raises the same way (no silent wrap deep in a run)
+    q = AggQuery(agg="avg", column="v", group_by=("a", "b"),
+                 stop=AbsoluteWidth(eps=1.0), delta=1e-9)
+    with pytest.raises(ValueError, match="wrap"):
+        frame.run(q)
+
+
+def test_composite_group_at_boundary_ok():
+    """A product just inside int32 is accepted and coded correctly."""
+    rng = np.random.default_rng(1)
+    n = 1024
+    cols = {"a": rng.integers(0, 3, n).astype(np.int32),
+            "b": rng.integers(0, 3, n).astype(np.int32)}
+    # 46341 * 46340 = 2147441940 <= 2^31 - 1
+    sc = build_scramble(cols, categorical={"a": 46341, "b": 46340},
+                        block_rows=64)
+    name, card = FastFrame(sc)._composite_group(("a", "b"))
+    assert card == 46341 * 46340
+    want = cols["a"].astype(np.int64) * 46340 + cols["b"]
+    got = sc.columns[name][sc.valid]
+    np.testing.assert_array_equal(np.sort(got), np.sort(want))
+
+
+# -- 3. RelativeWidth zero-width termination ----------------------------------
+
+
+def test_relative_width_zero_point_interval_terminates():
+    stop = RelativeWidth(eps=0.05)
+    z = np.zeros(1)
+    # the hazard: [0, 0] straddles 0 ("undecided") and rel is NaN — both
+    # legacy guards keep it active even though the answer is exact
+    assert not stop.active(z, z, z, np.ones(1))[0]
+    # nonzero point intervals stay inactive too
+    p = np.full(1, 5.0)
+    assert not stop.active(p, p, p, np.ones(1))[0]
+    # genuine sign-undecided intervals remain active
+    assert stop.active(np.array([-1.0]), np.array([1.0]),
+                       np.array([0.0]), np.ones(1))[0]
+    # wide positive interval remains active at tight eps
+    assert stop.active(np.array([1.0]), np.array([9.0]),
+                       np.array([5.0]), np.ones(1))[0]
+
+
+def test_relative_width_zero_aggregate_query_terminates():
+    """Engine-level: a view whose true aggregate is 0 must terminate once
+    its interval collapses (here via full coverage) without RelativeWidth
+    pinning it active."""
+    rng = np.random.default_rng(2)
+    n = 8_000
+    v = np.zeros(n, np.float32)         # true SUM and AVG are exactly 0
+    g = rng.integers(0, 2, n).astype(np.int32)
+    sc = build_scramble({"g": g, "v": v}, catalog={"v": (-1.0, 1.0)},
+                        block_rows=64, seed=3)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=RelativeWidth(eps=0.05), delta=1e-9)
+    res = FastFrame(sc, EngineConfig(round_blocks=8)).run(
+        q, sampling="scan", seed=4, max_rounds=2_000)
+    assert res.rounds < 2_000            # terminated, not capped
+    assert (res.lo <= 0).all() and (res.hi >= 0).all()
+
+
+# -- 4. static shapes through the scramble tail -------------------------------
+
+
+class _ShapeRecorder:
+    def __init__(self, fn):
+        self.fn = fn
+        self.shapes = set()
+
+    def __call__(self, x, *args, **kw):
+        self.shapes.add(tuple(x.shape))
+        return self.fn(x, *args, **kw)
+
+
+@pytest.fixture()
+def shape_recorders(monkeypatch):
+    rec_probe = _ShapeRecorder(kops.active_blocks)
+    rec_fold = _ShapeRecorder(kops.grouped_moments)
+    monkeypatch.setattr(engine_mod.kops, "active_blocks", rec_probe)
+    monkeypatch.setattr(engine_mod.kops, "grouped_moments", rec_fold)
+    return rec_probe, rec_fold
+
+
+def _tail_scramble():
+    # 37 blocks: not a multiple of the 8-block lookahead, so the final
+    # window shrinks (the documented recompile pathology)
+    rng = np.random.default_rng(5)
+    n = 37 * 64
+    g = rng.integers(0, 6, n).astype(np.int32)
+    v = rng.normal(0.0, 1.0, n).astype(np.float32)
+    return build_scramble({"g": g, "v": v}, catalog={"v": (-6.0, 6.0)},
+                          block_rows=64, seed=6)
+
+
+def test_reference_path_shapes_static_at_tail(shape_recorders):
+    """fused=False full sweep: probe batches and fold inputs keep one
+    static shape each, including the shrunken tail window."""
+    rec_probe, rec_fold = shape_recorders
+    sc = _tail_scramble()
+    frame = FastFrame(sc, EngineConfig(fused=False, round_blocks=4,
+                                       lookahead_blocks=8))
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1e-12), delta=1e-9)
+    res = frame.run(q, sampling="active_peek", seed=0, start_block=0)
+    assert res.exact.all()                      # swept to exhaustion
+    assert len(rec_probe.shapes) == 1, rec_probe.shapes
+    assert len(rec_fold.shapes) == 1, rec_fold.shapes
+    (pshape,) = rec_probe.shapes
+    assert pshape[0] == 8                       # full lookahead, padded
+    (fshape,) = rec_fold.shapes
+    assert fshape[0] == 4 * 64                  # full budget, padded
+
+
+def test_exact_mode_fold_shapes_static_at_tail(shape_recorders):
+    _, rec_fold = shape_recorders
+    sc = _tail_scramble()
+    frame = FastFrame(sc, EngineConfig(round_blocks=4,
+                                       lookahead_blocks=8))
+    q = AggQuery(agg="avg", column="v", group_by="g", stop=None)
+    res = frame.run(q, sampling="exact", seed=0, start_block=0)
+    assert res.exact.all()
+    assert len(rec_fold.shapes) == 1, rec_fold.shapes
+    (fshape,) = rec_fold.shapes
+    assert fshape[0] == 8 * 64                  # full sweep batch, padded
+
+
+def test_tail_padding_preserves_reference_results():
+    """The padding must be invisible: fused=False (padded tail) still
+    equals fused=True (static window by construction) bitwise."""
+    from tests.test_fused_scan import assert_bitwise_equal
+
+    sc = _tail_scramble()
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=ThresholdSide(threshold=0.2), delta=1e-9)
+    kw = dict(sampling="active_peek", seed=2, start_block=33)
+    r_ref = FastFrame(sc, EngineConfig(fused=False, round_blocks=4,
+                                       lookahead_blocks=8)).run(q, **kw)
+    r_fus = FastFrame(sc, EngineConfig(fused=True, round_blocks=4,
+                                       lookahead_blocks=8)).run(q, **kw)
+    assert_bitwise_equal(r_fus, r_ref)

@@ -1,0 +1,279 @@
+"""FrameServer suite: a served single query must be BITWISE identical to
+``FastFrame.run`` (both against the fused default and with the per-block
+reference oracle as ground truth for the underlying engine), and shared
+multi-query passes must stay sound — every query's intervals cover the
+exact ground truth while sharing one cursor walk.
+"""
+
+import numpy as np
+import pytest
+
+from repro.aqp import (AggQuery, EngineConfig, FastFrame, Filter,
+                       build_scramble)
+from repro.core.optstop import (AbsoluteWidth, GroupsOrdered,
+                                ThresholdSide, TopKSeparated)
+from repro.data import flights
+from repro.serve import FrameServer
+
+from tests.test_fused_scan import RESULT_FIELDS, assert_bitwise_equal
+
+CFG = dict(round_blocks=16, lookahead_blocks=64, sync_lookahead_blocks=16,
+           hist_bins=256)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return flights.generate(n_rows=100_000, n_airports=80, n_airlines=6,
+                            seed=3)
+
+
+def fresh_frame(ds, **over):
+    kw = dict(CFG)
+    kw.update(over)
+    sc = build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                        seed=4)
+    return FastFrame(sc, EngineConfig(**kw))
+
+
+SINGLE_QUERIES = [
+    ("avg-group-topk",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=TopKSeparated(k=2, largest=True), delta=1e-9),
+     "active_peek"),
+    ("avg-group-thresh-sync",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=ThresholdSide(threshold=0.0), delta=1e-9),
+     "active_sync"),
+    ("sum-filter-scan",
+     AggQuery(agg="sum", column="dep_delay",
+              filters=(Filter("airline", "eq", 2),),
+              stop=AbsoluteWidth(eps=1e6), delta=1e-9),
+     "scan"),
+    ("count-filter-peek",
+     AggQuery(agg="count", filters=(Filter("origin", "eq", 3),),
+              stop=AbsoluteWidth(eps=5e3), delta=1e-9),
+     "active_peek"),
+    ("avg-anderson-dkw-scan",
+     AggQuery(agg="avg", column="dep_delay", bounder="anderson_dkw",
+              rangetrim=False, stop=AbsoluteWidth(eps=30.0), delta=1e-9),
+     "scan"),
+    # eps too tight to satisfy -> exhaustion + recovery-path exactness
+    ("avg-exhaust-peek",
+     AggQuery(agg="avg", column="dep_delay", group_by="origin",
+              stop=AbsoluteWidth(eps=1e-7), delta=1e-9),
+     "active_peek"),
+]
+
+
+@pytest.mark.parametrize("name,q,sampling", SINGLE_QUERIES,
+                         ids=[s[0] for s in SINGLE_QUERIES])
+def test_served_single_query_bitwise_equals_run(ds, name, q, sampling):
+    """A batch of one must be indistinguishable from FastFrame.run —
+    results AND scan metrics (fresh frames so cache state matches)."""
+    r_run = fresh_frame(ds).run(q, sampling=sampling, seed=1,
+                                start_block=0)
+    r_srv = FrameServer(fresh_frame(ds)).run_batch(
+        [q], sampling=sampling, seed=1, start_block=0)[0]
+    assert_bitwise_equal(r_srv, r_run)
+
+
+def test_served_single_query_matches_reference_oracle(ds):
+    """Transitivity check: served singleton == fused run == per-block
+    reference path (the engine's own oracle harness)."""
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 filters=(Filter("dep_time", "gt", 400.0),),
+                 stop=ThresholdSide(threshold=10.0), delta=1e-9)
+    r_ref = fresh_frame(ds, fused=False).run(q, sampling="active_peek",
+                                             seed=2, start_block=0)
+    r_srv = FrameServer(fresh_frame(ds)).run_batch(
+        [q], sampling="active_peek", seed=2, start_block=0)[0]
+    assert_bitwise_equal(r_srv, r_ref)
+
+
+def exact_group_stats(ds, value_col, group_col=None, mask=None):
+    v = ds.columns[value_col].astype(np.float64)
+    if mask is None:
+        mask = np.ones_like(v, dtype=bool)
+    if group_col is None:
+        return {0: v[mask].mean()}
+    g = ds.columns[group_col]
+    return {int(c): v[(g == c) & mask].mean()
+            for c in np.unique(g[mask])}
+
+
+def test_shared_pass_multi_query_covers_truth(ds):
+    """8 queries, one scan signature (the dashboard fan-out): one shared
+    pass must answer all of them with covering intervals."""
+    qs = []
+    for i in range(8):
+        stop = [AbsoluteWidth(eps=2.0 + i),
+                ThresholdSide(threshold=float(5 * (i - 2))),
+                TopKSeparated(k=2 + i % 3, largest=True),
+                GroupsOrdered()][i % 4]
+        qs.append(AggQuery(agg="avg", column="dep_delay",
+                           group_by="origin", stop=stop,
+                           delta=10.0 ** -(6 + i % 3)))
+    server = FrameServer(fresh_frame(ds))
+    assert len(server.plan(qs)) == 1          # one pass
+    res = server.run_batch(qs, sampling="active_peek", seed=5,
+                           start_block=0)
+    truth = exact_group_stats(ds, "dep_delay", "origin")
+    for i, r in enumerate(res):
+        for c, tv in truth.items():
+            assert r.lo[c] - 1e-3 <= tv <= r.hi[c] + 1e-3, (i, c)
+        assert r.rounds > 0 and r.blocks_fetched > 0
+
+
+def test_shared_pass_multi_slot_covers_truth(ds):
+    """Queries with shared filters but different value/group columns run
+    in one pass with per-slot folds."""
+    filt = (Filter("day_of_week", "le", 3),)
+    mask = ds.columns["day_of_week"] <= 3
+    qs = [
+        AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 filters=filt, stop=AbsoluteWidth(eps=3.0), delta=1e-9),
+        AggQuery(agg="avg", column="dep_time", group_by="origin",
+                 filters=filt, stop=AbsoluteWidth(eps=30.0), delta=1e-9),
+        AggQuery(agg="count", filters=filt,
+                 stop=AbsoluteWidth(eps=4e3), delta=1e-9),
+        AggQuery(agg="sum", column="dep_delay", filters=filt,
+                 stop=AbsoluteWidth(eps=1e6), delta=1e-9),
+    ]
+    server = FrameServer(fresh_frame(ds))
+    assert len(server.plan(qs)) == 1          # shared filters: one pass
+    res = server.run_batch(qs, sampling="active_peek", seed=6,
+                           start_block=0)
+    t_av = exact_group_stats(ds, "dep_delay", "airline", mask=mask)
+    for c, tv in t_av.items():
+        assert res[0].lo[c] - 1e-3 <= tv <= res[0].hi[c] + 1e-3, c
+    t_dt = exact_group_stats(ds, "dep_time", "origin", mask=mask)
+    for c, tv in t_dt.items():
+        assert res[1].lo[c] - 1e-3 <= tv <= res[1].hi[c] + 1e-3, c
+    cnt = float(mask.sum())
+    assert res[2].lo[0] <= cnt <= res[2].hi[0]
+    s = ds.columns["dep_delay"][mask].astype(np.float64).sum()
+    tol = 1e-5 * abs(s)
+    assert res[3].lo[0] - tol <= s <= res[3].hi[0] + tol
+
+
+def test_mixed_filters_split_into_passes(ds):
+    """Different filters cannot share a cursor walk: the planner splits
+    them, results still cover."""
+    qs = [
+        AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 stop=AbsoluteWidth(eps=3.0), delta=1e-9),
+        AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 filters=(Filter("origin", "eq", 3),),
+                 stop=AbsoluteWidth(eps=8.0), delta=1e-9),
+    ]
+    server = FrameServer(fresh_frame(ds))
+    assert len(server.plan(qs)) == 2
+    res = server.run_batch(qs, sampling="active_peek", seed=7,
+                           start_block=0)
+    truth0 = exact_group_stats(ds, "dep_delay", "airline")
+    for c, tv in truth0.items():
+        assert res[0].lo[c] - 1e-3 <= tv <= res[0].hi[c] + 1e-3, c
+    m = ds.columns["origin"] == 3
+    truth1 = exact_group_stats(ds, "dep_delay", "airline", mask=m)
+    for c, tv in truth1.items():
+        assert res[1].lo[c] - 1e-3 <= tv <= res[1].hi[c] + 1e-3, c
+
+
+def test_exact_mode_queries_delegate(ds):
+    """stop=None / sampling='exact' queries bypass the shared pass and
+    match a direct run exactly."""
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 stop=None)
+    r_run = fresh_frame(ds).run(q, sampling="exact", seed=0,
+                                start_block=0)
+    r_srv = FrameServer(fresh_frame(ds)).run_batch(
+        [q], sampling="exact", seed=0, start_block=0)[0]
+    assert_bitwise_equal(r_srv, r_run)
+    assert r_srv.exact.all()
+
+
+def test_materialization_cache_reused_across_batches(ds):
+    """The device value/mask/gid buffers are cached on the frame, keyed
+    by signature components, and reused across run_batch calls."""
+    frame = fresh_frame(ds)
+    server = FrameServer(frame)
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 filters=(Filter("airline", "eq", 2),),
+                 stop=AbsoluteWidth(eps=5.0), delta=1e-9)
+    server.run_batch([q], seed=1, start_block=0)
+    vals = frame._dev_values[q.value_key]
+    mask = frame._dev_masks[tuple(f.key() for f in q.filters)]
+    gids = frame._dev_gids["origin"]
+    server.run_batch([q], seed=1, start_block=0)
+    assert frame._dev_values[q.value_key] is vals
+    assert frame._dev_masks[tuple(f.key() for f in q.filters)] is mask
+    assert frame._dev_gids["origin"] is gids
+    # equal-by-value filters constructed separately hit the same entry
+    q2 = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                  filters=(Filter("airline", "eq", 2),),
+                  stop=AbsoluteWidth(eps=9.0), delta=1e-9)
+    server.run_batch([q2], seed=1, start_block=0)
+    assert len(frame._dev_masks) == 1
+    assert len(frame._dev_values) == 1
+
+
+def test_materialization_cache_is_bounded(ds):
+    """Ad-hoc filter values must not pin device buffers without limit:
+    the caches evict LRU beyond config.mat_cache_entries."""
+    frame = fresh_frame(ds, mat_cache_entries=4)
+    for t in range(10):
+        frame._device_mask((Filter("dep_time", "gt", float(t)),))
+    assert len(frame._dev_masks) == 4
+    # most-recent keys survive
+    key9 = ((Filter("dep_time", "gt", 9.0).key()),)
+    assert key9 in frame._dev_masks
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("nblocks,g,q", [(512, 64, 1), (300, 100, 5)])
+def test_active_blocks_multi_matches_per_row(nblocks, g, q, impl):
+    """(Q, W) stacked probe == Q independent single-mask probes, any
+    backend (the serving path's per-query active-word stacks)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(nblocks + q)
+    words = (g + 31) // 32
+    bitmap = rng.integers(0, 2**32, size=(nblocks, words), dtype=np.uint32)
+    stack = rng.integers(0, 2**32, size=(q, words), dtype=np.uint32)
+    got = ops.active_blocks_multi(jnp.asarray(bitmap), jnp.asarray(stack),
+                                  impl=impl, block_tile=256)
+    assert got.shape == (q, nblocks)
+    for qi in range(q):
+        want = ops.active_blocks(jnp.asarray(bitmap),
+                                 jnp.asarray(stack[qi]), impl=impl,
+                                 block_tile=256)
+        np.testing.assert_array_equal(np.asarray(got[qi]),
+                                      np.asarray(want), err_msg=str(qi))
+
+
+def test_shared_pass_taint_stays_per_query_sound():
+    """Activity skipping in a shared pass: blocks are skipped only when
+    inactive for EVERY query, so each query's tainted views still carry
+    valid frozen intervals (the single-query taint invariant, per
+    query)."""
+    rng = np.random.default_rng(0)
+    n = 40_000
+    g = (rng.random(n) < 0.02).astype(np.int32)  # rare group 1
+    v = np.where(g == 1, rng.normal(50.0, 30.0, n),
+                 rng.normal(100.0, 1.0, n)).astype(np.float32)
+    sc = build_scramble({"g": g, "v": v}, catalog={"v": (-100.0, 250.0)},
+                        block_rows=64, seed=1)
+    frame = FastFrame(sc, EngineConfig(round_blocks=8, lookahead_blocks=64,
+                                       sync_lookahead_blocks=16))
+    qs = [AggQuery(agg="avg", column="v", group_by="g",
+                   stop=ThresholdSide(threshold=50.0), delta=1e-6),
+          AggQuery(agg="avg", column="v", group_by="g",
+                   stop=ThresholdSide(threshold=80.0), delta=1e-6)]
+    res = FrameServer(frame).run_batch(qs, sampling="active_peek", seed=1,
+                                       start_block=0)
+    truth0 = v[g == 0].astype(np.float64).mean()
+    truth1 = v[g == 1].astype(np.float64).mean()
+    for r in res:
+        assert r.lo[0] - 1e-3 <= truth0 <= r.hi[0] + 1e-3
+        assert r.lo[1] - 1e-3 <= truth1 <= r.hi[1] + 1e-3

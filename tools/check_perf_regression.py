@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""CI perf-regression guard: compare freshly-run quick benchmarks against
+the checked-in full-sweep baselines and fail on throughput regression.
+
+Each check pairs a quick-run report (written by
+``benchmarks/bench_*.py --quick``) with its committed baseline
+(``benchmarks/results/BENCH_*.json``), matches rows by a key tuple (the
+quick sweep point is also a row of the full baseline sweep, so the
+comparison is like-for-like), and fails when
+
+    current_metric < baseline_metric * (1 - threshold)
+
+The default threshold is 0.30 (a >30% throughput drop fails); override
+with ``--threshold`` or the ``PERF_GUARD_THRESHOLD`` env var (CI runners
+with very different hardware from the baseline machine may need a looser
+setting). Rows present in only one report are reported but never fail
+the guard (a new sweep point has no baseline yet).
+
+Usage: python tools/check_perf_regression.py [--threshold 0.30]
+Wired into CI (.github/workflows/ci.yml, perf-guard job) after the quick
+benchmark runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "benchmarks" / "results"
+
+CHECKS = [
+    # absolute throughput (what the guard is for; sensitive to runner
+    # hardware — loosen PERF_GUARD_THRESHOLD if runners drift from the
+    # baseline machine) ...
+    dict(name="fused_scan",
+         current="BENCH_fused_scan_quick.json",
+         baseline="BENCH_fused_scan.json",
+         key=("nb", "hist"),
+         metric="fused_blocks_per_s"),
+    dict(name="serve",
+         current="BENCH_serve_quick.json",
+         baseline="BENCH_serve.json",
+         key=("workload", "nb"),
+         metric="served_qps"),
+    # ... plus machine-independent within-run ratios, robust to hardware
+    dict(name="fused_scan-ratio",
+         current="BENCH_fused_scan_quick.json",
+         baseline="BENCH_fused_scan.json",
+         key=("nb", "hist"),
+         metric="speedup_vs_per_round"),
+    dict(name="serve-ratio",
+         current="BENCH_serve_quick.json",
+         baseline="BENCH_serve.json",
+         key=("workload", "nb"),
+         metric="speedup"),
+]
+
+
+def _rows_by_key(path: Path, key_fields):
+    report = json.loads(path.read_text())
+    return {tuple(row[k] for k in key_fields): row
+            for row in report["rows"]}
+
+
+def check_one(spec, threshold: float) -> int:
+    cur_path = RESULTS / spec["current"]
+    base_path = RESULTS / spec["baseline"]
+    if not cur_path.exists():
+        print(f"MISSING {spec['name']}: no quick report at "
+              f"{cur_path.name} (run the quick benchmark first)")
+        return 1
+    if not base_path.exists():
+        print(f"MISSING {spec['name']}: no committed baseline "
+              f"{base_path.name}")
+        return 1
+    cur = _rows_by_key(cur_path, spec["key"])
+    base = _rows_by_key(base_path, spec["key"])
+    metric = spec["metric"]
+    failures = 0
+    compared = 0
+    for k, row in sorted(cur.items(), key=str):
+        if k not in base:
+            print(f"note {spec['name']}{k}: no baseline row, skipping")
+            continue
+        compared += 1
+        got = float(row[metric])
+        want = float(base[k][metric])
+        floor = want * (1.0 - threshold)
+        verdict = "ok  " if got >= floor else "FAIL"
+        print(f"{verdict} {spec['name']}{k}: {metric} {got:.2f} vs "
+              f"baseline {want:.2f} (floor {floor:.2f})")
+        if got < floor:
+            failures += 1
+    for k in sorted(set(base) - set(cur), key=str):
+        print(f"note {spec['name']}{k}: baseline-only row (not in quick "
+              "sweep)")
+    if compared == 0:
+        # a sweep-point or key rename must not silently disable the guard
+        print(f"FAIL {spec['name']}: zero rows matched between "
+              f"{cur_path.name} and {base_path.name} — sweep points or "
+              "key fields diverged; update the committed baseline")
+        return failures + 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("PERF_GUARD_THRESHOLD",
+                                                 0.30)),
+                    help="allowed fractional throughput drop (default "
+                         "0.30 = fail on >30%% regression)")
+    args = ap.parse_args(argv)
+    failures = 0
+    for spec in CHECKS:
+        failures += check_one(spec, args.threshold)
+    if failures:
+        print(f"\n{failures} perf regression(s) beyond "
+              f"{args.threshold:.0%}")
+        return 1
+    print("\nperf guard clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
