@@ -1,0 +1,160 @@
+"""Microbenchmark: OptStop round-loop throughput, device-resident
+``lax.while_loop`` vs the per-round host-sync loop.
+
+After PR 2/3 every round is ONE device dispatch — but each round still
+ends with a host sync: deltas come back to numpy, the f64 merge and the
+whole bound-evaluation stack (bounders / RangeTrim / COUNT-SUM CIs /
+stopping condition) run on host before the next round can launch. At
+small round windows that control-loop overhead dominates the scan
+itself. The device-resident loop (``EngineConfig(device_loop=True)``)
+keeps fold state, CI refresh and the stop test inside one
+``lax.while_loop`` dispatch, so rounds proceed with no host round-trip.
+
+Measured: end-to-end ``FastFrame.run`` of a full-exhaustion query
+(AbsoluteWidth eps too tight to ever fire, so both paths execute the
+identical round schedule over the identical blocks), reported as
+**rounds per second** three ways:
+
+  * ``host_loop``     — ``device_loop=False``: the PR 2/3 per-round
+    dispatch + host sync + numpy bound math (the baseline the ISSUE
+    targets);
+  * ``device_loop``   — unchunked: the whole query in one dispatch;
+  * ``device_chunked``— ``sync_every=16``: streaming-cadence dispatches
+    (the serving configuration).
+
+Configs sweep the per-round window: ``fused_scan_per_round`` is
+``bench_fused_scan.py``'s per-round configuration (fold-bound — both
+loops pay the same fold, so they converge); the ``small_window*``
+configs are the regime the ISSUE targets, where the per-round host sync
+dominates and the device loop wins >= 5x.
+
+Results go to ``benchmarks/results/BENCH_device_loop.json`` (the
+perf-guard baseline; ``benchmarks/run.py`` mirrors every full-sweep
+report to the repo root as the perf trajectory); the
+``name,us_per_call,derived`` CSV contract is printed (derived = device
+speedup vs host_loop).
+
+Run: ``PYTHONPATH=src python benchmarks/bench_device_loop.py [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # before any JAX computation
+
+import numpy as np
+
+from repro.aqp import AggQuery, EngineConfig, FastFrame, build_scramble
+from repro.core.optstop import AbsoluteWidth
+from repro.data import flights
+
+SWEEP = [
+    # (config, nb, block_rows, round_blocks, lookahead)
+    # bench_fused_scan.py's per-round configuration: the round is
+    # fold-bound (64 x 256 rows/round), so both loops converge — kept to
+    # show where the crossover sits
+    ("fused_scan_per_round", 1024, 256, 64, 1024),
+    # small round windows: the per-round host sync dominates and the
+    # device-resident loop wins big (the ISSUE's target regime)
+    ("small_window", 1024, 256, 4, 32),
+    ("small_window_small_blocks", 1024, 64, 4, 32),
+    ("small_window_large_scan", 2048, 64, 4, 32),
+]
+QUICK_SWEEP = [SWEEP[1], SWEEP[2]]
+
+
+def _make_frame(nb: int, block_rows: int, round_blocks: int,
+                lookahead: int, device_loop: bool,
+                sync_every=None) -> FastFrame:
+    ds = flights.generate(n_rows=nb * block_rows, n_airports=120,
+                          n_airlines=14, seed=7)
+    sc = build_scramble(ds.columns, catalog=ds.catalog,
+                        block_rows=block_rows, seed=8)
+    return FastFrame(sc, EngineConfig(
+        round_blocks=round_blocks, lookahead_blocks=lookahead,
+        hist_bins=256, device_loop=device_loop, sync_every=sync_every))
+
+
+_QUERY = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                  stop=AbsoluteWidth(eps=1e-9), delta=1e-9)
+
+
+def _time_run(frame: FastFrame, repeats: int = 3):
+    """Warm jit / materialization caches once, then take best-of-N."""
+    frame.run(_QUERY, sampling="active_peek", seed=1, start_block=0)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = frame.run(_QUERY, sampling="active_peek", seed=1,
+                        start_block=0)
+        best = min(best, time.perf_counter() - t0)
+    return res, best
+
+
+def run(sweep):
+    rows = []
+    for config, nb, block_rows, round_blocks, lookahead in sweep:
+        res_h, wall_h = _time_run(_make_frame(
+            nb, block_rows, round_blocks, lookahead, device_loop=False))
+        res_d, wall_d = _time_run(_make_frame(
+            nb, block_rows, round_blocks, lookahead, device_loop=True))
+        res_c, wall_c = _time_run(_make_frame(
+            nb, block_rows, round_blocks, lookahead, device_loop=True,
+            sync_every=16))
+        # all three execute the identical round schedule
+        assert res_h.rounds == res_d.rounds == res_c.rounds
+        assert res_h.blocks_fetched == res_d.blocks_fetched
+        np.testing.assert_array_equal(res_h.count_seen, res_d.count_seen)
+        rows.append(dict(
+            config=config, nb=nb, block_rows=block_rows,
+            round_blocks=round_blocks, lookahead=lookahead,
+            rounds=res_h.rounds,
+            host_rounds_per_s=res_h.rounds / wall_h,
+            device_rounds_per_s=res_d.rounds / wall_d,
+            device_chunked_rounds_per_s=res_c.rounds / wall_c,
+            speedup_vs_host_loop=wall_h / wall_d,
+            speedup_chunked_vs_host_loop=wall_h / wall_c))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (CI smoke)")
+    args = ap.parse_args(argv)
+    rows = run(QUICK_SWEEP if args.quick else SWEEP)
+
+    print(f"{'config':>26s} {'rounds':>6s} {'host':>8s} {'device':>8s} "
+          f"{'chunked':>8s} {'x':>6s}   (rounds/sec)")
+    for r in rows:
+        print(f"{r['config']:>26s} {r['rounds']:6d} "
+              f"{r['host_rounds_per_s']:8.1f} "
+              f"{r['device_rounds_per_s']:8.1f} "
+              f"{r['device_chunked_rounds_per_s']:8.1f} "
+              f"{r['speedup_vs_host_loop']:6.1f}")
+
+    report = dict(bench="device_loop", rows=rows)
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # --quick is a CI/dev smoke: don't clobber the committed full sweep
+    name = ("BENCH_device_loop_quick.json" if args.quick
+            else "BENCH_device_loop.json")
+    (out_dir / name).write_text(json.dumps(report, indent=1,
+                                           default=float))
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        us = 1e6 / r["device_rounds_per_s"]
+        print(f"device_loop/{r['config']},"
+              f"{us:.2f},{r['speedup_vs_host_loop']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

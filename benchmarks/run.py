@@ -1,14 +1,31 @@
 """Benchmark driver (deliverable (d)): one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV per the harness contract, plus the
-human-readable tables, and persists JSON under benchmarks/results/.
+human-readable tables, and persists JSON under benchmarks/results/ — with
+every ``BENCH_*.json`` full-sweep report (fused scan, serve, bound eval,
+device loop, ...) mirrored to the repo root so the perf trajectory is
+visible without digging into the results directory.
 """
 
 from __future__ import annotations
 
 import json
+import shutil
 import sys
 import time
 from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+RESULTS = REPO_ROOT / "benchmarks" / "results"
+
+
+def emit_root_trajectory() -> None:
+    """Mirror every committed full-sweep ``BENCH_*.json`` (quick smokes
+    excluded) from benchmarks/results/ to the repo root."""
+    for report in sorted(RESULTS.glob("BENCH_*.json")):
+        if report.stem.endswith("_quick"):
+            continue
+        shutil.copyfile(report, REPO_ROOT / report.name)
+        print(f"trajectory: {report.name} -> repo root")
 
 
 def main() -> None:
@@ -55,9 +72,23 @@ def main() -> None:
         csv.append((f"kern/{r['kernel']}/{r['rows']}x{r['groups']}",
                     r["us_per_call"], r["rows_per_s"]))
 
-    Path("benchmarks/results").mkdir(parents=True, exist_ok=True)
-    Path("benchmarks/results/bench.json").write_text(
+    print("\n================ Device-resident round loop ================")
+    # imported last: bench_device_loop enables jax_enable_x64 at import,
+    # which would flip the preceding engine benchmarks onto the device
+    # loop (EngineConfig.device_loop=None auto-enables under x64)
+    from benchmarks import bench_device_loop
+
+    rows = bench_device_loop.main([])
+    out["device_loop"] = rows
+    for r in rows:
+        csv.append((f"dloop/{r['config']}",
+                    1e6 / r["device_rounds_per_s"],
+                    r["speedup_vs_host_loop"]))
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "bench.json").write_text(
         json.dumps(out, indent=1, default=float))
+    emit_root_trajectory()
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

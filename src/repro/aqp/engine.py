@@ -74,9 +74,11 @@ from repro.aqp.query import AggQuery, Expression, QueryResult
 from repro.aqp.scramble import Scramble
 from repro.core import count_sum
 from repro.core.bounders import get_bounder
-from repro.core.optstop import delta_schedule
-from repro.core.state import (StatsBatch, init_moments_host,
-                              merge_hist_host, merge_moments_host, to_host)
+from repro.core.optstop import delta_schedule, delta_schedule_device
+from repro.core.state import (DevStatsBatch, MomentState, StatsBatch,
+                              init_moments_host, merge_hist_host,
+                              merge_moments_host, require_x64, to_host,
+                              x64_enabled)
 from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
@@ -107,8 +109,34 @@ def _batched_view_ci(q: AggQuery, sb: StatsBatch, a, b, r, R, dk,
     return slo, shi, sb.mean * (sb.count / max(r, 1)) * R
 
 
+def _view_ci_device(q: AggQuery, sb: DevStatsBatch, a, b, r, R, dk,
+                    known_n, bounder, alpha):
+    """Jittable twin of :func:`_batched_view_ci`: the same CI refresh in
+    device float64, with ``r`` (clean-prefix rows) and ``dk`` (the round's
+    delta) as traced scalars — the per-round bound evaluation of the
+    device-resident loop."""
+    if q.agg == "count":
+        clo, chi = count_sum.count_ci_device(sb.count, r, R, dk)
+        return clo, chi, sb.count / jnp.maximum(r, 1.0) * R
+    if known_n:
+        alo, ahi = bounder.interval_batch_device(sb, a, b, R, dk)
+    else:
+        budget = dk if q.agg == "avg" else dk / 2.0
+        npl = count_sum.n_plus_device(sb.count, r, R,
+                                      (1 - alpha) * budget)
+        alo, ahi = bounder.interval_batch_device(sb, a, b, npl,
+                                                alpha * budget)
+    if q.agg == "avg":
+        return alo, ahi, sb.mean
+    # SUM = COUNT x AVG (paper §4.1)
+    cci = count_sum.count_ci_device(sb.count, r, R, dk / 2.0)
+    slo, shi = count_sum.sum_ci_device(cci, (alo, ahi))
+    return slo, shi, sb.mean * (sb.count / jnp.maximum(r, 1.0)) * R
+
+
 def _exact_estimate(q: AggQuery, counts, means, R):
-    """Vectorized point estimate over fully-covered views."""
+    """Vectorized point estimate over fully-covered views (elementwise —
+    works for both numpy and traced jnp inputs)."""
     if q.agg == "avg":
         return means
     if q.agg == "count":
@@ -150,6 +178,38 @@ class EngineConfig:
             histogram fold under ``impl='pallas'|'interpret'`` uses the
             combined superkernel's smaller tiles, so it agrees only to
             f32 tile-order rounding.
+        device_loop: keep the *whole* round loop device-resident — fold,
+            float64 state merge, CI refresh (the ``*_device`` bounder
+            twins) and stop test all run inside one ``lax.while_loop``
+            dispatch, syncing to host only at termination or every
+            ``sync_every`` rounds. Requires ``fused=True`` and 64-bit
+            JAX types (:func:`repro.core.state.require_x64`; a clear
+            error is raised otherwise — silent float32 demotion would
+            invalidate the guarantees). ``None`` (default) auto-enables
+            when x64 is on; ``False`` forces the per-round host loop
+            (the tolerance oracle, same pattern as ``fused``). Scan
+            decisions, fold counts, coverage, soundness flags and scan
+            metrics match the host loop exactly; CI endpoints and
+            estimates agree to <= 1e-9 (libm-vs-XLA transcendentals and
+            FMA contraction differ in the final ulp).
+        chunk_rounds: max OptStop rounds fused into one device-loop
+            dispatch (``None`` = run until stop/exhaustion in a single
+            dispatch). Chunking changes dispatch granularity only, never
+            results.
+        sync_every: host-sync (and ``on_sync`` result-streaming
+            callback) cadence in rounds for the device loop; takes
+            precedence over ``chunk_rounds`` as the dispatch size.
+        mat_cache_entries: LRU capacity of EACH of the frame's three
+            device materialization caches (value columns, predicate
+            masks, group-code columns), keyed by the components of the
+            ``(filters, column, group-by)`` scan signature. Every entry
+            pins one full ``(n_blocks, block_rows)`` device buffer, so
+            this bounds device memory of a long-lived server receiving
+            ad-hoc filter values; eviction drops only the cache's pin —
+            in-flight scans hold direct references and are never
+            invalidated. Shared by ``FastFrame.run`` and
+            :class:`repro.serve.FrameServer` (repeat signatures across
+            batches reuse the same buffers).
     """
 
     round_blocks: int = 64          # processed-block budget per round
@@ -160,9 +220,27 @@ class EngineConfig:
     alpha: float = _ALPHA
     impl: Optional[str] = None      # kernel impl: pallas | interpret | ref
     fused: bool = True              # fused scan superkernel (vs per-block)
+    device_loop: Optional[bool] = None  # lax.while_loop round loop
+                                    # (None = auto: on iff x64 enabled)
+    chunk_rounds: Optional[int] = None  # rounds per device-loop dispatch
+    sync_every: Optional[int] = None    # host-sync / streaming cadence
     mat_cache_entries: int = 32     # LRU cap per device materialization
                                     # cache (each entry pins one full
                                     # (n_blocks, block_rows) buffer)
+
+    def resolve_device_loop(self) -> bool:
+        """Whether the device-resident round loop is in effect, with the
+        x64 guard applied for an explicit ``device_loop=True``."""
+        if self.device_loop is None:
+            return self.fused and x64_enabled()
+        if self.device_loop:
+            if not self.fused:
+                raise ValueError(
+                    "EngineConfig(device_loop=True) requires fused=True: "
+                    "the device-resident loop is built on the fused scan "
+                    "superkernel")
+            require_x64("EngineConfig(device_loop=True)")
+        return bool(self.device_loop)
 
 
 class _ScanViews:
@@ -410,6 +488,194 @@ class _FusedScan:
                 int(new_pos))
 
 
+def _make_device_refresh(q: AggQuery, qci: "_QueryIntervals",
+                         a: float, b: float, use_hist: bool, R: float,
+                         valid: np.ndarray):
+    """Build the jittable per-round CI-refresh + stop-test closure for
+    one query — the device twin of ``_QueryIntervals.refresh`` +
+    ``collapse_exact`` + ``update_active``, with the query's static
+    configuration (bounder, delta schedule, stopping condition, valid
+    mask) baked in. Passed as ``refresh_fn`` to
+    :func:`repro.kernels.fused_scan.build_query_loop` /
+    :func:`~repro.kernels.fused_scan.build_pass_loop`."""
+    bounder = qci.bounder
+    delta_view = qci.delta_view
+    known_n = qci.known_n
+    alpha = qci.cfg.alpha
+    stop = q.stop
+    valid_dev = jnp.asarray(valid)
+
+    def refresh_fn(k, r, state, hist, tainted, exact, lo, hi, est,
+                   refreshed, active):
+        counts = state.count  # f64 in the loop carry
+        dk = delta_schedule_device(delta_view, k)
+        refresh = ~tainted & (counts > 0) & (active | ~refreshed)
+        sb = DevStatsBatch.from_state(state, hist if use_hist else None)
+        glo, ghi, gest = _view_ci_device(q, sb, a, b, r, R, dk, known_n,
+                                         bounder, alpha)
+        lo = jnp.where(refresh, jnp.maximum(lo, glo), lo)
+        hi = jnp.where(refresh, jnp.minimum(hi, ghi), hi)
+        est = jnp.where(refresh, gest, est)
+        refreshed = refreshed | refresh
+        full = exact & (counts > 0)
+        ex = _exact_estimate(q, counts, state.mean, R)
+        lo = jnp.where(full, ex, lo)
+        hi = jnp.where(full, ex, hi)
+        est = jnp.where(full, ex, est)
+        active = (stop.active_device(lo, hi, est, counts, valid_dev)
+                  & ~exact & valid_dev)
+        return lo, hi, est, refreshed, active
+
+    return refresh_fn
+
+
+def _host_copy(x, dtype=None) -> np.ndarray:
+    """Writable host copy of a device array (np.asarray views device
+    buffers read-only; the host bookkeeping mutates in place)."""
+    return np.array(x, dtype=dtype)
+
+
+def _restore_views_from_carry(slot: _ScanViews, state: MomentState, hist,
+                              processed, seen_presence, tainted, exact,
+                              blocks_fetched, metrics: Dict[str, int],
+                              skipped_static, skipped_active) -> None:
+    """Copy a device-loop carry's shared fold/coverage/soundness state
+    back into a host-side :class:`_ScanViews` + metrics dict — the one
+    writeback used by both the single-query loop and the serving pass,
+    so recovery / result construction always run on identical state."""
+    slot.state = MomentState(*(_host_copy(f, np.float64) for f in state))
+    if slot.use_hist:
+        slot.hist = _host_copy(hist, np.float64)
+    slot.processed = _host_copy(processed)
+    slot.seen_presence = _host_copy(seen_presence, np.int64)
+    slot.tainted = _host_copy(tainted)
+    slot.exact = _host_copy(exact)
+    slot.blocks_fetched = int(blocks_fetched)
+    metrics["skipped_static"] += int(skipped_static)
+    metrics["skipped_active"] += int(skipped_active)
+
+
+class _DeviceLoop:
+    """Device-resident round-loop driver for one query (the tentpole):
+    assembles the :class:`~repro.kernels.fused_scan.QueryLoopBuffers`,
+    builds the jitted ``lax.while_loop`` chunk function, runs dispatches
+    of up to ``sync_every``/``chunk_rounds`` rounds (one scalar host sync
+    between dispatches), and writes the final carry back into the
+    host-side :class:`_ScanViews` / :class:`_QueryIntervals` so the
+    recovery pass and result construction are byte-for-byte the code the
+    host loop uses."""
+
+    def __init__(self, frame: "FastFrame", q: AggQuery, slot: _ScanViews,
+                 qci: "_QueryIntervals", probe: bool, lookahead: int,
+                 max_rounds: int):
+        require_x64("the device-resident round loop")
+        cfg = frame.config
+        sc = frame.scramble
+        nb = sc.n_blocks
+        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
+        window = _round_window(nb, lookahead, cover_cap)
+        self.nb = nb
+        self.window = window
+        self.use_hist = slot.use_hist
+        self.chunk = cfg.sync_every or cfg.chunk_rounds
+        self.max_rounds = max_rounds
+        words = (slot.group_bm.words if probe
+                 else np.zeros((1, 1), np.uint32))
+        # scan-order-independent buffers; order_pad / cum_rows are filled
+        # per run (the instance is cached on the frame across runs, so
+        # the jitted loop compiles once per query shape)
+        self._base_bufs = kfused.QueryLoopBuffers(
+            values=frame._device_values(slot.value_src),
+            gids=frame._device_gids(slot.gcol),
+            mask=frame._device_mask(q.filters),
+            words=jnp.asarray(words),
+            order_pad=None, static_ok=jnp.asarray(slot.static_ok),
+            presence=jnp.asarray(slot.presence),
+            presence_total=jnp.asarray(
+                slot.presence_total.astype(np.int32)),
+            cum_rows=None)
+        refresh_fn = _make_device_refresh(
+            q, qci, slot.a, slot.b, qci.use_hist, float(qci.R),
+            slot.valid)
+        self._chunk_fn = kfused.build_query_loop(
+            nb=nb, window=window, budget=cfg.round_blocks,
+            center=float(slot.center), a=float(slot.a), b=float(slot.b),
+            num_groups=slot.G, nbins=cfg.hist_bins,
+            use_hist=slot.use_hist, probe=probe,
+            n_words=words.shape[1], impl=kops.resolve_impl(cfg.impl),
+            lookahead=lookahead, cover_cap=cover_cap,
+            max_rounds=max_rounds, chunk=self.chunk,
+            refresh_fn=refresh_fn)
+
+    def set_order(self, order: np.ndarray, cum_rows: np.ndarray) -> None:
+        """Install this run's scan order (the only run-dependent input)."""
+        opad = np.zeros(self.nb + self.window, np.int32)
+        opad[:self.nb] = order
+        self.bufs = self._base_bufs._replace(
+            order_pad=jnp.asarray(opad),
+            cum_rows=jnp.asarray(cum_rows.astype(np.int64)))
+
+    def init_carry(self, slot: _ScanViews,
+                   qci: "_QueryIntervals") -> kfused.QueryLoopCarry:
+        """Fresh carry from the (just-initialized) host-side state."""
+        G = slot.G
+        f64 = lambda x: jnp.asarray(x, jnp.float64)
+        i64 = lambda v: jnp.asarray(v, jnp.int64)
+        return kfused.QueryLoopCarry(
+            pos=jnp.asarray(0, jnp.int32),
+            rounds=jnp.asarray(0, jnp.int32),
+            it=jnp.asarray(0, jnp.int32),
+            live=jnp.asarray(True),
+            stopped_early=jnp.asarray(False),
+            state=MomentState(*(f64(f) for f in slot.state)),
+            hist=(f64(slot.hist) if self.use_hist else None),
+            processed=jnp.asarray(slot.processed),
+            seen_presence=jnp.asarray(
+                slot.seen_presence.astype(np.int32)),
+            tainted=jnp.asarray(slot.tainted),
+            exact=jnp.asarray(slot.exact),
+            lo=f64(qci.lo), hi=f64(qci.hi), est=f64(qci.est),
+            refreshed=jnp.asarray(qci.refreshed),
+            active=jnp.asarray(qci.active),
+            blocks_fetched=i64(slot.blocks_fetched),
+            skipped_static=i64(0), skipped_active=i64(0), probes=i64(0))
+
+    def run(self, carry: kfused.QueryLoopCarry,
+            on_sync: Optional[Callable] = None) -> kfused.QueryLoopCarry:
+        """Dispatch chunks until the loop terminates; between dispatches
+        the host pulls one scalar (plus the streaming snapshot for
+        ``on_sync`` subscribers when ``sync_every`` is set)."""
+        while True:
+            carry = self._chunk_fn(self.bufs, carry)
+            if on_sync is not None:
+                on_sync(dict(
+                    rounds=int(carry.rounds), pos=int(carry.pos),
+                    lo=np.asarray(carry.lo, np.float64),
+                    hi=np.asarray(carry.hi, np.float64),
+                    est=np.asarray(carry.est, np.float64),
+                    live=bool(carry.live)))
+            if (not bool(carry.live) or int(carry.pos) >= self.nb
+                    or int(carry.rounds) >= self.max_rounds):
+                return carry
+
+    def writeback(self, carry: kfused.QueryLoopCarry, slot: _ScanViews,
+                  qci: "_QueryIntervals", metrics: Dict[str, int]) -> None:
+        """Copy the final carry into the host-side bookkeeping (one sync
+        at termination): after this, recovery / result construction run
+        the exact host-loop code on identical state."""
+        _restore_views_from_carry(
+            slot, carry.state, carry.hist, carry.processed,
+            carry.seen_presence, carry.tainted, carry.exact,
+            carry.blocks_fetched, metrics, carry.skipped_static,
+            carry.skipped_active)
+        metrics["probes"] += int(carry.probes)
+        qci.lo = _host_copy(carry.lo, np.float64)
+        qci.hi = _host_copy(carry.hi, np.float64)
+        qci.est = _host_copy(carry.est, np.float64)
+        qci.refreshed = _host_copy(carry.refreshed)
+        qci.active = _host_copy(carry.active)
+
+
 class FastFrame:
     """Sampling-optimized in-memory column store (paper §4).
 
@@ -436,6 +702,10 @@ class FastFrame:
         self._dev_values: "OrderedDict[object, jnp.ndarray]" = OrderedDict()
         self._dev_gids: "OrderedDict[Optional[str], jnp.ndarray]" = \
             OrderedDict()
+        # compiled device-resident round loops (engine + serving pass),
+        # keyed by the query/pass static identity: repeat queries reuse
+        # the traced lax.while_loop instead of recompiling per run
+        self._device_loops: "OrderedDict[Tuple, object]" = OrderedDict()
 
     # -- index plumbing ------------------------------------------------------
 
@@ -764,7 +1034,8 @@ class FastFrame:
 
     def run(self, q: AggQuery, sampling: str = "active_peek",
             start_block: Optional[int] = None, seed: int = 0,
-            max_rounds: int = 100_000) -> QueryResult:
+            max_rounds: int = 100_000,
+            on_sync: Optional[Callable] = None) -> QueryResult:
         """Execute one aggregate query.
 
         Args:
@@ -779,6 +1050,12 @@ class FastFrame:
                 ``seed``); the scan order wraps around the scramble.
             seed: RNG seed for the scan start.
             max_rounds: hard cap on OptStop rounds (safety valve).
+            on_sync: optional streaming callback for the device-resident
+                loop: called after every dispatch (i.e. every
+                ``EngineConfig.sync_every`` rounds, or once at
+                termination when unchunked) with a dict snapshot
+                (``rounds``, ``pos``, ``lo``, ``hi``, ``est``,
+                ``live``). Ignored by the host loop and exact mode.
 
         Returns:
             :class:`~repro.aqp.query.QueryResult` with per-group
@@ -809,9 +1086,33 @@ class FastFrame:
                                                      "active_sync")
         lookahead = (cfg.sync_lookahead_blocks if sampling == "active_sync"
                      else cfg.lookahead_blocks)
+        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
+
+        if not exact_mode and cfg.resolve_device_loop():
+            # ---- device-resident round loop (tentpole path): the whole
+            # OptStop loop in lax.while_loop dispatches; one host sync
+            # per chunk, full writeback at termination -----------------
+            probe = skipping and slot.group_bm is not None
+            key = ("run", q.scan_signature(), q.agg, q.bounder,
+                   q.rangetrim, q.delta, repr(q.stop), probe, lookahead,
+                   max_rounds, cfg.sync_every or cfg.chunk_rounds)
+            dloop = self._cache_lru(
+                self._device_loops, key,
+                lambda: _DeviceLoop(self, q, slot, qci, probe, lookahead,
+                                    max_rounds))
+            dloop.set_order(order, cum_rows)
+            carry = dloop.run(dloop.init_carry(slot, qci), on_sync)
+            dloop.writeback(carry, slot, qci, metrics)
+            pos = int(carry.pos)
+            rounds = int(carry.rounds)
+            stopped_early = bool(carry.stopped_early)
+            rounds = self._recovery_pass(slot, [qci], rounds, max_rounds)
+            qci.collapse_exact()
+            return qci.result(rounds, pos, cum_rows, metrics, t0,
+                              stopped_early)
+
         active_words = (jnp.asarray(pack_mask(qci.active))
                         if slot.gcol is not None else None)
-        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
         fscan = None
         if cfg.fused and not exact_mode:
             probe = skipping and slot.group_bm is not None

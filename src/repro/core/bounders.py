@@ -23,6 +23,15 @@ Conventions (Definition 1):
 All bounders satisfy the *dataset-size monotonicity* property (§3.3): using
 any N' >= N only loosens the bounds, so the engine may pass the Theorem-3
 upper bound ``N+`` when the true N is unknown.
+
+Every bounder additionally exposes a jnp float64 *device* twin of the
+batch path (``lbound_batch_device`` / ``rbound_batch_device`` /
+``interval_batch_device`` over a :class:`repro.core.state.DevStatsBatch`)
+— the same formulas, jittable, with ``delta`` allowed to be a traced
+scalar — so the device-resident round loop can refresh CIs without a host
+sync. The device twins require 64-bit JAX types
+(:func:`repro.core.state.require_x64`): demoting the bound math to
+float32 would produce invalid guarantees, not just loose ones.
 """
 
 from __future__ import annotations
@@ -31,9 +40,11 @@ import dataclasses
 import math
 from typing import Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.state import Stats, StatsBatch
+from repro.core.state import DevStatsBatch, Stats, StatsBatch
 
 __all__ = [
     "Bounder",
@@ -69,6 +80,23 @@ def _rho_bardenet(m: np.ndarray, N: ArrayLike) -> np.ndarray:
     low = np.maximum(1.0 - (m - 1.0) / Ns, 0.0)
     high = np.maximum((1.0 - m / Ns) * (1.0 + 1.0 / np.maximum(m, 1.0)), 0.0)
     return np.where(N > 0, np.where(m <= Ns / 2.0, low, high), 1.0)
+
+
+def _rho_serfling_device(m: jax.Array, N) -> jax.Array:
+    """Jittable twin of :func:`_rho_serfling`."""
+    N = jnp.asarray(N, jnp.float64)
+    rho = jnp.maximum(1.0 - (m - 1.0) / jnp.where(N > 0, N, 1.0), 0.0)
+    return jnp.where(N > 0, rho, 1.0)
+
+
+def _rho_bardenet_device(m: jax.Array, N) -> jax.Array:
+    """Jittable twin of :func:`_rho_bardenet`."""
+    N = jnp.asarray(N, jnp.float64)
+    Ns = jnp.where(N > 0, N, 1.0)
+    low = jnp.maximum(1.0 - (m - 1.0) / Ns, 0.0)
+    high = jnp.maximum((1.0 - m / Ns) * (1.0 + 1.0 / jnp.maximum(m, 1.0)),
+                       0.0)
+    return jnp.where(N > 0, jnp.where(m <= Ns / 2.0, low, high), 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +142,36 @@ class Bounder:
         return (self.lbound_batch(s, a, b, N, delta / 2.0),
                 self.rbound_batch(s, a, b, N, delta / 2.0))
 
+    # -- device (jnp float64) twins of the batch path ------------------------
+    def _lbound_batch_device(self, s: DevStatsBatch, a, b, N,
+                             delta) -> jax.Array:
+        raise NotImplementedError
+
+    def lbound_batch_device(self, s: DevStatsBatch, a, b, N,
+                            delta) -> jax.Array:
+        """Jittable twin of :meth:`lbound_batch` over a device-resident
+        :class:`DevStatsBatch`. The host path's all-empty short-circuit
+        becomes elementwise selection (dead lanes yield the a-priori
+        bound either way)."""
+        a_arr = jnp.broadcast_to(jnp.asarray(a, jnp.float64), s.count.shape)
+        lb = self._lbound_batch_device(s, a, b, N, delta)
+        lb = jnp.maximum(lb, a_arr)
+        return jnp.where(s.count > 0, lb, a_arr)
+
+    def rbound_batch_device(self, s: DevStatsBatch, a, b, N,
+                            delta) -> jax.Array:
+        """Jittable twin of :meth:`rbound_batch` (reflection trick)."""
+        a_arr = jnp.broadcast_to(jnp.asarray(a, jnp.float64), s.count.shape)
+        b_arr = jnp.broadcast_to(jnp.asarray(b, jnp.float64), s.count.shape)
+        lb = self._lbound_batch_device(s.reflect(a, b), a, b, N, delta)
+        rb = jnp.minimum((a_arr + b_arr) - lb, b_arr)
+        return jnp.where(s.count > 0, rb, b_arr)
+
+    def interval_batch_device(self, s: DevStatsBatch, a, b, N, delta
+                              ) -> Tuple[jax.Array, jax.Array]:
+        return (self.lbound_batch_device(s, a, b, N, delta / 2.0),
+                self.rbound_batch_device(s, a, b, N, delta / 2.0))
+
     # -- scalar API: size-1 wrappers over the batch path ---------------------
     def lbound(self, s: Stats, a: float, b: float, N: float,
                delta: float) -> float:
@@ -144,6 +202,11 @@ class HoeffdingBounder(Bounder):
         eps = rng * np.sqrt(math.log(1.0 / delta) / (2.0 * s.count))
         return s.mean - eps
 
+    def _lbound_batch_device(self, s, a, b, N, delta):
+        rng = jnp.asarray(b, jnp.float64) - jnp.asarray(a, jnp.float64)
+        eps = rng * jnp.sqrt(jnp.log(1.0 / delta) / (2.0 * s.count))
+        return s.mean - eps
+
 
 @dataclasses.dataclass(frozen=True)
 class HoeffdingSerflingBounder(Bounder):
@@ -158,6 +221,13 @@ class HoeffdingSerflingBounder(Bounder):
         rho = _rho_serfling(m, N)
         rng = np.asarray(b, np.float64) - np.asarray(a, np.float64)
         eps = rng * np.sqrt(math.log(1.0 / delta) * rho / (2.0 * m))
+        return s.mean - eps
+
+    def _lbound_batch_device(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_serfling_device(m, N)
+        rng = jnp.asarray(b, jnp.float64) - jnp.asarray(a, jnp.float64)
+        eps = rng * jnp.sqrt(jnp.log(1.0 / delta) * rho / (2.0 * m))
         return s.mean - eps
 
 
@@ -181,6 +251,15 @@ class BernsteinSerflingBounder(Bounder):
                + _KAPPA_EBS * rng * log_t / m)
         return s.mean - eps
 
+    def _lbound_batch_device(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_bardenet_device(m, N)
+        log_t = jnp.log(3.0 / delta)
+        rng = jnp.asarray(b, jnp.float64) - jnp.asarray(a, jnp.float64)
+        eps = (self.sigma * jnp.sqrt(2.0 * rho * log_t / m)
+               + _KAPPA_EBS * rng * log_t / m)
+        return s.mean - eps
+
 
 @dataclasses.dataclass(frozen=True)
 class EmpiricalBernsteinSerflingBounder(Bounder):
@@ -201,6 +280,15 @@ class EmpiricalBernsteinSerflingBounder(Bounder):
         log_t = math.log(5.0 / delta)
         rng = np.asarray(b, np.float64) - np.asarray(a, np.float64)
         eps = (s.std * np.sqrt(2.0 * rho * log_t / m)
+               + _KAPPA_EBS * rng * log_t / m)
+        return s.mean - eps
+
+    def _lbound_batch_device(self, s, a, b, N, delta):
+        m = s.count
+        rho = _rho_bardenet_device(m, N)
+        log_t = jnp.log(5.0 / delta)
+        rng = jnp.asarray(b, jnp.float64) - jnp.asarray(a, jnp.float64)
+        eps = (s.std * jnp.sqrt(2.0 * rho * log_t / m)
                + _KAPPA_EBS * rng * log_t / m)
         return s.mean - eps
 
@@ -265,6 +353,40 @@ class AndersonDKWBounder(Bounder):
                     / np.where(kept_mass > 0, kept_mass, 1.0))
         lb = eps * a + (1.0 - eps) * avg_kept
         return np.where((eps >= 1.0) | (kept_mass <= 0), a, lb)
+
+    def _lbound_batch_device(self, s, a, b, N, delta):
+        """Jittable top-mass drop: the in-place partial-bin scatter of the
+        host path becomes a one-hot select; ``a``/``b`` must be scalars
+        (the histogram grid is pinned, as on host — enforced statically)."""
+        if s.hist is None:
+            raise ValueError("AndersonDKW requires histogram state")
+        a = float(a)  # static by construction: the engine's pinned grid
+        b = float(b)
+        m = s.count
+        eps = jnp.sqrt(jnp.log(1.0 / delta) / (2.0 * m))
+        hist = s.hist
+        G, K = hist.shape
+        edges = a + (b - a) * jnp.arange(K, dtype=jnp.float64) / K
+        drop = eps * m
+        csum_from_top = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+        fully = csum_from_top <= drop[:, None]
+        kept = jnp.where(fully, 0.0, hist)
+        surv_any = (~fully).any(axis=1)
+        k_hi = (K - 1) - jnp.argmax((~fully)[:, ::-1], axis=1)
+        csum_pad = jnp.concatenate(
+            [csum_from_top, jnp.zeros((G, 1), jnp.float64)], axis=1)
+        already = jnp.take_along_axis(csum_pad, (k_hi + 1)[:, None],
+                                      axis=1)[:, 0]
+        partial = jnp.maximum(
+            jnp.take_along_axis(kept, k_hi[:, None], axis=1)[:, 0]
+            - (drop - already), 0.0)
+        sel = (jnp.arange(K) == k_hi[:, None]) & surv_any[:, None]
+        kept = jnp.where(sel, partial[:, None], kept)
+        kept_mass = kept.sum(axis=1)
+        avg_kept = ((kept * edges).sum(axis=1)
+                    / jnp.where(kept_mass > 0, kept_mass, 1.0))
+        lb = eps * a + (1.0 - eps) * avg_kept
+        return jnp.where((eps >= 1.0) | (kept_mass <= 0), a, lb)
 
 
 _REGISTRY = {

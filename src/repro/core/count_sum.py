@@ -12,15 +12,24 @@ Every function is elementwise over numpy arrays — pass the per-group
 member-count vector ``m_v`` (and optionally per-group ``r``) and get
 vectors back — while plain Python floats in produce plain floats out, so
 the scalar call sites (tests, ``optstop``) are unchanged.
+
+Each host function has a ``*_device`` jnp float64 twin (same formulas,
+jittable, ``delta`` may be a traced scalar) used by the device-resident
+round loop; construction sites must hold
+:func:`repro.core.state.require_x64`.
 """
 
 from __future__ import annotations
 
 from typing import Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["selectivity_ci", "count_ci", "n_plus", "sum_ci", "ALPHA_DEFAULT"]
+__all__ = ["selectivity_ci", "count_ci", "n_plus", "sum_ci",
+           "selectivity_ci_device", "count_ci_device", "n_plus_device",
+           "sum_ci_device", "ALPHA_DEFAULT"]
 
 ALPHA_DEFAULT = 0.99
 
@@ -99,3 +108,57 @@ def sum_ci(count: Tuple[ArrayLike, ArrayLike], avg: Tuple[ArrayLike, ArrayLike],
     lo = np.minimum(np.minimum(ll, lr), np.minimum(rl, rr))
     hi = np.maximum(np.maximum(ll, lr), np.maximum(rl, rr))
     return _unwrap(lo, scalar), _unwrap(hi, scalar)
+
+
+# ---------------------------------------------------------------------------
+# Device (jnp float64) twins — jittable, same formulas as the host path.
+# ---------------------------------------------------------------------------
+
+
+def _serfling_eps_device(r: jax.Array, R, delta) -> jax.Array:
+    """Jittable twin of :func:`_serfling_eps` (``delta`` may be traced)."""
+    r = jnp.asarray(r, jnp.float64)
+    rho = jnp.maximum(1.0 - (r - 1.0) / jnp.asarray(R, jnp.float64), 0.0)
+    eps = jnp.sqrt(jnp.log(1.0 / delta) * rho / (2.0 * r))
+    return jnp.where(r > 0, eps, 1.0)
+
+
+def selectivity_ci_device(m_v, r, R, delta) -> Tuple[jax.Array, jax.Array]:
+    """Jittable twin of :func:`selectivity_ci`."""
+    m_v = jnp.asarray(m_v, jnp.float64)
+    r = jnp.asarray(r, jnp.float64)
+    eps = _serfling_eps_device(r, R, delta / 2.0)
+    est = m_v / jnp.maximum(r, 1.0)
+    lo = jnp.where(r > 0, jnp.maximum(est - eps, 0.0), 0.0)
+    hi = jnp.where(r > 0, jnp.minimum(est + eps, 1.0), 1.0)
+    return lo, hi
+
+
+def count_ci_device(m_v, r, R, delta) -> Tuple[jax.Array, jax.Array]:
+    """Jittable twin of :func:`count_ci`."""
+    lo, hi = selectivity_ci_device(m_v, r, R, delta)
+    return (lo * R, hi * R)
+
+
+def n_plus_device(m_v, r, R, delta,
+                  alpha: float = ALPHA_DEFAULT) -> jax.Array:
+    """Jittable twin of :func:`n_plus`."""
+    m_v = jnp.asarray(m_v, jnp.float64)
+    r = jnp.asarray(r, jnp.float64)
+    R_arr = jnp.asarray(R, jnp.float64)
+    eps = _serfling_eps_device(r, R, (1.0 - alpha) * delta)
+    npl = jnp.minimum((m_v / jnp.maximum(r, 1.0) + eps) * R_arr, R_arr)
+    return jnp.where(r > 0, npl, R_arr)
+
+
+def sum_ci_device(count: Tuple[jax.Array, jax.Array],
+                  avg: Tuple[jax.Array, jax.Array]
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Jittable twin of :func:`sum_ci`."""
+    cl, cr = count
+    gl, gr = avg
+    ll, lr = jnp.asarray(cl) * gl, jnp.asarray(cl) * gr
+    rl, rr = jnp.asarray(cr) * gl, jnp.asarray(cr) * gr
+    lo = jnp.minimum(jnp.minimum(ll, lr), jnp.minimum(rl, rr))
+    hi = jnp.maximum(jnp.maximum(ll, lr), jnp.maximum(rl, rr))
+    return lo, hi

@@ -21,6 +21,8 @@ import dataclasses
 import math
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bounders import Bounder
@@ -28,6 +30,7 @@ from repro.core.state import Stats
 
 __all__ = [
     "delta_schedule",
+    "delta_schedule_device",
     "RunningInterval",
     "StoppingCondition",
     "FixedSamples",
@@ -45,6 +48,15 @@ _SCHED_C = 6.0 / (math.pi ** 2)
 def delta_schedule(delta: float, k: int) -> float:
     """delta_k for round k >= 1 (Algorithm 5 line 7)."""
     return _SCHED_C * delta / float(k * k)
+
+
+def delta_schedule_device(delta: float, k) -> jax.Array:
+    """Jittable twin of :func:`delta_schedule`: ``k`` may be a traced
+    round index (the device-resident loop's ``lax.while_loop`` carry).
+    The static ``_SCHED_C * delta`` product is taken on host so the
+    result is bitwise identical to the host schedule at equal ``k``."""
+    k = jnp.asarray(k, jnp.float64)
+    return (_SCHED_C * delta) / (k * k)
 
 
 @dataclasses.dataclass
@@ -75,12 +87,24 @@ class RunningInterval:
 
 class StoppingCondition:
     """``active(...)`` returns the per-group ACTIVE mask (groups still
-    preventing termination; §4.3); the query stops when none are active."""
+    preventing termination; §4.3); the query stops when none are active.
+
+    ``active_device(...)`` is the jittable twin used inside the
+    device-resident round loop. Because a traced computation cannot
+    subset to the existing views dynamically, it additionally takes the
+    static per-group ``valid`` mask and must reproduce
+    ``_QueryIntervals.cond_active``'s subset semantics: invalid (phantom
+    composite) lanes are never active and must not distort order
+    statistics (top-K midpoints, pairwise orderings)."""
 
     name = "base"
 
     def active(self, lo: np.ndarray, hi: np.ndarray, est: np.ndarray,
                counts: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def active_device(self, lo: jax.Array, hi: jax.Array, est: jax.Array,
+                      counts: jax.Array, valid: jax.Array) -> jax.Array:
         raise NotImplementedError
 
     def done(self, lo, hi, est, counts) -> bool:
@@ -97,6 +121,9 @@ class FixedSamples(StoppingCondition):
     def active(self, lo, hi, est, counts):
         return counts < self.m
 
+    def active_device(self, lo, hi, est, counts, valid):
+        return (counts < self.m) & valid
+
 
 @dataclasses.dataclass
 class AbsoluteWidth(StoppingCondition):
@@ -107,6 +134,9 @@ class AbsoluteWidth(StoppingCondition):
 
     def active(self, lo, hi, est, counts):
         return (hi - lo) >= self.eps
+
+    def active_device(self, lo, hi, est, counts, valid):
+        return ((hi - lo) >= self.eps) & valid
 
 
 @dataclasses.dataclass
@@ -132,6 +162,14 @@ class RelativeWidth(StoppingCondition):
         point = hi <= lo
         return ~point & (undecided | ~np.isfinite(rel) | (rel >= self.eps))
 
+    def active_device(self, lo, hi, est, counts, valid):
+        rel = jnp.maximum((hi - est) / jnp.abs(hi),
+                          (est - lo) / jnp.abs(lo))
+        undecided = (lo <= 0.0) & (hi >= 0.0)
+        point = hi <= lo
+        return (~point & (undecided | ~jnp.isfinite(rel)
+                          | (rel >= self.eps))) & valid
+
 
 @dataclasses.dataclass
 class ThresholdSide(StoppingCondition):
@@ -142,6 +180,9 @@ class ThresholdSide(StoppingCondition):
 
     def active(self, lo, hi, est, counts):
         return (lo <= self.threshold) & (self.threshold <= hi)
+
+    def active_device(self, lo, hi, est, counts, valid):
+        return (lo <= self.threshold) & (self.threshold <= hi) & valid
 
 
 @dataclasses.dataclass
@@ -172,6 +213,28 @@ class TopKSeparated(StoppingCondition):
             return np.where(chosen, lo <= mid, hi >= mid)
         return np.where(chosen, hi >= mid, lo <= mid)
 
+    def active_device(self, lo, hi, est, counts, valid):
+        """Order statistics over valid lanes only: invalid lanes carry an
+        infinite sentinel so they sort last (stable, like the host's
+        subset-then-argsort) and never enter the top-K or the midpoint."""
+        n = est.shape[0]
+        if self.k >= n:  # can never separate more lanes than exist
+            return jnp.zeros(n, dtype=bool)
+        n_valid = valid.sum()
+        sentinel = -jnp.inf if self.largest else jnp.inf
+        key = jnp.where(valid, est, sentinel)
+        order = jnp.argsort(-key if self.largest else key)
+        sorted_key = key[order]
+        rank = jnp.zeros(n, jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32))
+        chosen = valid & (rank < self.k)
+        mid = 0.5 * (sorted_key[self.k - 1] + sorted_key[self.k])
+        if self.largest:
+            act = jnp.where(chosen, lo <= mid, hi >= mid)
+        else:
+            act = jnp.where(chosen, hi >= mid, lo <= mid)
+        return jnp.where(self.k >= n_valid, False, act & valid)
+
 
 @dataclasses.dataclass
 class GroupsOrdered(StoppingCondition):
@@ -185,6 +248,13 @@ class GroupsOrdered(StoppingCondition):
         inter = (lo[:, None] <= hi[None, :]) & (lo[None, :] <= hi[:, None])
         np.fill_diagonal(inter, False)
         return inter.any(axis=1)
+
+    def active_device(self, lo, hi, est, counts, valid):
+        n = est.shape[0]
+        inter = (lo[:, None] <= hi[None, :]) & (lo[None, :] <= hi[:, None])
+        inter = inter & valid[:, None] & valid[None, :]
+        inter = inter & ~jnp.eye(n, dtype=bool)
+        return inter.any(axis=1) & valid
 
 
 # ---------------------------------------------------------------------------

@@ -29,10 +29,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bounders import Bounder
-from repro.core.state import StatsBatch, downdate_extreme_batch
+from repro.core.state import (DevStatsBatch, StatsBatch,
+                              downdate_extreme_batch,
+                              downdate_extreme_batch_device)
 
 __all__ = ["RangeTrimBounder"]
 
@@ -84,3 +87,27 @@ class RangeTrimBounder(Bounder):
         n_trim = np.maximum(np.asarray(N, np.float64) - 1.0, trimmed.count)
         rb = self.inner.rbound_batch(trimmed, a_trim, b_arr, n_trim, delta)
         return np.where(ok, rb, b_arr)
+
+    # -- device (jnp float64) twins ------------------------------------------
+
+    def lbound_batch_device(self, s: DevStatsBatch, a, b, N, delta):
+        a_arr = jnp.broadcast_to(jnp.asarray(a, jnp.float64), s.count.shape)
+        ok = s.count >= 2.0
+        trimmed = downdate_extreme_batch_device(s, "max")
+        b_trim = jnp.where(ok, s.vmax, a_arr + 1.0)
+        n_trim = jnp.maximum(jnp.asarray(N, jnp.float64) - 1.0,
+                             trimmed.count)
+        lb = self.inner.lbound_batch_device(trimmed, a_arr, b_trim, n_trim,
+                                            delta)
+        return jnp.where(ok, lb, a_arr)
+
+    def rbound_batch_device(self, s: DevStatsBatch, a, b, N, delta):
+        b_arr = jnp.broadcast_to(jnp.asarray(b, jnp.float64), s.count.shape)
+        ok = s.count >= 2.0
+        trimmed = downdate_extreme_batch_device(s, "min")
+        a_trim = jnp.where(ok, s.vmin, b_arr - 1.0)
+        n_trim = jnp.maximum(jnp.asarray(N, jnp.float64) - 1.0,
+                             trimmed.count)
+        rb = self.inner.rbound_batch_device(trimmed, a_trim, b_arr, n_trim,
+                                            delta)
+        return jnp.where(ok, rb, b_arr)

@@ -34,6 +34,32 @@ _POS_INF = jnp.inf
 _NEG_INF = -jnp.inf
 
 
+def x64_enabled() -> bool:
+    """Whether JAX is running with 64-bit types enabled."""
+    return bool(jax.config.jax_enable_x64)
+
+
+def require_x64(feature: str = "the device bound-evaluation path") -> None:
+    """Fail loudly when float64 is unavailable on device.
+
+    The bound-evaluation math (bounders, RangeTrim, COUNT/SUM CIs, the
+    OptStop schedule) is float64 by design: a silent demotion to float32
+    would produce intervals that are *invalid guarantees*, not merely
+    imprecise ones. Every device-resident bound-eval entry point calls
+    this guard instead of letting JAX quietly downcast.
+    """
+    if not x64_enabled():
+        raise RuntimeError(
+            f"{feature} requires 64-bit JAX types, but jax_enable_x64 is "
+            "off — the float64 bound math would be silently demoted to "
+            "float32 and the resulting intervals would NOT be valid "
+            "(1-delta) guarantees. Enable it before any JAX computation "
+            "with:  jax.config.update('jax_enable_x64', True)  (or set "
+            "the JAX_ENABLE_X64=1 environment variable), or run with "
+            "EngineConfig(device_loop=False) to use the host float64 "
+            "round loop instead.")
+
+
 class MomentState(NamedTuple):
     """Monoid state: masked count / Welford mean / Welford M2 / min / max."""
 
@@ -383,6 +409,87 @@ def downdate_extreme_batch(s: StatsBatch, which: str) -> StatsBatch:
         h[rows, k[rows]] -= 1.0
     return StatsBatch(count=n1, mean=mean1, m2=m21,
                       vmin=s.vmin, vmax=s.vmax, hist=h)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident float64 snapshot: the jittable twin of ``StatsBatch``.
+# ---------------------------------------------------------------------------
+
+
+class DevStatsBatch(NamedTuple):
+    """Device-resident float64 twin of :class:`StatsBatch` (a pytree).
+
+    Every moment field is a jnp float64 ``(G,)`` array and ``hist`` (when
+    present) is ``(G, K)`` float64, so the whole batch can live inside a
+    jitted computation — in particular inside the device-resident round
+    loop's ``lax.while_loop`` carry, where the per-round CI refresh runs
+    without any host sync. Construction sites must hold
+    :func:`require_x64` (float32 demotion would invalidate guarantees).
+    """
+
+    count: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+    vmin: jax.Array
+    vmax: jax.Array
+    hist: Optional[jax.Array] = None
+
+    @property
+    def variance(self) -> jax.Array:
+        return jnp.where(self.count > 0,
+                         self.m2 / jnp.maximum(self.count, 1.0), 0.0)
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(jnp.maximum(self.variance, 0.0))
+
+    def reflect(self, a, b) -> "DevStatsBatch":
+        """Map x -> (a + b) - x per group (device twin of
+        ``StatsBatch.reflect``)."""
+        ab = jnp.asarray(a, jnp.float64) + jnp.asarray(b, jnp.float64)
+        h = None if self.hist is None else self.hist[:, ::-1]
+        return DevStatsBatch(count=self.count, mean=ab - self.mean,
+                             m2=self.m2, vmin=ab - self.vmax,
+                             vmax=ab - self.vmin, hist=h)
+
+    @staticmethod
+    def from_state(state: MomentState,
+                   hist: Optional[jax.Array] = None) -> "DevStatsBatch":
+        """Device float64 view of a ``(G,)``-shaped :class:`MomentState`
+        (+ optional ``(G, K)`` histogram counts) — the jittable twin of
+        ``StatsBatch.from_state``."""
+        f64 = lambda x: jnp.asarray(x, jnp.float64)
+        return DevStatsBatch(
+            count=f64(state.count), mean=f64(state.mean), m2=f64(state.m2),
+            vmin=f64(state.vmin), vmax=f64(state.vmax),
+            hist=None if hist is None else f64(hist))
+
+
+def downdate_extreme_batch_device(s: DevStatsBatch,
+                                  which: str) -> DevStatsBatch:
+    """Jittable twin of :func:`downdate_extreme_batch`: remove one
+    occurrence of the per-group max (``which='max'``) or min on device."""
+    ok = s.count >= 2.0
+    x = jnp.where(ok, s.vmax if which == "max" else s.vmin, 0.0)
+    n1 = jnp.where(ok, s.count - 1.0, 0.0)
+    safe = jnp.maximum(n1, 1.0)
+    mean1 = jnp.where(ok, (s.count * s.mean - x) / safe, 0.0)
+    m21 = jnp.where(ok,
+                    jnp.maximum(s.m2 - (x - s.mean) * (x - mean1), 0.0),
+                    0.0)
+    h = None
+    if s.hist is not None:
+        pos = s.hist > 0
+        hit = pos.any(axis=1) & ok
+        K = s.hist.shape[1]
+        if which == "max":
+            k = (K - 1) - jnp.argmax(pos[:, ::-1], axis=1)
+        else:
+            k = jnp.argmax(pos, axis=1)
+        onehot = (jnp.arange(K) == k[:, None]).astype(s.hist.dtype)
+        h = s.hist - onehot * hit[:, None].astype(s.hist.dtype)
+    return DevStatsBatch(count=n1, mean=mean1, m2=m21,
+                         vmin=s.vmin, vmax=s.vmax, hist=h)
 
 
 def downdate_extreme(s: Stats, which: str) -> Stats:

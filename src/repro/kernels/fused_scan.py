@@ -36,6 +36,21 @@ takes the union across queries, and each distinct (column, group-by)
 slot folds its own moment/histogram state from the shared gather — still
 one device dispatch and one host sync per round for the whole batch.
 
+**Device-resident round loop** (``EngineConfig(device_loop=True)``):
+:func:`build_query_loop` / :func:`build_pass_loop` go one step further
+and remove the per-round host sync entirely. The whole OptStop round —
+the :func:`fused_round` scan/fold, the float64 running-state merge, the
+skip/taint/coverage accounting, the device CI refresh (the ``*_device``
+bounder twins from :mod:`repro.core.bounders`) and the jittable stopping
+conditions — runs inside one ``lax.while_loop`` whose carry holds every
+piece of state the host loop used to keep in numpy. A dispatch executes
+up to ``chunk`` rounds (``None`` = until stop or exhaustion); the host
+syncs only between dispatches (one scalar pull) and once at termination
+to read the final carry back into the engine's bookkeeping. Requires
+64-bit JAX types (:func:`repro.core.state.require_x64`): the carry's
+running moments, intervals and CI math are float64, exactly like the
+host loop they replace.
+
 Backends (same selector as :mod:`repro.kernels.ops`):
 
   * ``impl='ref'``       — the fold reuses the pure-jnp oracles (XLA
@@ -56,11 +71,13 @@ block <= 1 MiB — under the ~16 MiB/core budget of TPU v5e.
 from __future__ import annotations
 
 import functools
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.state import MomentState, merge_moments
 from repro.kernels import bitmap_active as _bitmap
 from repro.kernels import block_agg as _block_agg
 from repro.kernels import hist as _hist
@@ -342,3 +359,427 @@ def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
         states.append(st)
         hists.append(h)
     return tuple(states), tuple(hists), tuple(flag_stacks), ok, new_pos
+
+
+# ---------------------------------------------------------------------------
+# Device-resident round loop: the whole OptStop loop in one lax.while_loop.
+# ---------------------------------------------------------------------------
+
+
+def pack_active_device(active: jax.Array, n_words: int) -> jax.Array:
+    """Jittable twin of :func:`repro.aqp.bitmap.pack_mask`: bool ``(G,)``
+    active mask -> ``(n_words,)`` uint32 packed words (little-endian bit
+    order, bit ``j`` of word ``w`` = group ``32 w + j``)."""
+    G = active.shape[0]
+    bits = jnp.zeros(n_words * 32, dtype=bool).at[:G].set(active)
+    b32 = bits.reshape(n_words, 32).astype(jnp.uint32)
+    return (b32 << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def _merge_f64(state: MomentState, delta: MomentState) -> MomentState:
+    """Fold a round's f32 mergeable delta into the f64 running state —
+    the device twin of ``merge_moments_host(state, to_host(delta))``.
+    Same formula in the same order: counts (integral sums) stay exact;
+    mean/m2 may differ from the host by the final ulp where XLA
+    contracts a mul+add into an FMA."""
+    return merge_moments(
+        state, MomentState(*(jnp.asarray(f, jnp.float64) for f in delta)))
+
+
+def _probe_cost(flags: jax.Array, pos: jax.Array, nb: int, window: int,
+                budget: int, lookahead: int, cover_cap: int) -> jax.Array:
+    """Device twin of the reference probe-metric loop (the per-lookahead
+    batched probing in ``engine._fused_accounting``): count the window
+    positions the reference path would have probed this round."""
+    i32 = jnp.int32
+    win_len = jnp.minimum(i32(window), i32(nb) - pos)
+    csum = jnp.cumsum(flags.astype(i32))
+    csum_excl = jnp.concatenate([jnp.zeros(1, i32), csum[:-1]])
+    n_batches = -(-window // lookahead)
+    starts = jnp.arange(n_batches, dtype=i32) * lookahead
+    probed = ((csum_excl[starts] < budget) & (starts < win_len)
+              & (starts < cover_cap))
+    ends = jnp.minimum(starts + lookahead, win_len)
+    return jnp.where(probed, ends - starts, 0).sum().astype(jnp.int64)
+
+
+class QueryLoopBuffers(NamedTuple):
+    """Device-resident inputs of the single-query loop (constant across
+    rounds; passed as jit arguments so reuse never retraces)."""
+
+    values: jax.Array          # (nb, block_rows) f32 value column
+    gids: jax.Array            # (nb, block_rows) i32 group codes
+    mask: jax.Array            # (nb, block_rows) f32 predicate*valid
+    words: jax.Array           # (nb, W) uint32 group-bitmap words
+    order_pad: jax.Array       # (nb + window,) i32 scan order
+    static_ok: jax.Array       # (nb,) bool static prefilter
+    presence: jax.Array        # (nb, G) bool view-presence matrix
+    presence_total: jax.Array  # (G,) i32 blocks containing each view
+    cum_rows: jax.Array        # (nb,) i64 cumulative valid rows in order
+
+
+class QueryLoopCarry(NamedTuple):
+    """``lax.while_loop`` carry: every piece of per-query round state the
+    host loop keeps in numpy, device-resident across rounds."""
+
+    pos: jax.Array             # i32 scan cursor
+    rounds: jax.Array          # i32 completed OptStop rounds (k)
+    it: jax.Array              # i32 rounds inside the current dispatch
+    live: jax.Array            # bool: some view still active
+    stopped_early: jax.Array   # bool: stop fired before exhaustion
+    state: MomentState         # f64 (G,) running moments
+    hist: Optional[jax.Array]  # f64 (G, K) running histogram (or None)
+    processed: jax.Array       # (nb,) bool
+    seen_presence: jax.Array   # (G,) i32 processed blocks per view
+    tainted: jax.Array         # (G,) bool
+    exact: jax.Array           # (G,) bool
+    lo: jax.Array              # (G,) f64 running interval
+    hi: jax.Array              # (G,) f64
+    est: jax.Array             # (G,) f64
+    refreshed: jax.Array       # (G,) bool
+    active: jax.Array          # (G,) bool
+    blocks_fetched: jax.Array  # i64 scan metrics
+    skipped_static: jax.Array  # i64
+    skipped_active: jax.Array  # i64
+    probes: jax.Array          # i64
+
+
+def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
+                budget: int):
+    """Shared per-round cursor/selection plumbing: window slice, static
+    verdicts, caller-supplied activity flags, budgeted selection and the
+    covered-range accounting masks. ``flags_src(ok, win)`` returns the
+    activity-tested flags for this round."""
+    offs = jnp.arange(window, dtype=jnp.int32)
+    in_range = (pos + offs) < nb
+    win = jax.lax.dynamic_slice(bufs.order_pad, (pos,), (window,))
+    ok = bufs.static_ok[win] & in_range
+    flags = flags_src(ok, win)
+    take, new_pos = _budget_select(flags, pos, nb, window, budget)
+    covmask = offs < (new_pos - pos)
+    return win, ok, flags, take, new_pos, covmask
+
+
+def build_query_loop(*, nb: int, window: int, budget: int, center: float,
+                     a: float, b: float, num_groups: int, nbins: int,
+                     use_hist: bool, probe: bool, n_words: int, impl: str,
+                     lookahead: int, cover_cap: int, max_rounds: int,
+                     chunk: Optional[int],
+                     refresh_fn: Callable) -> Callable:
+    """Build the jitted device-resident round loop for one query.
+
+    Returns ``chunk_fn(bufs: QueryLoopBuffers, carry: QueryLoopCarry) ->
+    QueryLoopCarry`` executing up to ``chunk`` OptStop rounds (``None`` =
+    until the stop test fires, the scramble is exhausted or
+    ``max_rounds`` is hit) in a single ``lax.while_loop`` dispatch. Each
+    round is the exact device twin of the host round: ``fused_round``'s
+    scan/fold, the f64 state merge, ``_fused_accounting``'s skip/taint/
+    probe bookkeeping, ``_ScanViews.update_exact`` and the caller's
+    ``refresh_fn`` (CI refresh + stopping condition; see
+    ``engine._make_device_refresh``).
+
+    ``refresh_fn(k, r, state, hist, tainted, exact, lo, hi, est,
+    refreshed, active)`` returns the updated ``(lo, hi, est, refreshed,
+    active)``.
+    """
+
+    def body(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
+        k = c.rounds + 1
+
+        def flags_src(ok, win):
+            if not probe:
+                return ok
+            aw = pack_active_device(c.active, n_words)
+            act = kops.active_blocks(bufs.words[win], aw, impl=impl) > 0
+            return ok & act
+
+        win, ok, flags, take, new_pos, covmask = _round_scan(
+            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
+        blk, tvalid = _gather_blocks(take, win, window, budget)
+        v = bufs.values[blk].reshape(-1)
+        g = bufs.gids[blk].reshape(-1)
+        m = (bufs.mask[blk]
+             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+        dstate, dhist = _fold(v, g, m, center, a, b, num_groups, nbins,
+                              use_hist, impl)
+        state = _merge_f64(c.state, dstate)
+        hist = (c.hist + jnp.asarray(dhist, jnp.float64) if use_hist
+                else c.hist)
+
+        # -- accounting (twin of engine._fused_accounting + ingest) ------
+        okc = ok & covmask
+        flagsc = flags & covmask
+        act_skip = okc & ~flagsc
+        pres_win = bufs.presence[win]
+        tainted = c.tainted | (pres_win & act_skip[:, None]).any(axis=0)
+        skipped_static = (c.skipped_static
+                          + (~ok & covmask).sum(dtype=jnp.int64))
+        skipped_active = c.skipped_active + act_skip.sum(dtype=jnp.int64)
+        probes = c.probes
+        if probe:
+            probes = probes + _probe_cost(flags, c.pos, nb, window,
+                                          budget, lookahead, cover_cap)
+        processed = c.processed.at[win].max(take)
+        blocks_fetched = c.blocks_fetched + take.sum(dtype=jnp.int64)
+        seen_presence = c.seen_presence + (
+            pres_win & take[:, None]).sum(axis=0, dtype=jnp.int32)
+
+        # -- coverage / exactness (twin of _ScanViews.update_exact) ------
+        cov = seen_presence >= bufs.presence_total
+        cov = cov | ((new_pos >= nb) & ~tainted)
+        exact = c.exact | cov
+
+        # -- CI refresh + stopping condition (engine-supplied) -----------
+        r = jnp.where(new_pos > 0,
+                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
+                      0).astype(jnp.float64)
+        lo, hi, est, refreshed, active = refresh_fn(
+            k, r, state, hist, tainted, exact, c.lo, c.hi, c.est,
+            c.refreshed, c.active)
+        live = active.any()
+        stopped_early = c.stopped_early | (~live & (new_pos < nb))
+
+        return QueryLoopCarry(
+            pos=new_pos, rounds=k, it=c.it + 1, live=live,
+            stopped_early=stopped_early, state=state, hist=hist,
+            processed=processed, seen_presence=seen_presence,
+            tainted=tainted, exact=exact, lo=lo, hi=hi, est=est,
+            refreshed=refreshed, active=active,
+            blocks_fetched=blocks_fetched, skipped_static=skipped_static,
+            skipped_active=skipped_active, probes=probes)
+
+    def cond(c: QueryLoopCarry):
+        go = c.live & (c.pos < nb) & (c.rounds < max_rounds)
+        if chunk is not None:
+            go = go & (c.it < chunk)
+        return go
+
+    @jax.jit
+    def chunk_fn(bufs: QueryLoopBuffers,
+                 carry: QueryLoopCarry) -> QueryLoopCarry:
+        carry = carry._replace(it=jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, functools.partial(body, bufs),
+                                  carry)
+
+    return chunk_fn
+
+
+class SlotSpec(NamedTuple):
+    """Static per-slot configuration of the multi-query pass loop."""
+
+    num_groups: int
+    nbins: int
+    use_hist: bool
+    a: float
+    b: float
+    center: float
+    probe: bool
+    n_words: int
+
+
+class PassLoopBuffers(NamedTuple):
+    """Device-resident inputs of the multi-query pass loop; the per-slot
+    fields are length-S tuples."""
+
+    mask: jax.Array            # (nb, block_rows) shared predicate mask
+    order_pad: jax.Array       # (nb + window,) i32
+    static_ok: jax.Array       # (nb,) bool
+    cum_rows: jax.Array        # (nb,) i64
+    values: Tuple[jax.Array, ...]          # per-slot value columns
+    gids: Tuple[jax.Array, ...]            # per-slot group codes
+    words: Tuple[jax.Array, ...]           # per-slot bitmap words
+    presence: Tuple[jax.Array, ...]        # per-slot (nb, G_s) bool
+    presence_total: Tuple[jax.Array, ...]  # per-slot (G_s,) i32
+
+
+class SlotCarry(NamedTuple):
+    """Per-slot shared-fold state inside the pass carry."""
+
+    state: MomentState         # f64 (G_s,)
+    hist: Optional[jax.Array]  # f64 (G_s, K) or None
+    seen_presence: jax.Array   # (G_s,) i32
+    tainted: jax.Array         # (G_s,) bool
+    exact: jax.Array           # (G_s,) bool
+
+
+class PassQueryCarry(NamedTuple):
+    """Per-query OptStop state + finish-time snapshots. A query's result
+    is a consistent snapshot of the slot state at the round it finished
+    (the slot keeps scanning for the pass's remaining queries), so the
+    carry records the slot/metric state the moment ``finished`` flips."""
+
+    lo: jax.Array              # (G_s,) f64
+    hi: jax.Array              # (G_s,) f64
+    est: jax.Array             # (G_s,) f64
+    refreshed: jax.Array       # (G_s,) bool
+    active: jax.Array          # (G_s,) bool
+    finished: jax.Array        # bool scalar
+    stopped_early: jax.Array   # bool scalar
+    finish_rounds: jax.Array   # i32
+    finish_pos: jax.Array      # i32
+    finish_blocks_fetched: jax.Array   # i64
+    finish_skipped_static: jax.Array   # i64
+    finish_skipped_active: jax.Array   # i64
+    finish_probes: jax.Array           # i64
+    snap_counts: jax.Array     # (G_s,) f64 slot counts at finish
+    snap_exact: jax.Array      # (G_s,) bool slot exact at finish
+    snap_tainted: jax.Array    # (G_s,) bool slot tainted at finish
+
+
+class PassCarry(NamedTuple):
+    """``lax.while_loop`` carry of the multi-query pass loop."""
+
+    pos: jax.Array             # i32
+    rounds: jax.Array          # i32
+    it: jax.Array              # i32
+    n_live: jax.Array          # i32 unfinished queries across slots
+    processed: jax.Array       # (nb,) bool (selection is shared)
+    blocks_fetched: jax.Array  # i64 (shared: selection is the union)
+    skipped_static: jax.Array  # i64
+    skipped_active: jax.Array  # i64
+    probes: jax.Array          # i64 (probing slots share union flags)
+    slots: Tuple[SlotCarry, ...]
+    queries: Tuple[Tuple[PassQueryCarry, ...], ...]  # [slot][query]
+
+
+def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
+                    lookahead: int, cover_cap: int, max_rounds: int,
+                    chunk: Optional[int],
+                    slot_specs: Sequence[SlotSpec],
+                    refresh_fns: Sequence[Sequence[Callable]],
+                    any_probe: bool) -> Callable:
+    """Build the jitted device-resident loop for one FrameServer pass
+    (S slots, each with its own queries, sharing one cursor walk).
+
+    The per-round computation is the exact device twin of the host pass:
+    per-query activity stacks -> union selection -> shared gather ->
+    per-slot folds -> shared skip accounting with per-slot taint ->
+    per-query CI refresh / stop test, with finish-time snapshots recorded
+    in the carry (the host builds each query's result the moment it
+    finishes; the device loop records the same snapshot and the host
+    materializes it after the loop). ``refresh_fns[s][q]`` has the
+    :func:`build_query_loop` ``refresh_fn`` signature.
+    """
+    i32 = jnp.int32
+    i64 = jnp.int64
+
+    def body(bufs, c: PassCarry) -> PassCarry:
+        k = c.rounds + 1
+
+        def flags_src(ok, win):
+            union = jnp.zeros((window,), bool)
+            for s, spec in enumerate(slot_specs):
+                if spec.probe:
+                    rows = [pack_active_device(qc.active, spec.n_words)
+                            for qc in c.queries[s]]
+                else:
+                    rows = [(~qc.finished).astype(jnp.uint32).reshape(1)
+                            for qc in c.queries[s]]
+                stack = jnp.stack(rows)
+                act = kops.active_blocks_multi(bufs.words[s][win], stack,
+                                               impl=impl) > 0
+                union = union | (ok[None, :] & act).any(axis=0)
+            return union
+
+        win, ok, union, take, new_pos, covmask = _round_scan(
+            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
+        blk, tvalid = _gather_blocks(take, win, window, budget)
+        m = (bufs.mask[blk]
+             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+
+        # -- shared accounting (union flags; twin of the host pass) ------
+        okc = ok & covmask
+        unionc = union & covmask
+        act_skip = okc & ~unionc
+        skipped_static = (c.skipped_static
+                          + (~ok & covmask).sum(dtype=i64))
+        skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
+        probes = c.probes
+        if any_probe:
+            probes = probes + _probe_cost(union, c.pos, nb, window,
+                                          budget, lookahead, cover_cap)
+        processed = c.processed.at[win].max(take)
+        blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
+
+        r = jnp.where(new_pos > 0,
+                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
+                      0).astype(jnp.float64)
+
+        new_slots = []
+        new_queries = []
+        n_live = c.n_live
+        for s, spec in enumerate(slot_specs):
+            sc = c.slots[s]
+            v = bufs.values[s][blk].reshape(-1)
+            g = bufs.gids[s][blk].reshape(-1)
+            dstate, dhist = _fold(v, g, m, spec.center, spec.a, spec.b,
+                                  spec.num_groups, spec.nbins,
+                                  spec.use_hist, impl)
+            state = _merge_f64(sc.state, dstate)
+            hist = (sc.hist + jnp.asarray(dhist, jnp.float64)
+                    if spec.use_hist else sc.hist)
+            pres_win = bufs.presence[s][win]
+            tainted = sc.tainted | (pres_win
+                                    & act_skip[:, None]).any(axis=0)
+            seen_presence = sc.seen_presence + (
+                pres_win & take[:, None]).sum(axis=0, dtype=i32)
+            cov = seen_presence >= bufs.presence_total[s]
+            cov = cov | ((new_pos >= nb) & ~tainted)
+            exact = sc.exact | cov
+            new_slots.append(SlotCarry(
+                state=state, hist=hist, seen_presence=seen_presence,
+                tainted=tainted, exact=exact))
+
+            slot_queries = []
+            for qi, qc in enumerate(c.queries[s]):
+                nlo, nhi, nest, nrefr, nact = refresh_fns[s][qi](
+                    k, r, state, hist, tainted, exact, qc.lo, qc.hi,
+                    qc.est, qc.refreshed, qc.active)
+                fin = qc.finished
+                lo = jnp.where(fin, qc.lo, nlo)
+                hi = jnp.where(fin, qc.hi, nhi)
+                est = jnp.where(fin, qc.est, nest)
+                refreshed = jnp.where(fin, qc.refreshed, nrefr)
+                active = jnp.where(fin, qc.active, nact)
+                now_fin = ~fin & ~active.any()
+                n_live = n_live - now_fin.astype(i32)
+                snap = lambda new, old: jnp.where(now_fin, new, old)
+                slot_queries.append(PassQueryCarry(
+                    lo=lo, hi=hi, est=est, refreshed=refreshed,
+                    active=active, finished=fin | now_fin,
+                    stopped_early=snap(new_pos < nb, qc.stopped_early),
+                    finish_rounds=snap(k, qc.finish_rounds),
+                    finish_pos=snap(new_pos, qc.finish_pos),
+                    finish_blocks_fetched=snap(
+                        blocks_fetched, qc.finish_blocks_fetched),
+                    finish_skipped_static=snap(
+                        skipped_static, qc.finish_skipped_static),
+                    finish_skipped_active=snap(
+                        skipped_active, qc.finish_skipped_active),
+                    finish_probes=snap(probes, qc.finish_probes),
+                    snap_counts=snap(state.count, qc.snap_counts),
+                    snap_exact=snap(exact, qc.snap_exact),
+                    snap_tainted=snap(tainted, qc.snap_tainted)))
+            new_queries.append(tuple(slot_queries))
+
+        return PassCarry(
+            pos=new_pos, rounds=k, it=c.it + 1, n_live=n_live,
+            processed=processed, blocks_fetched=blocks_fetched,
+            skipped_static=skipped_static, skipped_active=skipped_active,
+            probes=probes, slots=tuple(new_slots),
+            queries=tuple(new_queries))
+
+    def cond(c: PassCarry):
+        go = (c.pos < nb) & (c.rounds < max_rounds) & (c.n_live > 0)
+        if chunk is not None:
+            go = go & (c.it < chunk)
+        return go
+
+    @jax.jit
+    def chunk_fn(bufs: PassLoopBuffers, carry: PassCarry) -> PassCarry:
+        carry = carry._replace(it=jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, functools.partial(body, bufs),
+                                  carry)
+
+    return chunk_fn

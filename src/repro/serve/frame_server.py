@@ -46,9 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.aqp.bitmap import pack_mask
-from repro.aqp.engine import (FastFrame, _QueryIntervals, _round_window,
-                              _ScanViews)
+from repro.aqp.engine import (FastFrame, _QueryIntervals, _ScanViews,
+                              _host_copy, _make_device_refresh,
+                              _restore_views_from_carry, _round_window)
 from repro.aqp.query import AggQuery, QueryResult
+from repro.core.state import MomentState
 from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
@@ -203,40 +205,50 @@ class FrameServer:
         pos = 0
         rounds = 0
         n_live = sum(len(s.qcis) for s in slots)
-        while pos < nb and rounds < max_rounds and n_live:
-            rounds += 1
-            stacks = tuple(s.active_stack() for s in slots)
-            states, hists, flag_stacks, ok_d, new_pos_d = \
-                kfused.fused_round_multi(
-                    mask_dev, order_pad_dev, static_ok_dev,
-                    jnp.asarray(pos, jnp.int32), values_t, gids_t,
-                    words_t, stacks, nb=nb, window=window,
-                    budget=cfg.round_blocks, meta=meta_t, impl=impl)
-            ok = np.asarray(ok_d)
-            new_pos = int(new_pos_d)
-            union = np.logical_or.reduce(
-                [np.asarray(fl).any(axis=0) for fl in flag_stacks])
-            for s, st, h in zip(slots, states, hists):
-                idx = frame._fused_accounting(
-                    order, pos, new_pos, ok, union, s.views.presence,
-                    s.views.tainted, lookahead, cfg.round_blocks,
-                    cover_cap, s.probe, s.metrics)
-                if len(idx):
-                    s.views.ingest_delta(idx, st, h)
-                s.views.update_exact(new_pos)
-            pos = new_pos
-            r = int(cum_rows[pos - 1]) if pos > 0 else 0
-            for s in slots:
-                for qc in s.qcis:
-                    if qc.finished:
-                        continue
-                    qc.refresh(rounds, r)
-                    if not qc.update_active():
-                        qc.finished = True
-                        n_live -= 1
-                        finished[id(qc)] = qc.result(
-                            rounds, pos, cum_rows, dict(s.metrics), t0,
-                            stopped_early=pos < nb)
+        if cfg.resolve_device_loop():
+            # device-resident pass loop: the whole multi-query round loop
+            # (per-query activity stacks, union selection, per-slot folds,
+            # per-query CI refresh / stop tests with finish-time
+            # snapshots) iterates inside lax.while_loop dispatches
+            pos, rounds = self._device_pass(
+                slots, order, cum_rows, lookahead, window, cover_cap,
+                impl, mask_dev, order_pad_dev, static_ok_dev, values_t,
+                gids_t, words_t, max_rounds, t0, finished)
+        else:
+            while pos < nb and rounds < max_rounds and n_live:
+                rounds += 1
+                stacks = tuple(s.active_stack() for s in slots)
+                states, hists, flag_stacks, ok_d, new_pos_d = \
+                    kfused.fused_round_multi(
+                        mask_dev, order_pad_dev, static_ok_dev,
+                        jnp.asarray(pos, jnp.int32), values_t, gids_t,
+                        words_t, stacks, nb=nb, window=window,
+                        budget=cfg.round_blocks, meta=meta_t, impl=impl)
+                ok = np.asarray(ok_d)
+                new_pos = int(new_pos_d)
+                union = np.logical_or.reduce(
+                    [np.asarray(fl).any(axis=0) for fl in flag_stacks])
+                for s, st, h in zip(slots, states, hists):
+                    idx = frame._fused_accounting(
+                        order, pos, new_pos, ok, union, s.views.presence,
+                        s.views.tainted, lookahead, cfg.round_blocks,
+                        cover_cap, s.probe, s.metrics)
+                    if len(idx):
+                        s.views.ingest_delta(idx, st, h)
+                    s.views.update_exact(new_pos)
+                pos = new_pos
+                r = int(cum_rows[pos - 1]) if pos > 0 else 0
+                for s in slots:
+                    for qc in s.qcis:
+                        if qc.finished:
+                            continue
+                        qc.refresh(rounds, r)
+                        if not qc.update_active():
+                            qc.finished = True
+                            n_live -= 1
+                            finished[id(qc)] = qc.result(
+                                rounds, pos, cum_rows, dict(s.metrics),
+                                t0, stopped_early=pos < nb)
 
         # recovery per slot for queries that exhausted the scramble while
         # still active (shared block fetches across the slot's queries)
@@ -258,3 +270,161 @@ class FrameServer:
             out.append(qc.result(rec_rounds.get(id(s), rounds), pos,
                                  cum_rows, s.metrics, t0, False))
         return out
+
+    # -- device-resident pass loop ---------------------------------------------
+
+    def _device_pass(self, slots: Sequence[_SlotExec], order, cum_rows,
+                     lookahead: int, window: int, cover_cap: int,
+                     impl: str, mask_dev, order_pad_dev, static_ok_dev,
+                     values_t, gids_t, words_t, max_rounds: int,
+                     t0: float, finished: Dict[int, QueryResult]
+                     ) -> Tuple[int, int]:
+        """Run one pass's whole round loop device-resident
+        (:func:`repro.kernels.fused_scan.build_pass_loop`), then write
+        the final carry back into the slots' host bookkeeping and
+        materialize the finish-time snapshots into
+        :class:`~repro.aqp.query.QueryResult`\\ s. Returns the final
+        ``(pos, rounds)``; unfinished queries are left for the shared
+        recovery/assembly tail (identical to the host path's)."""
+        frame = self.frame
+        cfg = frame.config
+        nb = frame.scramble.n_blocks
+        f64 = lambda x: jnp.asarray(x, jnp.float64)
+        i32 = lambda v: jnp.asarray(v, jnp.int32)
+        i64 = lambda v: jnp.asarray(v, jnp.int64)
+
+        # the compiled pass loop (+ its order-independent device buffers)
+        # is cached on the frame by the pass's static identity: repeat
+        # batches reuse the traced lax.while_loop instead of recompiling
+        key = ("pass",
+               tuple((qc.q.scan_signature(), qc.q.agg, qc.q.bounder,
+                      qc.q.rangetrim, qc.q.delta, repr(qc.q.stop))
+                     for s in slots for qc in s.qcis),
+               tuple((len(s.qcis), s.probe, s.views.use_hist)
+                     for s in slots),
+               lookahead, max_rounds,
+               cfg.sync_every or cfg.chunk_rounds)
+
+        def build():
+            slot_specs = tuple(
+                kfused.SlotSpec(
+                    num_groups=s.views.G, nbins=cfg.hist_bins,
+                    use_hist=s.views.use_hist, a=float(s.views.a),
+                    b=float(s.views.b), center=float(s.views.center),
+                    probe=s.probe, n_words=int(s.words.shape[1]))
+                for s in slots)
+            refresh_fns = tuple(
+                tuple(_make_device_refresh(qc.q, qc, s.views.a,
+                                           s.views.b, qc.use_hist,
+                                           float(qc.R), s.views.valid)
+                      for qc in s.qcis)
+                for s in slots)
+            chunk_fn = kfused.build_pass_loop(
+                nb=nb, window=window, budget=cfg.round_blocks, impl=impl,
+                lookahead=lookahead, cover_cap=cover_cap,
+                max_rounds=max_rounds,
+                chunk=cfg.sync_every or cfg.chunk_rounds,
+                slot_specs=slot_specs, refresh_fns=refresh_fns,
+                any_probe=any(s.probe for s in slots))
+            presence = tuple(jnp.asarray(s.views.presence)
+                             for s in slots)
+            presence_total = tuple(
+                jnp.asarray(s.views.presence_total.astype(np.int32))
+                for s in slots)
+            return chunk_fn, presence, presence_total
+
+        chunk_fn, presence_t, presence_total_t = frame._cache_lru(
+            frame._device_loops, key, build)
+
+        bufs = kfused.PassLoopBuffers(
+            mask=mask_dev, order_pad=order_pad_dev,
+            static_ok=static_ok_dev,
+            cum_rows=jnp.asarray(cum_rows.astype(np.int64)),
+            values=values_t, gids=gids_t, words=words_t,
+            presence=presence_t, presence_total=presence_total_t)
+        slot_carries = tuple(
+            kfused.SlotCarry(
+                state=MomentState(*(f64(x) for x in s.views.state)),
+                hist=(f64(s.views.hist) if s.views.use_hist else None),
+                seen_presence=jnp.asarray(
+                    s.views.seen_presence.astype(np.int32)),
+                tainted=jnp.asarray(s.views.tainted),
+                exact=jnp.asarray(s.views.exact))
+            for s in slots)
+        query_carries = tuple(
+            tuple(kfused.PassQueryCarry(
+                lo=f64(qc.lo), hi=f64(qc.hi), est=f64(qc.est),
+                refreshed=jnp.asarray(qc.refreshed),
+                active=jnp.asarray(qc.active),
+                finished=jnp.asarray(False),
+                stopped_early=jnp.asarray(False),
+                finish_rounds=i32(0), finish_pos=i32(0),
+                finish_blocks_fetched=i64(0),
+                finish_skipped_static=i64(0),
+                finish_skipped_active=i64(0), finish_probes=i64(0),
+                snap_counts=jnp.zeros(s.views.G, jnp.float64),
+                snap_exact=jnp.zeros(s.views.G, bool),
+                snap_tainted=jnp.zeros(s.views.G, bool))
+                for qc in s.qcis)
+            for s in slots)
+        carry = kfused.PassCarry(
+            pos=i32(0), rounds=i32(0), it=i32(0),
+            n_live=i32(sum(len(s.qcis) for s in slots)),
+            processed=jnp.asarray(slots[0].views.processed),
+            blocks_fetched=i64(0), skipped_static=i64(0),
+            skipped_active=i64(0), probes=i64(0),
+            slots=slot_carries, queries=query_carries)
+
+        while True:
+            carry = chunk_fn(bufs, carry)
+            if (int(carry.n_live) == 0 or int(carry.pos) >= nb
+                    or int(carry.rounds) >= max_rounds):
+                break
+
+        # -- writeback: slots' shared fold state + metrics ----------------
+        pos, rounds = int(carry.pos), int(carry.rounds)
+        host = _host_copy
+        for s, scarry in zip(slots, carry.slots):
+            _restore_views_from_carry(
+                s.views, scarry.state, scarry.hist, carry.processed,
+                scarry.seen_presence, scarry.tainted, scarry.exact,
+                carry.blocks_fetched, s.metrics, carry.skipped_static,
+                carry.skipped_active)
+            if s.probe:
+                s.metrics["probes"] += int(carry.probes)
+
+        # -- per-query interval state + finish-time snapshot results ------
+        for s, qcarries in zip(slots, carry.queries):
+            for qc, qcar in zip(s.qcis, qcarries):
+                qc.lo = host(qcar.lo, np.float64)
+                qc.hi = host(qcar.hi, np.float64)
+                qc.est = host(qcar.est, np.float64)
+                qc.refreshed = host(qcar.refreshed)
+                qc.active = host(qcar.active)
+                qc.finished = bool(qcar.finished)
+                if not qc.finished:
+                    continue
+                snap_counts = host(qcar.snap_counts, np.float64)
+                fpos = int(qcar.finish_pos)
+                finished[id(qc)] = QueryResult(
+                    group_codes=np.arange(s.views.G),
+                    estimate=host(qcar.est, np.float64),
+                    lo=host(qcar.lo, np.float64),
+                    hi=host(qcar.hi, np.float64),
+                    count_seen=snap_counts,
+                    nonempty=snap_counts > 0,
+                    exact=host(qcar.snap_exact),
+                    tainted=host(qcar.snap_tainted),
+                    rows_covered=int(cum_rows[fpos - 1]) if fpos else 0,
+                    blocks_fetched=int(qcar.finish_blocks_fetched),
+                    blocks_skipped_active=int(
+                        qcar.finish_skipped_active),
+                    blocks_skipped_static=int(
+                        qcar.finish_skipped_static),
+                    bitmap_probes=(s.views.probes0
+                                   + (int(qcar.finish_probes)
+                                      if s.probe else 0)),
+                    rounds=int(qcar.finish_rounds),
+                    wall_time_s=time.perf_counter() - t0,
+                    stopped_early=bool(qcar.stopped_early))
+        return pos, rounds

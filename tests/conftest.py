@@ -1,0 +1,26 @@
+"""Shared fixtures for the device-resident (float64) test surfaces."""
+
+import jax
+import pytest
+
+
+def _toggle_x64():
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+@pytest.fixture()
+def x64():
+    """Enable 64-bit JAX types for one test, restoring the prior value
+    (the device bound-eval path requires x64; see
+    ``repro.core.state.require_x64``)."""
+    yield from _toggle_x64()
+
+
+@pytest.fixture(scope="module")
+def x64_module():
+    """Module-scoped twin of :func:`x64` for suites that are fully
+    device-resident."""
+    yield from _toggle_x64()

@@ -1,0 +1,191 @@
+"""Device bound-evaluation regression suite (the float64 guarantee).
+
+The ``*_device`` twins (bounders, RangeTrim, COUNT/SUM CIs, the OptStop
+schedule and stopping conditions) must reproduce the host numpy float64
+math to <= 1e-9 — across every bounder, with and without RangeTrim,
+under jit, including the count-0/1 downdate edge lanes — and must refuse
+to run without 64-bit JAX types (silent float32 demotion would produce
+invalid guarantees, not merely loose intervals).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import count_sum, get_bounder
+from repro.core.bounders import BernsteinSerflingBounder
+from repro.core.optstop import delta_schedule, delta_schedule_device
+from repro.core.state import (DevStatsBatch, StatsBatch,
+                              downdate_extreme_batch,
+                              downdate_extreme_batch_device, require_x64)
+
+ATOL = 1e-9
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64(x64_module):
+    yield
+
+
+def make_batch(G=32, hist_bins=None, a=0.0, b=100.0, seed=0):
+    """G groups of random samples, incl. empty / singleton edge lanes."""
+    rng = np.random.default_rng(seed)
+    counts, means, m2s, vmins, vmaxs, hists = [], [], [], [], [], []
+    for g in range(G):
+        n = [0, 1, 2][g] if g < 3 else int(rng.integers(3, 5000))
+        v = np.clip(rng.normal(50.0, 20.0, n), a, b)
+        if n == 0:
+            counts.append(0.0)
+            means.append(0.0)
+            m2s.append(0.0)
+            vmins.append(np.inf)
+            vmaxs.append(-np.inf)
+        else:
+            counts.append(float(n))
+            means.append(v.mean())
+            m2s.append(((v - v.mean()) ** 2).sum())
+            vmins.append(v.min())
+            vmaxs.append(v.max())
+        if hist_bins:
+            idx = np.clip(((v - a) * hist_bins / (b - a)).astype(int),
+                          0, hist_bins - 1)
+            hists.append(np.bincount(idx, minlength=hist_bins)
+                         .astype(np.float64))
+    return StatsBatch(
+        count=np.asarray(counts), mean=np.asarray(means),
+        m2=np.asarray(m2s), vmin=np.asarray(vmins),
+        vmax=np.asarray(vmaxs),
+        hist=np.stack(hists) if hist_bins else None)
+
+
+def to_device(sb: StatsBatch) -> DevStatsBatch:
+    return DevStatsBatch(
+        count=jnp.asarray(sb.count), mean=jnp.asarray(sb.mean),
+        m2=jnp.asarray(sb.m2), vmin=jnp.asarray(sb.vmin),
+        vmax=jnp.asarray(sb.vmax),
+        hist=None if sb.hist is None else jnp.asarray(sb.hist))
+
+
+BOUNDER_CASES = [
+    ("hoeffding", False, None),
+    ("hoeffding", True, None),
+    ("hoeffding_serfling", False, None),
+    ("hoeffding_serfling", True, None),
+    ("bernstein", False, None),
+    ("bernstein", True, None),
+    ("anderson_dkw", False, 256),
+]
+
+
+@pytest.mark.parametrize("name,rt,hist_bins", BOUNDER_CASES,
+                         ids=[f"{n}{'+rt' if rt else ''}"
+                              for n, rt, _ in BOUNDER_CASES])
+@pytest.mark.parametrize("N", [5000.0, "per-group"])
+def test_device_interval_matches_host(name, rt, hist_bins, N):
+    a, b = 0.0, 100.0
+    sb = make_batch(hist_bins=hist_bins, a=a, b=b)
+    bounder = get_bounder(name, rangetrim=rt)
+    if N == "per-group":
+        if name == "anderson_dkw":
+            pytest.skip("DKW device path takes scalar N like the engine")
+        N = np.maximum(sb.count * 2.0 + 10.0, 100.0)
+    lo_h, hi_h = bounder.interval_batch(sb, a, b, N, 1e-6)
+
+    @jax.jit
+    def dev(s, delta):
+        return bounder.interval_batch_device(s, a, b, N, delta)
+
+    lo_d, hi_d = dev(to_device(sb), jnp.asarray(1e-6, jnp.float64))
+    np.testing.assert_allclose(np.asarray(lo_d), lo_h, rtol=0, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(hi_d), hi_h, rtol=0, atol=ATOL)
+
+
+def test_device_bernstein_serfling_known_sigma():
+    sb = make_batch()
+    bounder = BernsteinSerflingBounder(sigma=12.5)
+    lo_h, hi_h = bounder.interval_batch(sb, 0.0, 100.0, 6000.0, 1e-4)
+    lo_d, hi_d = jax.jit(
+        lambda s: bounder.interval_batch_device(s, 0.0, 100.0, 6000.0,
+                                                1e-4))(to_device(sb))
+    np.testing.assert_allclose(np.asarray(lo_d), lo_h, rtol=0, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(hi_d), hi_h, rtol=0, atol=ATOL)
+
+
+@pytest.mark.parametrize("which", ["max", "min"])
+def test_device_downdate_matches_host(which):
+    sb = make_batch(hist_bins=64)
+    got = jax.jit(lambda s: downdate_extreme_batch_device(s, which))(
+        to_device(sb))
+    want = downdate_extreme_batch(sb, which)
+    for f in ("count", "mean", "m2", "vmin", "vmax"):
+        np.testing.assert_allclose(np.asarray(getattr(got, f)),
+                                   getattr(want, f), rtol=0, atol=1e-12,
+                                   err_msg=f)
+    np.testing.assert_array_equal(np.asarray(got.hist), want.hist)
+
+
+def test_device_count_sum_twins_match_host():
+    rng = np.random.default_rng(1)
+    m_v = rng.integers(0, 900, 64).astype(np.float64)
+    r, R, delta = 1000.0, 50_000.0, 1e-7
+    for host_fn, dev_fn in [
+            (count_sum.selectivity_ci, count_sum.selectivity_ci_device),
+            (count_sum.count_ci, count_sum.count_ci_device)]:
+        lo_h, hi_h = host_fn(m_v, r, R, delta)
+        lo_d, hi_d = jax.jit(lambda m, f=dev_fn: f(m, r, R, delta))(m_v)
+        np.testing.assert_allclose(np.asarray(lo_d), lo_h, rtol=0,
+                                   atol=ATOL)
+        np.testing.assert_allclose(np.asarray(hi_d), hi_h, rtol=0,
+                                   atol=ATOL)
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(
+            lambda m: count_sum.n_plus_device(m, r, R, delta))(m_v)),
+        count_sum.n_plus(m_v, r, R, delta), rtol=0, atol=1e-6)
+    cci = (m_v * 0.9, m_v * 1.1 + 1.0)
+    aci = (m_v - 500.0, m_v + 500.0)
+    lo_h, hi_h = count_sum.sum_ci(cci, aci)
+    lo_d, hi_d = count_sum.sum_ci_device(
+        tuple(map(jnp.asarray, cci)), tuple(map(jnp.asarray, aci)))
+    np.testing.assert_allclose(np.asarray(lo_d), lo_h)
+    np.testing.assert_allclose(np.asarray(hi_d), hi_h)
+
+
+def test_device_delta_schedule_bitwise():
+    for k in (1, 2, 17, 4096):
+        assert float(delta_schedule_device(1e-5, k)) == \
+            delta_schedule(1e-5, k)
+
+
+def test_traced_delta_schedule_composes_with_bounder():
+    """The schedule's traced delta flows through a bounder twin under
+    jit, as in the while_loop body."""
+    sb = make_batch()
+    bounder = get_bounder("bernstein", rangetrim=True)
+
+    @jax.jit
+    def ci_at_round(s, k):
+        dk = delta_schedule_device(1e-6, k)
+        return bounder.interval_batch_device(s, 0.0, 100.0, 6000.0, dk)
+
+    for k in (1, 5):
+        lo_d, hi_d = ci_at_round(to_device(sb),
+                                 jnp.asarray(k, jnp.int32))
+        lo_h, hi_h = bounder.interval_batch(sb, 0.0, 100.0, 6000.0,
+                                            delta_schedule(1e-6, k))
+        np.testing.assert_allclose(np.asarray(lo_d), lo_h, rtol=0,
+                                   atol=ATOL)
+        np.testing.assert_allclose(np.asarray(hi_d), hi_h, rtol=0,
+                                   atol=ATOL)
+
+
+def test_require_x64_guard_message():
+    jax.config.update("jax_enable_x64", False)
+    try:
+        with pytest.raises(RuntimeError) as ei:
+            require_x64("test feature")
+        msg = str(ei.value)
+        assert "jax_enable_x64" in msg and "float32" in msg
+    finally:
+        jax.config.update("jax_enable_x64", True)
+    require_x64("test feature")  # no raise with x64 on

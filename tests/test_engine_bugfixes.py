@@ -228,3 +228,44 @@ def test_tail_padding_preserves_reference_results():
     r_fus = FastFrame(sc, EngineConfig(fused=True, round_blocks=4,
                                        lookahead_blocks=8)).run(q, **kw)
     assert_bitwise_equal(r_fus, r_ref)
+
+
+# -- 5. device-loop boundary semantics: soundness flags must survive the
+#       lax.while_loop carry and feed the recovery pass ----------------------
+
+
+def test_exhaustion_flags_propagate_from_device_loop(x64):
+    """Exhaustion inside the while_loop (cursor reaches n_blocks with the
+    query still active) must mark untainted views exact on the way out —
+    the device twin of the seed-era soundness fix in
+    ``_ScanViews.update_exact`` — and hand the rest to the recovery pass
+    identically to the host loop."""
+    from tests.test_device_loop import assert_device_matches_host
+
+    sc = _toy_scramble(card=4)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # never tight
+    kw = dict(sampling="active_peek", seed=1, start_block=0)
+    r_dev = FastFrame(sc, EngineConfig(device_loop=True, round_blocks=8,
+                                       lookahead_blocks=32)).run(q, **kw)
+    r_hst = FastFrame(sc, EngineConfig(device_loop=False, round_blocks=8,
+                                       lookahead_blocks=32)).run(q, **kw)
+    assert r_dev.exact.all() and not r_dev.stopped_early
+    assert_device_matches_host(r_dev, r_hst)
+
+
+def test_phantom_split_holds_through_device_loop(x64):
+    """The valid-views-only delta split (fix 1) must survive the jittable
+    stopping conditions: phantom lanes stay inactive and do not distort
+    the device loop's CIs vs the unpadded group space."""
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1.0), delta=1e-9)
+    kw = dict(sampling="scan", seed=1, start_block=0)
+    cfg = EngineConfig(device_loop=True, round_blocks=8)
+    res4 = FastFrame(_toy_scramble(card=4), cfg).run(q, **kw)
+    res64 = FastFrame(_toy_scramble(card=64), cfg).run(q, **kw)
+    np.testing.assert_array_equal(res64.lo[:4], res4.lo)
+    np.testing.assert_array_equal(res64.hi[:4], res4.hi)
+    assert res64.rounds == res4.rounds
+    assert (~res64.nonempty[4:]).all()
+    assert res64.exact[4:].all()

@@ -12,6 +12,10 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
+# long-running hypothesis fuzz: excluded from the default (tier-1) run
+# via pytest.ini's addopts; CI runs it with -m "slow or not slow"
+pytestmark = pytest.mark.slow
+
 from repro.aqp import AggQuery, EngineConfig, FastFrame, Filter, \
     build_scramble
 from repro.core.optstop import (AbsoluteWidth, GroupsOrdered, ThresholdSide,

@@ -202,3 +202,54 @@ def test_fused_round_interpret_engine_close_to_ref():
                                rtol=1e-4, atol=1e-3)
     np.testing.assert_allclose(r_int.lo, r_ref.lo, rtol=1e-3, atol=1e-2)
     np.testing.assert_allclose(r_int.hi, r_ref.hi, rtol=1e-3, atol=1e-2)
+
+
+# -- device-resident loop: dispatch-boundary semantics ------------------------
+# (the deep equivalence suite is tests/test_device_loop.py; these pin the
+# loop-boundary invariants of the lax.while_loop chunking specifically;
+# the x64 fixture lives in tests/conftest.py)
+
+
+def _run_device(sc, q, **cfg_kw):
+    return FastFrame(sc, EngineConfig(device_loop=True, round_blocks=16,
+                                      lookahead_blocks=64,
+                                      **cfg_kw)).run(
+        q, sampling="active_peek", seed=1, start_block=0)
+
+
+def test_device_chunking_is_result_invariant(sc, x64):
+    """``sync_every`` / ``chunk_rounds`` change dispatch granularity
+    only: any chunk size must produce results identical to the unchunked
+    single-dispatch loop — including when the chunk boundary lands
+    exactly on, just before and just after the stopping round."""
+    q = AggQuery(agg="count", filters=(Filter("origin", "eq", 3),),
+                 stop=AbsoluteWidth(eps=5e3), delta=1e-9)
+    base = _run_device(sc, q)
+    assert base.stopped_early  # the boundary cases below are meaningful
+    for cfg_kw in (dict(sync_every=1), dict(sync_every=3),
+                   dict(sync_every=base.rounds),
+                   dict(sync_every=base.rounds - 1),
+                   dict(sync_every=base.rounds + 1),
+                   dict(chunk_rounds=2),
+                   dict(sync_every=2, chunk_rounds=1000)):
+        got = _run_device(sc, q, **cfg_kw)
+        assert_bitwise_equal(got, base)
+
+
+def test_device_early_stop_inside_chunk_no_overscan(sc, x64):
+    """A stop firing mid-chunk must end the while_loop immediately: the
+    coverage accounting (rows_covered / blocks_fetched / rounds) must
+    equal the host loop's, which checks the stop test every round —
+    a chunk far larger than the stopping round must not over-scan."""
+    q = AggQuery(agg="count", filters=(Filter("origin", "eq", 3),),
+                 stop=AbsoluteWidth(eps=5e3), delta=1e-9)
+    r_host = FastFrame(sc, EngineConfig(device_loop=False,
+                                        round_blocks=16,
+                                        lookahead_blocks=64)).run(
+        q, sampling="active_peek", seed=1, start_block=0)
+    r_dev = _run_device(sc, q, sync_every=10_000)
+    assert r_dev.stopped_early and r_host.stopped_early
+    assert r_dev.rounds == r_host.rounds
+    assert r_dev.rows_covered == r_host.rows_covered
+    assert r_dev.blocks_fetched == r_host.blocks_fetched
+    assert r_dev.bitmap_probes == r_host.bitmap_probes

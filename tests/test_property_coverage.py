@@ -13,6 +13,11 @@ from hypothesis import strategies as st
 
 from repro.core import Stats, get_bounder
 
+# long-running hypothesis property suite: excluded from the default
+# (tier-1) run via pytest.ini's addopts; CI runs it with
+# -m "slow or not slow"
+pytestmark = pytest.mark.slow
+
 BOUNDERS = [("hoeffding_serfling", False), ("bernstein", False),
             ("bernstein", True), ("hoeffding", True)]
 

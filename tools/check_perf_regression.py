@@ -45,6 +45,11 @@ CHECKS = [
          baseline="BENCH_serve.json",
          key=("workload", "nb"),
          metric="served_qps"),
+    dict(name="device_loop",
+         current="BENCH_device_loop_quick.json",
+         baseline="BENCH_device_loop.json",
+         key=("config",),
+         metric="device_rounds_per_s"),
     # ... plus machine-independent within-run ratios, robust to hardware
     dict(name="fused_scan-ratio",
          current="BENCH_fused_scan_quick.json",
@@ -56,6 +61,11 @@ CHECKS = [
          baseline="BENCH_serve.json",
          key=("workload", "nb"),
          metric="speedup"),
+    dict(name="device_loop-ratio",
+         current="BENCH_device_loop_quick.json",
+         baseline="BENCH_device_loop.json",
+         key=("config",),
+         metric="speedup_vs_host_loop"),
 ]
 
 
