@@ -9,7 +9,9 @@ two ways over identical per-group states:
   * ``batched`` — one ``interval_batch`` call over the whole ``StatsBatch``
     (what ``FastFrame.run`` now does).
 
-Results go to ``benchmarks/results/BENCH_bound_eval.json`` and the
+Results go to ``benchmarks/results/BENCH_bound_eval.json`` (the
+perf-guard baseline; ``--quick`` writes ``BENCH_bound_eval_quick.json``
+for the CI guard without clobbering it) and the
 ``name,us_per_call,derived`` CSV contract is printed (derived = speedup).
 
 Run: ``PYTHONPATH=src python benchmarks/bench_bound_eval.py [--quick]``
@@ -97,6 +99,7 @@ def run(sweep=SWEEP_G, bounder_name: str = "bernstein", rangetrim: bool = True,
             scalar_us=t_scalar * 1e6, batched_us=t_batched * 1e6,
             us_per_group_scalar=t_scalar * 1e6 / g,
             us_per_group_batched=t_batched * 1e6 / g,
+            batched_refreshes_per_s=1.0 / max(t_batched, 1e-12),
             speedup=t_scalar / max(t_batched, 1e-12), equivalent=equiv))
     return rows
 
@@ -126,7 +129,11 @@ def main(argv=None):
     out_dir.mkdir(parents=True, exist_ok=True)
     report = dict(bench="bound_eval", bounder=rows[0]["bounder"],
                   delta=DELTA, rows=rows)
-    (out_dir / "BENCH_bound_eval.json").write_text(
+    # --quick is the CI perf-guard smoke: keep it from clobbering the
+    # committed full-sweep baseline it is compared against
+    name = ("BENCH_bound_eval_quick.json" if args.quick
+            else "BENCH_bound_eval.json")
+    (out_dir / name).write_text(
         json.dumps(report, indent=1, default=float))
 
     print("\nname,us_per_call,derived")

@@ -1,0 +1,151 @@
+"""Microbenchmark: sharded fused round loop across a CPU device mesh.
+
+Measures end-to-end ``FastFrame.run`` of a full-exhaustion query (every
+config executes the identical round schedule over the identical blocks)
+with the device-resident loop sharded over meshes of 1 / 2 / 4 / 8
+devices, reported as **rounds per second** plus the scaling ratio vs the
+single-device loop.
+
+The mesh is ``--xla_force_host_platform_device_count`` fake CPU devices
+(set before jax initializes — the dev recipe from the README's
+multi-device quickstart), so this is a *plumbing* benchmark, not a
+hardware-scaling claim: all shards share the same physical cores, and
+the collective merge + shard_map dispatch add overhead instead of
+spreading real FLOPs. The committed baseline therefore records the
+OVERHEAD of the sharded path at each mesh size (the perf guard keeps it
+from regressing); on a real accelerator mesh the same code spreads the
+scan across real chips with an O(groups)-byte collective per round.
+
+Results go to ``benchmarks/results/BENCH_sharded_scan.json`` (the
+perf-guard baseline; ``--quick`` writes ``BENCH_sharded_scan_quick.json``
+without clobbering it) and the ``name,us_per_call,derived`` CSV contract
+is printed (derived = ratio vs single-device).
+
+Run: ``PYTHONPATH=src python benchmarks/bench_sharded_scan.py [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # before any JAX computation
+
+import numpy as np  # noqa: E402
+
+from repro.aqp import (AggQuery, EngineConfig, FastFrame,  # noqa: E402
+                       build_scramble)
+from repro.core.optstop import AbsoluteWidth  # noqa: E402
+from repro.data import flights  # noqa: E402
+
+SWEEP = [
+    # (config, nb, block_rows, round_blocks, lookahead, n_shards)
+    ("single_device", 512, 256, 8, 64, 1),
+    ("mesh2", 512, 256, 8, 64, 2),
+    ("mesh4", 512, 256, 8, 64, 4),
+    ("mesh8", 512, 256, 8, 64, 8),
+]
+QUICK_SWEEP = [SWEEP[0], SWEEP[3]]
+
+_QUERY = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                  stop=AbsoluteWidth(eps=1e-9), delta=1e-9)
+
+
+def _make_frame(nb: int, block_rows: int, round_blocks: int,
+                lookahead: int, n_shards: int) -> FastFrame:
+    ds = flights.generate(n_rows=nb * block_rows, n_airports=120,
+                          n_airlines=14, seed=7)
+    sc = build_scramble(ds.columns, catalog=ds.catalog,
+                        block_rows=block_rows, seed=8)
+    return FastFrame(sc, EngineConfig(
+        round_blocks=round_blocks, lookahead_blocks=lookahead,
+        hist_bins=256, device_loop=True,
+        shard_rows=(n_shards > 1), mesh_shape=(n_shards,)))
+
+
+def _time_run(frame: FastFrame, repeats: int = 5):
+    """Warm jit / materialization caches once, then take best-of-N (the
+    oversubscribed fake-device mesh is noisy, hence N=5)."""
+    frame.run(_QUERY, sampling="active_peek", seed=1, start_block=0)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = frame.run(_QUERY, sampling="active_peek", seed=1,
+                        start_block=0)
+        best = min(best, time.perf_counter() - t0)
+    return res, best
+
+
+def run(sweep):
+    rows = []
+    baseline = {}  # (nb, block_rows) -> (res, rounds_per_s)
+    for config, nb, block_rows, round_blocks, lookahead, n_shards in sweep:
+        res, wall = _time_run(_make_frame(nb, block_rows, round_blocks,
+                                          lookahead, n_shards))
+        rps = res.rounds / wall
+        ref = baseline.get((nb, block_rows))
+        if n_shards == 1:
+            baseline[(nb, block_rows)] = (res, rps)
+            speedup = 1.0
+        elif ref is not None:
+            # identical schedule + exact fold counts across mesh sizes
+            assert res.rounds == ref[0].rounds
+            assert res.blocks_fetched == ref[0].blocks_fetched
+            np.testing.assert_array_equal(res.count_seen,
+                                          ref[0].count_seen)
+            speedup = rps / ref[1]
+        else:  # quick sweep without the single-device row
+            speedup = float("nan")
+        rows.append(dict(
+            config=config, nb=nb, block_rows=block_rows,
+            round_blocks=round_blocks, lookahead=lookahead,
+            n_shards=n_shards, rounds=res.rounds,
+            rounds_per_s=rps, speedup_vs_single=speedup))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (CI smoke)")
+    args = ap.parse_args(argv)
+    if jax.device_count() < 8:
+        raise SystemExit(
+            "bench_sharded_scan needs 8 devices; run in a fresh process "
+            "(it sets XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "before jax initializes) or set the flag yourself")
+    rows = run(QUICK_SWEEP if args.quick else SWEEP)
+
+    print(f"{'config':>14s} {'shards':>6s} {'rounds':>6s} "
+          f"{'rounds/s':>9s} {'vs 1dev':>8s}")
+    for r in rows:
+        print(f"{r['config']:>14s} {r['n_shards']:6d} {r['rounds']:6d} "
+              f"{r['rounds_per_s']:9.1f} {r['speedup_vs_single']:8.2f}")
+
+    report = dict(bench="sharded_scan", rows=rows)
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # --quick is a CI/dev smoke: don't clobber the committed full sweep
+    name = ("BENCH_sharded_scan_quick.json" if args.quick
+            else "BENCH_sharded_scan.json")
+    (out_dir / name).write_text(json.dumps(report, indent=1,
+                                           default=float))
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        us = 1e6 / r["rounds_per_s"]
+        print(f"sharded_scan/{r['config']},"
+              f"{us:.2f},{r['speedup_vs_single']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

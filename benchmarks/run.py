@@ -85,6 +85,10 @@ def main() -> None:
                     1e6 / r["device_rounds_per_s"],
                     r["speedup_vs_host_loop"]))
 
+    # bench_sharded_scan is NOT invoked here: it must own a fresh process
+    # (XLA_FLAGS=--xla_force_host_platform_device_count must be set
+    # before jax initializes). Run it standalone; its committed report is
+    # still mirrored by emit_root_trajectory().
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / "bench.json").write_text(
         json.dumps(out, indent=1, default=float))

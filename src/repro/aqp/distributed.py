@@ -1,81 +1,200 @@
-"""Distributed FastFrame scan rounds: shard_map + collectives.
+"""Mesh construction + sharding specs for the sharded fused round loop.
 
-The scramble's block axis is sharded over the flattened data-parallel
-domain (``("pod", "data")`` on the production mesh).  Each device scans its
-local blocks with the Pallas group-aggregation kernel, yielding per-group
-partial states; the tiny per-group reduction then crosses the mesh:
+This module is deliberately thin: the *computation* of the sharded scan
+lives in :mod:`repro.kernels.fused_scan` (the round body runs under
+``shard_map`` with the per-round fold delta merged by ``psum`` / ``pmin``
+/ ``pmax`` inside the ``lax.while_loop`` carry — see
+:func:`repro.kernels.fused_scan.build_query_loop`). What lives here is
+everything the engine needs to *feed* that path:
 
-  * ``count / dsum / dsq``  ->  psum    (shifted-moment form is additive)
-  * ``vmin / vmax``         ->  pmin / pmax   (RangeTrim extremes)
-  * ``hist``                ->  psum    (Anderson/DKW CDF state)
+  * :func:`make_aqp_mesh` — flatten the local devices (or an explicit
+    ``EngineConfig.mesh_shape``) into the mesh the block axis is sharded
+    over;
+  * :class:`BlockShards` — the sharded layout of a scramble's block axis:
+    contiguous equal-length shards (the tail shard zero-padded past the
+    real block count), plus the ``device_put`` helpers that place the
+    engine's device-resident column slabs (row-sharded) and its small
+    per-block metadata (replicated);
+  * :func:`make_sharded_fold` — the standalone one-round collective fold
+    (per-shard :func:`repro.kernels.ops.grouped_sums` + ``psum`` of the
+    raw additive sums + ``pmin``/``pmax`` extremes), the building block
+    the launch dry-run lowers and the bitwise merge tests pin down.
 
-The collective payload is O(groups), i.e. bytes, while the scan moves the
-actual data through the MXU — the engine stays scan-throughput-bound at any
-pod count, which is the paper's single-node story preserved at scale
-(DESIGN.md §2.2). The host driver (``repro.aqp.engine``) then evaluates
-bounds exactly as in the single-device path.
+The layout invariants (also asserted by ``tests/test_sharded_scan.py``):
+
+  * blocks are exchangeable post-shuffle, so contiguous sharding
+    preserves the scramble's uniformity (same argument as
+    :meth:`repro.aqp.scramble.Scramble.device_shard`);
+  * shard ``d`` owns global blocks ``[d * shard_blocks,
+    (d+1) * shard_blocks)``; the last shard is padded with zero blocks so
+    every device holds an equal-length slab (no ragged shapes inside
+    ``shard_map``). Padding blocks are never selected — the cursor is
+    clamped to the real block count — and their rows carry ``mask == 0``;
+  * the collective payload per round is O(groups) bytes (raw moment sums
+    + extremes + optional histogram) while the scan itself stays local to
+    each shard, so the engine remains scan-throughput-bound at any mesh
+    size (the paper's single-node story preserved at scale).
 """
 
 from __future__ import annotations
 
-import functools
+import dataclasses
+import math
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.state import MomentState
+from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
+DEFAULT_AXIS = "shards"
 
-def _state_to_raw(st: MomentState, center) -> Tuple[jax.Array, ...]:
-    """Welford state -> additive (count, dsum, dsq) about ``center``."""
-    dsum = (st.mean - center) * st.count
-    dsq = st.m2 + jnp.where(st.count > 0, dsum * dsum /
-                            jnp.maximum(st.count, 1.0), 0.0)
-    return st.count, dsum, dsq
+__all__ = ["BlockShards", "DEFAULT_AXIS", "build_block_shards",
+           "make_aqp_mesh", "make_sharded_fold", "place_replicated",
+           "shard_rows"]
 
 
-def _raw_to_state(count, dsum, dsq, vmin, vmax, center) -> MomentState:
-    safe = jnp.maximum(count, 1.0)
-    mean = center + dsum / safe
-    m2 = jnp.maximum(dsq - dsum * dsum / safe, 0.0)
-    empty = count == 0
-    return MomentState(
-        count=count,
-        mean=jnp.where(empty, 0.0, mean),
-        m2=jnp.where(empty, 0.0, m2),
-        vmin=vmin, vmax=vmax,
-    )
+def make_aqp_mesh(mesh_shape: Optional[Tuple[int, ...]] = None
+                  ) -> Optional[Mesh]:
+    """Build the device mesh the scramble's block axis is sharded over.
+
+    ``mesh_shape=None`` uses every local device as a 1-D ``"shards"``
+    axis; an explicit shape (e.g. ``EngineConfig.mesh_shape=(2, 4)``)
+    gets axes ``("shard0", "shard1", ...)`` — the block axis is sharded
+    over ALL axes (flattened), so the shape only controls device
+    placement. Returns ``None`` when the mesh would have a single device
+    (sharding is pure overhead there).
+
+    Raises:
+        ValueError: when ``mesh_shape`` asks for more devices than the
+            platform provides.
+    """
+    devices = jax.devices()
+    if mesh_shape is None:
+        if len(devices) < 2:
+            return None
+        return Mesh(np.asarray(devices), (DEFAULT_AXIS,))
+    n = math.prod(mesh_shape)
+    if n > len(devices):
+        raise ValueError(
+            f"EngineConfig.mesh_shape={mesh_shape} needs {n} devices but "
+            f"only {len(devices)} are visible (on CPU hosts use "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "jax initializes)")
+    if n == 1:
+        return None
+    if len(mesh_shape) == 1:
+        return Mesh(np.asarray(devices[:n]), (DEFAULT_AXIS,))
+    axes = tuple(f"shard{i}" for i in range(len(mesh_shape)))
+    return Mesh(np.asarray(devices[:n]).reshape(mesh_shape), axes)
 
 
-def make_distributed_round(mesh: Mesh, dp_axes: Sequence[str],
-                           num_groups: int, center: float,
-                           impl: Optional[str] = None,
-                           with_hist: bool = False,
-                           hist_bins: int = 1024,
-                           hist_range: Tuple[float, float] = (0.0, 1.0)):
-    """Build the jitted one-round scan function for a mesh.
+@dataclasses.dataclass(frozen=True)
+class BlockShards:
+    """Sharded layout of a scramble's block axis over a mesh.
+
+    ``n_shards`` equal-length contiguous shards of ``shard_blocks``
+    blocks each; the global block count ``nb`` is zero-padded up to
+    ``n_shards * shard_blocks`` (tail padding is owned by the last
+    shard(s) and never selected by the scan).
+    """
+
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    nb: int               # real global block count
+    n_shards: int
+    shard_blocks: int     # padded per-shard block count
+
+    @property
+    def padded_nb(self) -> int:
+        return self.n_shards * self.shard_blocks
+
+    @property
+    def info(self) -> kfused.ShardInfo:
+        """The kernel-layer view of this layout."""
+        return kfused.ShardInfo(mesh=self.mesh, axes=self.axes,
+                                n_shards=self.n_shards,
+                                shard_blocks=self.shard_blocks)
+
+    def pad_blocks(self, arr: np.ndarray) -> np.ndarray:
+        """Zero-pad a ``(nb, ...)`` per-block array to ``padded_nb``."""
+        pad = self.padded_nb - arr.shape[0]
+        if pad == 0:
+            return arr
+        return np.concatenate(
+            [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+
+    def put_blocks(self, arr) -> jax.Array:
+        """Pad + place a per-block array row-sharded over the mesh."""
+        return jax.device_put(
+            self.pad_blocks(np.asarray(arr)),
+            NamedSharding(self.mesh, P(self.axes)))
+
+    def put_replicated(self, arr) -> jax.Array:
+        """Place an array fully replicated on every mesh device."""
+        return jax.device_put(np.asarray(arr),
+                              NamedSharding(self.mesh, P()))
+
+
+def place_replicated(shards: Optional[BlockShards], arr) -> jax.Array:
+    """Device placement for a buffer every mesh device reads whole:
+    replicated over the mesh when ``shards`` is set, a plain
+    (single-device) array otherwise — the one placement dispatch shared
+    by the engine's and the serving layer's buffer assembly."""
+    if shards is not None:
+        return shards.put_replicated(arr)
+    return jnp.asarray(arr)
+
+
+def build_block_shards(nb: int, mesh: Optional[Mesh]
+                       ) -> Optional[BlockShards]:
+    """Layout of ``nb`` scramble blocks over ``mesh`` (None passes
+    through: single-device frames carry no shard layout)."""
+    if mesh is None:
+        return None
+    n_shards = mesh.devices.size
+    return BlockShards(mesh=mesh, axes=tuple(mesh.axis_names), nb=nb,
+                       n_shards=n_shards,
+                       shard_blocks=-(-nb // n_shards))
+
+
+def make_sharded_fold(mesh: Mesh, dp_axes: Sequence[str], num_groups: int,
+                      center: float, impl: Optional[str] = None,
+                      with_hist: bool = False, hist_bins: int = 1024,
+                      hist_range: Tuple[float, float] = (0.0, 1.0)):
+    """Build the jitted one-round collective fold for a mesh.
+
+    Each device folds its local rows with
+    :func:`repro.kernels.ops.grouped_sums` (the raw additive
+    (count, dsum, dsq) form about ``center``); the tiny per-group payload
+    then crosses the mesh — ``psum`` for the sums (and histogram),
+    ``pmin``/``pmax`` for the extremes — before the shifted-moment
+    conversion. This is exactly the merge the sharded round loop performs
+    inside its ``lax.while_loop`` (:mod:`repro.kernels.fused_scan`),
+    exposed standalone for the launch dry-run and the bitwise merge
+    tests: on exactly-representable data it equals the single-device
+    :func:`~repro.kernels.ops.grouped_moments` fold bit for bit.
 
     Inputs (sharded over ``dp_axes`` on their leading axis):
-      values, gids, mask: (rows,) row-major flattened blocks.
-    Output: replicated merged MomentState (num_groups,) [+ hist].
+      values, gids, mask: ``(rows,)`` row-major flattened blocks.
+    Output: replicated merged :class:`~repro.core.state.MomentState`
+    ``(num_groups,)`` [+ replicated histogram when ``with_hist``].
     """
     dp = tuple(dp_axes)
     spec = P(dp)
 
     def round_fn(values, gids, mask):
-        st = kops.grouped_moments(values, gids, mask, num_groups, center,
-                                  impl=impl)
-        count, dsum, dsq = _state_to_raw(st, center)
-        count = jax.lax.psum(count, dp)
-        dsum = jax.lax.psum(dsum, dp)
-        dsq = jax.lax.psum(dsq, dp)
-        vmin = jax.lax.pmin(st.vmin, dp)
-        vmax = jax.lax.pmax(st.vmax, dp)
-        out = _raw_to_state(count, dsum, dsq, vmin, vmax, center)
+        sums, vmin, vmax = kops.grouped_sums(values, gids, mask,
+                                             num_groups, center, impl=impl)
+        sums = jax.lax.psum(sums, dp)
+        vmin = jax.lax.pmin(vmin, dp)
+        vmax = jax.lax.pmax(vmax, dp)
+        out = kops.moments_from_sums(sums, vmin, vmax, center)
         if not with_hist:
             return out
         h = kops.grouped_hist(values, gids, mask, num_groups,
@@ -83,13 +202,11 @@ def make_distributed_round(mesh: Mesh, dp_axes: Sequence[str],
                               nbins=hist_bins, impl=impl)
         return out, jax.lax.psum(h.hist, dp)
 
+    rep_state = jax.tree.map(lambda _: P(), MomentState(0, 0, 0, 0, 0))
     sharded = shard_map(
         round_fn, mesh=mesh,
         in_specs=(spec, spec, spec),
-        out_specs=(jax.tree.map(lambda _: P(), MomentState(0, 0, 0, 0, 0))
-                   if not with_hist else
-                   (jax.tree.map(lambda _: P(), MomentState(0, 0, 0, 0, 0)),
-                    P())),
+        out_specs=(rep_state if not with_hist else (rep_state, P())),
         check_rep=False)
     return jax.jit(sharded)
 

@@ -61,18 +61,21 @@ Soundness bookkeeping beyond the paper's prose:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.aqp import distributed as adist
 from repro.aqp.bitmap import (BlockBitmap, build_bitmap, pack_mask,
                               unpack_words)
 from repro.aqp.query import AggQuery, Expression, QueryResult
 from repro.aqp.scramble import Scramble
 from repro.core import count_sum
+from repro.core.lru import LRUCache
 from repro.core.bounders import get_bounder
 from repro.core.optstop import delta_schedule, delta_schedule_device
 from repro.core.state import (DevStatsBatch, MomentState, StatsBatch,
@@ -209,7 +212,33 @@ class EngineConfig:
             in-flight scans hold direct references and are never
             invalidated. Shared by ``FastFrame.run`` and
             :class:`repro.serve.FrameServer` (repeat signatures across
-            batches reuse the same buffers).
+            batches reuse the same buffers). All four frame caches
+            (materialization + compiled loops) are
+            :class:`repro.core.lru.LRUCache` instances.
+        shard_rows: run the device-resident round loop SHARDED over a
+            device mesh: the value/mask/group-code slabs are row-sharded
+            (contiguous equal-length block shards, tail zero-padded),
+            selection / accounting / bound eval stay replicated, and
+            each round's fold delta merges across the mesh with one
+            ``psum``/``pmin``/``pmax`` set inside the ``lax.while_loop``
+            carry (no host sync; see :mod:`repro.aqp.distributed` and
+            ``docs/architecture.md``). ``None`` (default) auto-enables
+            when the device loop is in effect AND more than one device
+            is visible — i.e. automatically off on a single device.
+            ``True`` requires a >=2-device mesh and the device loop (a
+            clear error otherwise). Equivalence vs the single-device
+            loop (``tests/test_sharded_scan.py``): scan decisions,
+            coverage, taint and scan metrics match exactly; fold deltas
+            are bitwise-equal whenever the per-shard f32 partial sums
+            are exactly representable (then CI endpoints match to the
+            f64 last ulp, <= 1e-9); on general data the shard merge
+            reorders the f32 row sum, so CI endpoints carry f32-reorder
+            noise (~1e-6 relative — the same class of caveat as the
+            fused histogram's tile-order rounding under ``fused``).
+        mesh_shape: explicit device-mesh shape for ``shard_rows`` (e.g.
+            ``(8,)`` or ``(2, 4)``; the block axis is sharded over every
+            axis, flattened). ``None`` uses all visible devices as a 1-D
+            mesh.
     """
 
     round_blocks: int = 64          # processed-block budget per round
@@ -227,6 +256,37 @@ class EngineConfig:
     mat_cache_entries: int = 32     # LRU cap per device materialization
                                     # cache (each entry pins one full
                                     # (n_blocks, block_rows) buffer)
+    shard_rows: Optional[bool] = None   # mesh-sharded device loop
+                                    # (None = auto: on iff device loop
+                                    # active and >1 device visible)
+    mesh_shape: Optional[Tuple[int, ...]] = None  # explicit mesh shape
+                                    # (None = all visible devices, 1-D)
+
+    def resolve_shard_rows(self) -> bool:
+        """Whether the device-resident round loop runs sharded over a
+        device mesh, with the guards applied for an explicit
+        ``shard_rows=True`` (auto is off on a single device)."""
+        n_dev = (math.prod(self.mesh_shape) if self.mesh_shape
+                 else jax.device_count())
+        if self.shard_rows is None:
+            return n_dev > 1 and self.resolve_device_loop()
+        if self.shard_rows:
+            if n_dev < 2:
+                raise ValueError(
+                    "EngineConfig(shard_rows=True) needs a mesh of >= 2 "
+                    f"devices, but the resolved mesh has {n_dev} (on CPU "
+                    "hosts set XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N before jax initializes, or pass "
+                    "mesh_shape). Sharding on one device is pure "
+                    "overhead, so it is never enabled implicitly.")
+            if not self.resolve_device_loop():
+                raise ValueError(
+                    "EngineConfig(shard_rows=True) requires the device-"
+                    "resident round loop (device_loop=True, which needs "
+                    "fused=True and 64-bit JAX types): the sharded scan "
+                    "is the fused lax.while_loop running under "
+                    "shard_map.")
+        return bool(self.shard_rows)
 
     def resolve_device_loop(self) -> bool:
         """Whether the device-resident round loop is in effect, with the
@@ -567,7 +627,8 @@ class _DeviceLoop:
 
     def __init__(self, frame: "FastFrame", q: AggQuery, slot: _ScanViews,
                  qci: "_QueryIntervals", probe: bool, lookahead: int,
-                 max_rounds: int):
+                 max_rounds: int,
+                 shards: Optional[adist.BlockShards] = None):
         require_x64("the device-resident round loop")
         cfg = frame.config
         sc = frame.scramble
@@ -579,20 +640,23 @@ class _DeviceLoop:
         self.use_hist = slot.use_hist
         self.chunk = cfg.sync_every or cfg.chunk_rounds
         self.max_rounds = max_rounds
+        self.shards = shards
         words = (slot.group_bm.words if probe
                  else np.zeros((1, 1), np.uint32))
         # scan-order-independent buffers; order_pad / cum_rows are filled
         # per run (the instance is cached on the frame across runs, so
-        # the jitted loop compiles once per query shape)
+        # the jitted loop compiles once per query shape). When sharded,
+        # the three data slabs are row-sharded over the mesh and every
+        # other buffer is placed replicated.
+        rep = lambda a: adist.place_replicated(shards, a)
         self._base_bufs = kfused.QueryLoopBuffers(
-            values=frame._device_values(slot.value_src),
-            gids=frame._device_gids(slot.gcol),
-            mask=frame._device_mask(q.filters),
-            words=jnp.asarray(words),
-            order_pad=None, static_ok=jnp.asarray(slot.static_ok),
-            presence=jnp.asarray(slot.presence),
-            presence_total=jnp.asarray(
-                slot.presence_total.astype(np.int32)),
+            values=frame._device_values(slot.value_src, shards),
+            gids=frame._device_gids(slot.gcol, shards),
+            mask=frame._device_mask(q.filters, shards),
+            words=rep(words),
+            order_pad=None, static_ok=rep(slot.static_ok),
+            presence=rep(slot.presence),
+            presence_total=rep(slot.presence_total.astype(np.int32)),
             cum_rows=None)
         refresh_fn = _make_device_refresh(
             q, qci, slot.a, slot.b, qci.use_hist, float(qci.R),
@@ -605,15 +669,17 @@ class _DeviceLoop:
             n_words=words.shape[1], impl=kops.resolve_impl(cfg.impl),
             lookahead=lookahead, cover_cap=cover_cap,
             max_rounds=max_rounds, chunk=self.chunk,
-            refresh_fn=refresh_fn)
+            refresh_fn=refresh_fn,
+            shard=shards.info if shards is not None else None)
 
     def set_order(self, order: np.ndarray, cum_rows: np.ndarray) -> None:
         """Install this run's scan order (the only run-dependent input)."""
         opad = np.zeros(self.nb + self.window, np.int32)
         opad[:self.nb] = order
+        rep = lambda a: adist.place_replicated(self.shards, a)
         self.bufs = self._base_bufs._replace(
-            order_pad=jnp.asarray(opad),
-            cum_rows=jnp.asarray(cum_rows.astype(np.int64)))
+            order_pad=rep(opad),
+            cum_rows=rep(cum_rows.astype(np.int64)))
 
     def init_carry(self, slot: _ScanViews,
                    qci: "_QueryIntervals") -> kfused.QueryLoopCarry:
@@ -693,19 +759,38 @@ class FastFrame:
         self._static_cache: Dict[Tuple, np.ndarray] = {}
         self._valid_counts = scramble.valid.sum(axis=1).astype(np.int64)
         # device-resident materialization caches, keyed by the components
-        # of the (filters, column, group-by) scan signature; LRU-bounded
+        # of the (filters, column, group-by) scan signature (+ whether
+        # the buffer is mesh-sharded); LRU-bounded
         # (config.mat_cache_entries) so a long-lived server receiving
         # ad-hoc filter values cannot grow device memory without limit —
         # in-flight scans hold direct references, so eviction only drops
         # the cache's pin, never a buffer a pass is using
-        self._dev_masks: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
-        self._dev_values: "OrderedDict[object, jnp.ndarray]" = OrderedDict()
-        self._dev_gids: "OrderedDict[Optional[str], jnp.ndarray]" = \
-            OrderedDict()
+        cap = self.config.mat_cache_entries
+        self._dev_masks = LRUCache(cap)
+        self._dev_values = LRUCache(cap)
+        self._dev_gids = LRUCache(cap)
         # compiled device-resident round loops (engine + serving pass),
         # keyed by the query/pass static identity: repeat queries reuse
-        # the traced lax.while_loop instead of recompiling per run
-        self._device_loops: "OrderedDict[Tuple, object]" = OrderedDict()
+        # the traced lax.while_loop instead of recompiling per run.
+        # Public: the serving layer hangs its compiled pass loops here.
+        self.device_loops = LRUCache(cap)
+        self._block_shards: Optional[adist.BlockShards] = None
+        self._shards_resolved = False
+
+    def block_shards(self) -> Optional[adist.BlockShards]:
+        """The frame's sharded block layout, or ``None`` when sharding is
+        off (``EngineConfig.shard_rows`` resolves False, or the mesh
+        would have a single device). Built once and cached so every run
+        and serving pass shards over the same mesh object."""
+        if not self._shards_resolved:
+            shards = None
+            if self.config.resolve_shard_rows():
+                mesh = adist.make_aqp_mesh(self.config.mesh_shape)
+                shards = adist.build_block_shards(self.scramble.n_blocks,
+                                                  mesh)
+            self._block_shards = shards
+            self._shards_resolved = True
+        return self._block_shards
 
     # -- index plumbing ------------------------------------------------------
 
@@ -781,34 +866,33 @@ class FastFrame:
             return q.column, q.column.derived_bounds(self.scramble.catalog)
         return q.column, self.scramble.catalog[q.column]
 
-    def _cache_lru(self, cache: OrderedDict, key,
-                   build: Callable[[], jnp.ndarray]) -> jnp.ndarray:
-        hit = cache.get(key)
-        if hit is not None:
-            cache.move_to_end(key)
-            return hit
-        val = cache[key] = build()
-        while len(cache) > self.config.mat_cache_entries:
-            cache.popitem(last=False)
-        return val
+    @staticmethod
+    def _put_blocks(arr: np.ndarray, shards: Optional[adist.BlockShards]
+                    ) -> jnp.ndarray:
+        """Place a (n_blocks, block_rows) slab on device: row-sharded
+        over the mesh when ``shards`` is set, single-device otherwise."""
+        if shards is not None:
+            return shards.put_blocks(arr)
+        return jnp.asarray(arr)
 
-    def _device_mask(self, filters) -> jnp.ndarray:
+    def _device_mask(self, filters, shards=None) -> jnp.ndarray:
         """Device-resident (n_blocks, block_rows) f32 predicate*valid
-        mask, cached by the filters' key."""
+        mask, cached by the filters' key (per sharded/unsharded
+        layout)."""
 
         def build():
             sc = self.scramble
             mask = sc.valid.copy()
             for f in filters:
                 mask &= f.evaluate(sc.columns)
-            return jnp.asarray(mask.astype(np.float32))
+            return self._put_blocks(mask.astype(np.float32), shards)
 
-        return self._cache_lru(self._dev_masks,
-                               tuple(f.key() for f in filters), build)
+        key = (tuple(f.key() for f in filters), shards is not None)
+        return self._dev_masks.get_or_build(key, build)
 
-    def _device_values(self, value_src) -> jnp.ndarray:
+    def _device_values(self, value_src, shards=None) -> jnp.ndarray:
         """Device-resident f32 value column (zeros for COUNT), cached by
-        the column name / Expression."""
+        the column name / Expression (per sharded/unsharded layout)."""
 
         def build():
             sc = self.scramble
@@ -818,20 +902,24 @@ class FastFrame:
                 values = sc.columns[value_src].astype(np.float32)
             else:  # COUNT: value column unused
                 values = np.zeros(sc.valid.shape, np.float32)
-            return jnp.asarray(values, jnp.float32)
+            return self._put_blocks(np.asarray(values, np.float32),
+                                    shards)
 
-        return self._cache_lru(self._dev_values, value_src, build)
+        return self._dev_values.get_or_build(
+            (value_src, shards is not None), build)
 
-    def _device_gids(self, gcol: Optional[str]) -> jnp.ndarray:
-        """Device-resident int32 group-code column, cached by name."""
+    def _device_gids(self, gcol: Optional[str], shards=None) -> jnp.ndarray:
+        """Device-resident int32 group-code column, cached by name (per
+        sharded/unsharded layout)."""
 
         def build():
             sc = self.scramble
             gids = (sc.columns[gcol].astype(np.int32) if gcol is not None
                     else np.zeros(sc.valid.shape, np.int32))
-            return jnp.asarray(gids)
+            return self._put_blocks(gids, shards)
 
-        return self._cache_lru(self._dev_gids, gcol, build)
+        return self._dev_gids.get_or_build((gcol, shards is not None),
+                                           build)
 
     def _materialize(self, q: AggQuery, idx: np.ndarray, value_src,
                      gcol: Optional[str]):
@@ -1068,6 +1156,10 @@ class FastFrame:
         nb = sc.n_blocks
         rng = np.random.default_rng(seed)
         exact_mode = (sampling == "exact") or (q.stop is None)
+        if cfg.shard_rows:
+            # explicit sharding that cannot take effect (no device loop /
+            # single device) must fail loudly, not silently run unsharded
+            cfg.resolve_shard_rows()
 
         # scan order: random start, wrap around (paper §5.2)
         start = (rng.integers(nb) if start_block is None else start_block)
@@ -1093,13 +1185,16 @@ class FastFrame:
             # OptStop loop in lax.while_loop dispatches; one host sync
             # per chunk, full writeback at termination -----------------
             probe = skipping and slot.group_bm is not None
+            shards = self.block_shards()
             key = ("run", q.scan_signature(), q.agg, q.bounder,
                    q.rangetrim, q.delta, repr(q.stop), probe, lookahead,
-                   max_rounds, cfg.sync_every or cfg.chunk_rounds)
-            dloop = self._cache_lru(
-                self._device_loops, key,
+                   max_rounds, cfg.sync_every or cfg.chunk_rounds,
+                   (shards.n_shards, shards.shard_blocks)
+                   if shards is not None else None)
+            dloop = self.device_loops.get_or_build(
+                key,
                 lambda: _DeviceLoop(self, q, slot, qci, probe, lookahead,
-                                    max_rounds))
+                                    max_rounds, shards))
             dloop.set_order(order, cum_rows)
             carry = dloop.run(dloop.init_carry(slot, qci), on_sync)
             dloop.writeback(carry, slot, qci, metrics)

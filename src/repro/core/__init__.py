@@ -13,6 +13,7 @@ from repro.core.bounders import (
 )
 from repro.core.count_sum import count_ci, n_plus, selectivity_ci, sum_ci
 from repro.core.derived_bounds import derived_range
+from repro.core.lru import LRUCache
 from repro.core.optstop import (
     AbsoluteWidth,
     FixedSamples,

@@ -51,6 +51,18 @@ to read the final carry back into the engine's bookkeeping. Requires
 running moments, intervals and CI math are float64, exactly like the
 host loop they replace.
 
+**Sharded round loop** (``EngineConfig(shard_rows=True)`` /
+:class:`ShardInfo`): the same loops run under ``shard_map`` over a
+device mesh. The block axis of the value/group/mask slabs is row-sharded
+(equal-length padded shards); selection, the cursor, coverage/taint
+accounting and the bound evaluation are replicated computations over
+replicated inputs, so every scan decision is identical on every device
+and identical to the single-device loop; each round's fold delta is the
+only thing that crosses the mesh (``psum`` of the raw additive
+(count, dsum, dsq) sums + ``pmin``/``pmax`` extremes + ``psum``
+histogram inside :func:`_fold` — O(groups) bytes per round, zero host
+syncs). See ``docs/architecture.md`` ("Sharding the round loop").
+
 Backends (same selector as :mod:`repro.kernels.ops`):
 
   * ``impl='ref'``       — the fold reuses the pure-jnp oracles (XLA
@@ -76,6 +88,8 @@ from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.state import MomentState, merge_moments
 from repro.kernels import bitmap_active as _bitmap
@@ -182,33 +196,90 @@ def _pad_groups(x, mult):
     return x + pad
 
 
-def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl):
-    """Dispatch one round's fold: ref oracle or the fused superkernel."""
+class ShardInfo(NamedTuple):
+    """Mesh geometry of the sharded round loop (see ``docs/architecture.md``
+    and :mod:`repro.aqp.distributed`, which constructs these).
+
+    The block axis of the scramble's device-resident columns is sharded
+    over every mesh axis in ``axes`` (flattened): shard ``d`` owns the
+    contiguous global block range ``[d * shard_blocks, (d+1) *
+    shard_blocks)``, with the last shard zero-padded past the real block
+    count so every device holds an equal-length slab (padding blocks are
+    never selected — selection is clamped to the real count — and their
+    rows carry ``mask == 0``)."""
+
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    n_shards: int
+    shard_blocks: int   # padded per-shard block count (equal on all shards)
+
+
+def _flat_shard_index(shard: ShardInfo) -> jax.Array:
+    """Row-major flattened index of this device over ``shard.axes``."""
+    idx = jnp.asarray(0, jnp.int32)
+    for ax in shard.axes:
+        idx = idx * shard.mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def _shard_local_blocks(blk: jax.Array, tvalid: jax.Array,
+                        shard: ShardInfo):
+    """Global selected block ids -> this shard's local row-slab indices.
+    Blocks owned by other shards keep a clamped index with ``mine`` False
+    (their rows are masked out of the local fold; the cross-shard merge
+    restores the full selection)."""
+    base = _flat_shard_index(shard) * shard.shard_blocks
+    local = blk - base
+    mine = tvalid & (local >= 0) & (local < shard.shard_blocks)
+    lidx = jnp.clip(local, 0, shard.shard_blocks - 1)
+    return lidx, mine
+
+
+def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl,
+          shard_axes: Optional[Tuple[str, ...]] = None):
+    """Dispatch one round's fold: ref oracle or the fused superkernel.
+
+    With ``shard_axes`` the caller is inside ``shard_map`` and ``v/g/m``
+    are this device's slice of the round's rows: the raw additive sums
+    (count, dsum, dsq about ``center``) merge across the mesh with one
+    ``psum`` and the extremes with ``pmin``/``pmax`` BEFORE the
+    shifted-moment conversion, so the merged state is the single-device
+    fold up to a reordering of the row sum (bitwise equal whenever the
+    per-shard partials are exactly representable)."""
     if impl == "ref" or not use_hist:
         # No histogram: the plain block_agg kernel already is the fused
         # moment pass; ref: XLA segment ops (bitwise-identical to the
         # per-block reference path, which calls the same functions).
-        state = kops.grouped_moments(v, g, m, num_groups, center, impl=impl)
+        sums, vmin, vmax = kops.grouped_sums(v, g, m, num_groups, center,
+                                             impl=impl)
         hist = None
         if use_hist:
             hist = kops.grouped_hist(v, g, m, num_groups, a, b, nbins=nbins,
                                      impl=impl).hist
-        return state, hist
-    gpad = _pad_groups(num_groups, GROUP_TILE)
-    kpad = _pad_groups(nbins, 128)
-    n = v.shape[0]
-    rpad = (-n) % ROW_TILE
-    if rpad:
-        v = jnp.concatenate([v, jnp.zeros(rpad, v.dtype)])
-        g = jnp.concatenate([g, jnp.zeros(rpad, g.dtype)])
-        m = jnp.concatenate([m, jnp.zeros(rpad, m.dtype)])
-    sums, vmin, vmax, hist = fused_fold(
-        v, g, m, jnp.asarray(center, jnp.float32), a=a, b=b,
-        num_groups=gpad, nbins=kpad, interpret=(impl == "interpret"))
-    state = kops.moments_from_sums(sums[:, :num_groups],
-                                   vmin[:, :num_groups],
-                                   vmax[:, :num_groups], center)
-    return state, hist[:num_groups, :nbins]
+    else:
+        gpad = _pad_groups(num_groups, GROUP_TILE)
+        kpad = _pad_groups(nbins, 128)
+        n = v.shape[0]
+        rpad = (-n) % ROW_TILE
+        if rpad:
+            v = jnp.concatenate([v, jnp.zeros(rpad, v.dtype)])
+            g = jnp.concatenate([g, jnp.zeros(rpad, g.dtype)])
+            m = jnp.concatenate([m, jnp.zeros(rpad, m.dtype)])
+        sums, vmin, vmax, hist = fused_fold(
+            v, g, m, jnp.asarray(center, jnp.float32), a=a, b=b,
+            num_groups=gpad, nbins=kpad, interpret=(impl == "interpret"))
+        sums = sums[:, :num_groups]
+        vmin = vmin[:, :num_groups]
+        vmax = vmax[:, :num_groups]
+        hist = hist[:num_groups, :nbins]
+    if shard_axes:
+        # one collective set per round: O(groups) bytes across the mesh
+        sums = jax.lax.psum(sums, shard_axes)
+        vmin = jax.lax.pmin(vmin, shard_axes)
+        vmax = jax.lax.pmax(vmax, shard_axes)
+        if hist is not None:
+            hist = jax.lax.psum(hist, shard_axes)
+    return kops.moments_from_sums(sums, vmin, vmax, center), hist
 
 
 def _budget_select(flags: jax.Array, pos: jax.Array, nb: int, window: int,
@@ -461,12 +532,24 @@ def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
     return win, ok, flags, take, new_pos, covmask
 
 
+def _query_carry_spec(use_hist: bool) -> "QueryLoopCarry":
+    """Fully-replicated shard_map partition spec of the query carry."""
+    rep = P()
+    return QueryLoopCarry(
+        pos=rep, rounds=rep, it=rep, live=rep, stopped_early=rep,
+        state=MomentState(rep, rep, rep, rep, rep),
+        hist=(rep if use_hist else None), processed=rep,
+        seen_presence=rep, tainted=rep, exact=rep, lo=rep, hi=rep,
+        est=rep, refreshed=rep, active=rep, blocks_fetched=rep,
+        skipped_static=rep, skipped_active=rep, probes=rep)
+
+
 def build_query_loop(*, nb: int, window: int, budget: int, center: float,
                      a: float, b: float, num_groups: int, nbins: int,
                      use_hist: bool, probe: bool, n_words: int, impl: str,
                      lookahead: int, cover_cap: int, max_rounds: int,
-                     chunk: Optional[int],
-                     refresh_fn: Callable) -> Callable:
+                     chunk: Optional[int], refresh_fn: Callable,
+                     shard: Optional[ShardInfo] = None) -> Callable:
     """Build the jitted device-resident round loop for one query.
 
     Returns ``chunk_fn(bufs: QueryLoopBuffers, carry: QueryLoopCarry) ->
@@ -482,6 +565,16 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     ``refresh_fn(k, r, state, hist, tainted, exact, lo, hi, est,
     refreshed, active)`` returns the updated ``(lo, hi, est, refreshed,
     active)``.
+
+    With ``shard`` the whole loop runs under ``shard_map`` on
+    ``shard.mesh``: ``bufs.values/gids/mask`` are row-sharded over the
+    mesh (equal-length padded slabs, see :class:`ShardInfo`) while every
+    other buffer AND the entire carry stay replicated. Selection, the
+    cursor, coverage/taint accounting and the CI refresh are replicated
+    computations over replicated inputs — identical on every device and
+    identical to the single-device loop — and only the per-round fold
+    delta crosses the mesh (``psum``/``pmin``/``pmax`` inside
+    :func:`_fold`, one collective set per round, no host sync).
     """
 
     def body(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
@@ -497,12 +590,15 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
         win, ok, flags, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
         blk, tvalid = _gather_blocks(take, win, window, budget)
+        if shard is not None:
+            blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         v = bufs.values[blk].reshape(-1)
         g = bufs.gids[blk].reshape(-1)
         m = (bufs.mask[blk]
              * tvalid[:, None].astype(jnp.float32)).reshape(-1)
         dstate, dhist = _fold(v, g, m, center, a, b, num_groups, nbins,
-                              use_hist, impl)
+                              use_hist, impl,
+                              shard_axes=shard.axes if shard else None)
         state = _merge_f64(c.state, dstate)
         hist = (c.hist + jnp.asarray(dhist, jnp.float64) if use_hist
                 else c.hist)
@@ -555,14 +651,28 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
             go = go & (c.it < chunk)
         return go
 
-    @jax.jit
-    def chunk_fn(bufs: QueryLoopBuffers,
-                 carry: QueryLoopCarry) -> QueryLoopCarry:
+    def chunk_body(bufs: QueryLoopBuffers,
+                   carry: QueryLoopCarry) -> QueryLoopCarry:
         carry = carry._replace(it=jnp.asarray(0, jnp.int32))
         return jax.lax.while_loop(cond, functools.partial(body, bufs),
                                   carry)
 
-    return chunk_fn
+    if shard is None:
+        return jax.jit(chunk_body)
+
+    rep = P()
+    data = P(shard.axes)
+    bufs_spec = QueryLoopBuffers(
+        values=data, gids=data, mask=data, words=rep, order_pad=rep,
+        static_ok=rep, presence=rep, presence_total=rep, cum_rows=rep)
+    carry_spec = _query_carry_spec(use_hist)
+    # check_rep=False: replication of the carry holds by construction
+    # (replicated inputs -> replicated selection/accounting; the fold
+    # delta is re-replicated by its psum) but the checker cannot see
+    # through while_loop + axis_index.
+    return jax.jit(shard_map(
+        chunk_body, mesh=shard.mesh, in_specs=(bufs_spec, carry_spec),
+        out_specs=carry_spec, check_rep=False))
 
 
 class SlotSpec(NamedTuple):
@@ -643,12 +753,30 @@ class PassCarry(NamedTuple):
     queries: Tuple[Tuple[PassQueryCarry, ...], ...]  # [slot][query]
 
 
+def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
+                     n_queries: Sequence[int]) -> "PassCarry":
+    """Fully-replicated shard_map partition spec of the pass carry."""
+    rep = P()
+    qspec = PassQueryCarry(*([rep] * len(PassQueryCarry._fields)))
+    return PassCarry(
+        pos=rep, rounds=rep, it=rep, n_live=rep, processed=rep,
+        blocks_fetched=rep, skipped_static=rep, skipped_active=rep,
+        probes=rep,
+        slots=tuple(SlotCarry(state=MomentState(rep, rep, rep, rep, rep),
+                              hist=(rep if spec.use_hist else None),
+                              seen_presence=rep, tainted=rep, exact=rep)
+                    for spec in slot_specs),
+        queries=tuple(tuple(qspec for _ in range(nq))
+                      for nq in n_queries))
+
+
 def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     lookahead: int, cover_cap: int, max_rounds: int,
                     chunk: Optional[int],
                     slot_specs: Sequence[SlotSpec],
                     refresh_fns: Sequence[Sequence[Callable]],
-                    any_probe: bool) -> Callable:
+                    any_probe: bool,
+                    shard: Optional[ShardInfo] = None) -> Callable:
     """Build the jitted device-resident loop for one FrameServer pass
     (S slots, each with its own queries, sharing one cursor walk).
 
@@ -660,6 +788,12 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
     finishes; the device loop records the same snapshot and the host
     materializes it after the loop). ``refresh_fns[s][q]`` has the
     :func:`build_query_loop` ``refresh_fn`` signature.
+
+    ``shard`` shards the pass exactly like :func:`build_query_loop`:
+    every slot's value/group columns and the shared mask are row-sharded
+    slabs, the union selection / accounting / per-query refreshes stay
+    replicated, and each slot's per-round fold delta merges across the
+    mesh inside :func:`_fold` (one collective set per slot per round).
     """
     i32 = jnp.int32
     i64 = jnp.int64
@@ -685,6 +819,8 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
         win, ok, union, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
         blk, tvalid = _gather_blocks(take, win, window, budget)
+        if shard is not None:
+            blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         m = (bufs.mask[blk]
              * tvalid[:, None].astype(jnp.float32)).reshape(-1)
 
@@ -715,7 +851,8 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
             g = bufs.gids[s][blk].reshape(-1)
             dstate, dhist = _fold(v, g, m, spec.center, spec.a, spec.b,
                                   spec.num_groups, spec.nbins,
-                                  spec.use_hist, impl)
+                                  spec.use_hist, impl,
+                                  shard_axes=shard.axes if shard else None)
             state = _merge_f64(sc.state, dstate)
             hist = (sc.hist + jnp.asarray(dhist, jnp.float64)
                     if spec.use_hist else sc.hist)
@@ -776,10 +913,25 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
             go = go & (c.it < chunk)
         return go
 
-    @jax.jit
-    def chunk_fn(bufs: PassLoopBuffers, carry: PassCarry) -> PassCarry:
+    def chunk_body(bufs: PassLoopBuffers, carry: PassCarry) -> PassCarry:
         carry = carry._replace(it=jnp.asarray(0, jnp.int32))
         return jax.lax.while_loop(cond, functools.partial(body, bufs),
                                   carry)
 
-    return chunk_fn
+    if shard is None:
+        return jax.jit(chunk_body)
+
+    rep = P()
+    data = P(shard.axes)
+    ns = len(slot_specs)
+    bufs_spec = PassLoopBuffers(
+        mask=data, order_pad=rep, static_ok=rep, cum_rows=rep,
+        values=(data,) * ns, gids=(data,) * ns, words=(rep,) * ns,
+        presence=(rep,) * ns, presence_total=(rep,) * ns)
+    carry_spec = _pass_carry_spec(slot_specs,
+                                  [len(fns) for fns in refresh_fns])
+    # check_rep=False: see build_query_loop — carry replication holds by
+    # construction but is opaque to the checker.
+    return jax.jit(shard_map(
+        chunk_body, mesh=shard.mesh, in_specs=(bufs_spec, carry_spec),
+        out_specs=carry_spec, check_rep=False))

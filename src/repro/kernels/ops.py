@@ -64,15 +64,22 @@ def _pad_to(x: jax.Array, mult: int, fill=0):
     return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
 
 
-def grouped_moments(values: jax.Array, gids: jax.Array,
-                    mask: Optional[jax.Array], num_groups: int,
-                    center: float = 0.0, *, impl: Optional[str] = None,
-                    row_tile: int = _block_agg.ROW_TILE,
-                    group_tile: int = _block_agg.GROUP_TILE) -> MomentState:
-    """Fused masked per-group moments -> MomentState with leading dim
-    ``num_groups``. ``center`` should be a data-scale constant (catalog
-    midpoint) for f32 stability; the result is mathematically independent
-    of it (exact shifted-moment identity)."""
+def grouped_sums(values: jax.Array, gids: jax.Array,
+                 mask: Optional[jax.Array], num_groups: int,
+                 center: float = 0.0, *, impl: Optional[str] = None,
+                 row_tile: int = _block_agg.ROW_TILE,
+                 group_tile: int = _block_agg.GROUP_TILE):
+    """Raw additive per-group fold: ``(sums, vmin, vmax)`` with ``sums``
+    the ``(3, num_groups)`` (count, dsum, dsq) rows about ``center`` and
+    ``vmin`` / ``vmax`` the per-group extremes.
+
+    This is :func:`grouped_moments` *before* the shifted-moment
+    conversion. The raw form is what crosses a device mesh in the
+    sharded round loop: (count, dsum, dsq) are plain sums over rows, so
+    ``psum`` over row shards computes exactly the same real numbers as a
+    single-device fold (and is bitwise equal whenever the per-shard
+    partials are exactly representable), while extremes merge with
+    ``pmin`` / ``pmax``."""
     impl = resolve_impl(impl)
     if mask is None:
         mask = jnp.ones_like(values, dtype=jnp.float32)
@@ -95,6 +102,21 @@ def grouped_moments(values: jax.Array, gids: jax.Array,
         sums = sums[:, :num_groups]
         vmin = vmin[:, :num_groups]
         vmax = vmax[:, :num_groups]
+    return sums, vmin, vmax
+
+
+def grouped_moments(values: jax.Array, gids: jax.Array,
+                    mask: Optional[jax.Array], num_groups: int,
+                    center: float = 0.0, *, impl: Optional[str] = None,
+                    row_tile: int = _block_agg.ROW_TILE,
+                    group_tile: int = _block_agg.GROUP_TILE) -> MomentState:
+    """Fused masked per-group moments -> MomentState with leading dim
+    ``num_groups``. ``center`` should be a data-scale constant (catalog
+    midpoint) for f32 stability; the result is mathematically independent
+    of it (exact shifted-moment identity)."""
+    sums, vmin, vmax = grouped_sums(values, gids, mask, num_groups, center,
+                                    impl=impl, row_tile=row_tile,
+                                    group_tile=group_tile)
     return moments_from_sums(sums, vmin, vmax, center)
 
 

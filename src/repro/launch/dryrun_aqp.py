@@ -20,7 +20,7 @@ from pathlib import Path  # noqa: E402
 import jax                # noqa: E402
 import jax.numpy as jnp   # noqa: E402
 
-from repro.aqp.distributed import make_distributed_round  # noqa: E402
+from repro.aqp.distributed import make_sharded_fold  # noqa: E402
 from repro.distributed.sharding import mesh_dp_axes  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -34,8 +34,8 @@ def run(multi_pod: bool, rows_per_device: int = 64 * 1024,
     for a in dp:
         n_dp *= mesh.shape[a]
     total_rows = rows_per_device * n_dp
-    round_fn = make_distributed_round(mesh, dp, groups, center=870.0,
-                                      impl="ref")
+    round_fn = make_sharded_fold(mesh, dp, groups, center=870.0,
+                                 impl="ref")
     sds = jax.ShapeDtypeStruct
     args = (sds((total_rows,), jnp.float32),
             sds((total_rows,), jnp.int32),

@@ -23,6 +23,13 @@ the same scramble. :class:`FrameServer` amortizes it three ways:
      _QueryIntervals` (OptStop schedule, CI refresh, stopping condition),
      which is the cheap part of a round.
 
+Under the device-resident pass loop, a frame with a sharded block
+layout (``EngineConfig.shard_rows``; :mod:`repro.aqp.distributed`) runs
+the whole pass SHARDED over the device mesh: each slot's value/group
+slabs are row-sharded, selection and per-query interval state stay
+replicated, and every slot's per-round fold delta merges across the
+mesh inside the ``lax.while_loop`` carry (see ``docs/architecture.md``).
+
 Soundness: a pass skips a block only when NO query in it has an active
 view there, so each query's skipped blocks contain only views inactive
 for that query — exactly the single-query taint invariant, enforced per
@@ -45,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.aqp import distributed as adist
 from repro.aqp.bitmap import pack_mask
 from repro.aqp.engine import (FastFrame, _QueryIntervals, _ScanViews,
                               _host_copy, _make_device_refresh,
@@ -59,10 +67,15 @@ __all__ = ["FrameServer"]
 
 class _SlotExec:
     """One (filters, column, group-by) signature inside a pass: the shared
-    fold state plus the device buffers and per-query interval states."""
+    fold state plus the device buffers and per-query interval states.
+
+    ``shards`` (a :class:`repro.aqp.distributed.BlockShards`) row-shards
+    the slot's value/group slabs over the mesh for the sharded device
+    pass loop; the bitmap words stay replicated (the activity test and
+    selection are replicated computations)."""
 
     def __init__(self, frame: FastFrame, rep_q: AggQuery, skipping: bool,
-                 queries: Sequence[AggQuery]):
+                 queries: Sequence[AggQuery], shards=None):
         use_hist_any = any(q.needs_hist for q in queries)
         self.views = _ScanViews(frame, rep_q, use_hist=use_hist_any)
         self.qcis = [_QueryIntervals(frame, q, self.views) for q in queries]
@@ -72,11 +85,12 @@ class _SlotExec:
         # engagement bitmap so a finished query stops pulling blocks
         # without changing which blocks it saw while running
         self.probe = skipping and v.group_bm is not None
-        self.values = frame._device_values(v.value_src)
-        self.gids = frame._device_gids(v.gcol)
+        self.values = frame._device_values(v.value_src, shards)
+        self.gids = frame._device_gids(v.gcol, shards)
         nb = frame.scramble.n_blocks
-        self.words = (jnp.asarray(v.group_bm.words) if self.probe
-                      else jnp.ones((nb, 1), jnp.uint32))
+        words = (v.group_bm.words if self.probe
+                 else np.ones((nb, 1), np.uint32))
+        self.words = adist.place_replicated(shards, words)
         self.meta = (v.G, frame.config.hist_bins, v.use_hist,
                      float(v.a), float(v.b), float(v.center))
         self.metrics = {"skipped_static": 0, "skipped_active": 0,
@@ -176,23 +190,30 @@ class FrameServer:
         cover_cap = cfg.round_blocks * cfg.cover_cap_factor
         window = _round_window(nb, lookahead, cover_cap)
         impl = kops.resolve_impl(cfg.impl)
+        device_pass = cfg.resolve_device_loop()
+        if cfg.shard_rows:
+            cfg.resolve_shard_rows()  # loud guard, as in FastFrame.run
+        # the sharded layout applies to the device pass loop only (the
+        # host loop and the recovery pass materialize on host)
+        shards = frame.block_shards() if device_pass else None
 
         # slots: one fold per distinct scan signature
         by_sig: Dict[Tuple, List[AggQuery]] = {}
         for q in queries:
             by_sig.setdefault(q.scan_signature(), []).append(q)
-        slots = [_SlotExec(frame, qs[0], skipping, qs)
+        slots = [_SlotExec(frame, qs[0], skipping, qs, shards)
                  for qs in by_sig.values()]
         qci_of = {id(q): qc for s in slots
                   for q, qc in zip(by_sig[s.views.rep_q.scan_signature()],
                                    s.qcis)}
 
-        mask_dev = frame._device_mask(queries[0].filters)
+        rep = lambda a: adist.place_replicated(shards, a)
+        mask_dev = frame._device_mask(queries[0].filters, shards)
         static_ok = slots[0].views.static_ok
-        static_ok_dev = jnp.asarray(static_ok)
+        static_ok_dev = rep(static_ok)
         opad = np.zeros(nb + window, np.int32)
         opad[:nb] = order
-        order_pad_dev = jnp.asarray(opad)
+        order_pad_dev = rep(opad)
         values_t = tuple(s.values for s in slots)
         gids_t = tuple(s.gids for s in slots)
         words_t = tuple(s.words for s in slots)
@@ -205,15 +226,16 @@ class FrameServer:
         pos = 0
         rounds = 0
         n_live = sum(len(s.qcis) for s in slots)
-        if cfg.resolve_device_loop():
+        if device_pass:
             # device-resident pass loop: the whole multi-query round loop
             # (per-query activity stacks, union selection, per-slot folds,
             # per-query CI refresh / stop tests with finish-time
-            # snapshots) iterates inside lax.while_loop dispatches
+            # snapshots) iterates inside lax.while_loop dispatches —
+            # sharded over the mesh when the frame carries a shard layout
             pos, rounds = self._device_pass(
                 slots, order, cum_rows, lookahead, window, cover_cap,
                 impl, mask_dev, order_pad_dev, static_ok_dev, values_t,
-                gids_t, words_t, max_rounds, t0, finished)
+                gids_t, words_t, max_rounds, t0, finished, shards)
         else:
             while pos < nb and rounds < max_rounds and n_live:
                 rounds += 1
@@ -277,8 +299,8 @@ class FrameServer:
                      lookahead: int, window: int, cover_cap: int,
                      impl: str, mask_dev, order_pad_dev, static_ok_dev,
                      values_t, gids_t, words_t, max_rounds: int,
-                     t0: float, finished: Dict[int, QueryResult]
-                     ) -> Tuple[int, int]:
+                     t0: float, finished: Dict[int, QueryResult],
+                     shards=None) -> Tuple[int, int]:
         """Run one pass's whole round loop device-resident
         (:func:`repro.kernels.fused_scan.build_pass_loop`), then write
         the final carry back into the slots' host bookkeeping and
@@ -296,6 +318,7 @@ class FrameServer:
         # the compiled pass loop (+ its order-independent device buffers)
         # is cached on the frame by the pass's static identity: repeat
         # batches reuse the traced lax.while_loop instead of recompiling
+        rep = lambda a: adist.place_replicated(shards, a)
         key = ("pass",
                tuple((qc.q.scan_signature(), qc.q.agg, qc.q.bounder,
                       qc.q.rangetrim, qc.q.delta, repr(qc.q.stop))
@@ -303,7 +326,9 @@ class FrameServer:
                tuple((len(s.qcis), s.probe, s.views.use_hist)
                      for s in slots),
                lookahead, max_rounds,
-               cfg.sync_every or cfg.chunk_rounds)
+               cfg.sync_every or cfg.chunk_rounds,
+               (shards.n_shards, shards.shard_blocks)
+               if shards is not None else None)
 
         def build():
             slot_specs = tuple(
@@ -325,21 +350,21 @@ class FrameServer:
                 max_rounds=max_rounds,
                 chunk=cfg.sync_every or cfg.chunk_rounds,
                 slot_specs=slot_specs, refresh_fns=refresh_fns,
-                any_probe=any(s.probe for s in slots))
-            presence = tuple(jnp.asarray(s.views.presence)
-                             for s in slots)
+                any_probe=any(s.probe for s in slots),
+                shard=shards.info if shards is not None else None)
+            presence = tuple(rep(s.views.presence) for s in slots)
             presence_total = tuple(
-                jnp.asarray(s.views.presence_total.astype(np.int32))
+                rep(s.views.presence_total.astype(np.int32))
                 for s in slots)
             return chunk_fn, presence, presence_total
 
-        chunk_fn, presence_t, presence_total_t = frame._cache_lru(
-            frame._device_loops, key, build)
+        chunk_fn, presence_t, presence_total_t = \
+            frame.device_loops.get_or_build(key, build)
 
         bufs = kfused.PassLoopBuffers(
             mask=mask_dev, order_pad=order_pad_dev,
             static_ok=static_ok_dev,
-            cum_rows=jnp.asarray(cum_rows.astype(np.int64)),
+            cum_rows=rep(cum_rows.astype(np.int64)),
             values=values_t, gids=gids_t, words=words_t,
             presence=presence_t, presence_total=presence_total_t)
         slot_carries = tuple(

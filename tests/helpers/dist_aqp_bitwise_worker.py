@@ -1,18 +1,25 @@
-"""Subprocess worker: the distributed psum/pmin/pmax merge must match the
+"""Subprocess worker: the sharded collective fold merge must match the
 single-device ``grouped_moments`` fold BITWISE on an 8-device CPU mesh
 (with and without the histogram).
+
+The merge under test is :func:`repro.aqp.distributed.make_sharded_fold`
+— per-shard :func:`repro.kernels.ops.grouped_sums` (raw additive
+(count, dsum, dsq) about the center) + ``psum`` of the sums /
+``pmin``/``pmax`` of the extremes / ``psum`` of the histogram — i.e.
+exactly the collective set :func:`repro.kernels.fused_scan._fold` issues
+inside the sharded round loop's ``lax.while_loop`` carry.
 
 The data is constructed so every intermediate of both pipelines is exact
 in f32 — then the two computations evaluate the same real numbers and
 bitwise equality is forced, not a rounding coincidence:
 
-  * values are small integers (|dv| <= 2 about an integer center), so
-    every sum / sum-of-squares is an exact small integer;
-  * every group gets a power-of-two row count on every shard (gids cycle
-    0..G-1 and G divides the shard size), so the Welford mean division
-    and the ``_state_to_raw`` round trip ``(mean - center) * count`` are
-    exact exponent shifts;
-  * the mask is all-ones to preserve those counts.
+  * values are small integers, so every partial sum / sum-of-squares is
+    an exact small integer on every shard;
+  * the raw additive form needs no per-shard mean round trip: the psum
+    adds exact integers, and the single shifted-moment conversion after
+    the merge is the SAME code the single-device fold runs
+    (``kops.moments_from_sums``);
+  * the mask is all-ones to preserve the counts.
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
 test sets it). Exits nonzero on any bitwise mismatch.
@@ -27,7 +34,7 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.aqp.distributed import make_distributed_round, shard_rows  # noqa: E402
+from repro.aqp.distributed import make_sharded_fold, shard_rows  # noqa: E402
 from repro.kernels import ops as kops  # noqa: E402
 
 
@@ -35,7 +42,7 @@ def main():
     assert jax.device_count() == 8, jax.devices()
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     g = 32
-    n = 8 * 512                       # 16 rows per group per shard (2^4)
+    n = 8 * 512
     center = 2.0
     gids = (np.arange(n) % g).astype(np.int32)
     # integer values in {0..4}, deterministic but varied across groups
@@ -46,7 +53,7 @@ def main():
     ref = kops.grouped_moments(jnp.asarray(values), jnp.asarray(gids),
                                jnp.asarray(mask), g, center, impl="ref")
 
-    round_fn = make_distributed_round(mesh, ("pod", "data"), g, center)
+    round_fn = make_sharded_fold(mesh, ("pod", "data"), g, center)
     with mesh:
         merged = round_fn(v, gi, m)
     for name in ("count", "mean", "m2", "vmin", "vmax"):
@@ -55,7 +62,7 @@ def main():
         np.testing.assert_array_equal(got, want, err_msg=name)
 
     # with histogram: integer bin counts psum exactly
-    round_fn_h = make_distributed_round(
+    round_fn_h = make_sharded_fold(
         mesh, ("pod", "data"), g, center, with_hist=True, hist_bins=128,
         hist_range=(0.0, 5.0))
     with mesh:
@@ -68,6 +75,27 @@ def main():
                               jnp.asarray(mask), g, 0.0, 5.0, nbins=128,
                               impl="ref")
     np.testing.assert_array_equal(np.asarray(hist), np.asarray(ref_h.hist))
+
+    # general (non-representable) data: counts/extremes still exact, the
+    # reordered moment sums agree to f32 rounding
+    rng = np.random.default_rng(0)
+    values2 = rng.normal(100.0, 25.0, size=n).astype(np.float32)
+    mask2 = (rng.random(n) < 0.7).astype(np.float32)
+    v2, gi2, m2_ = shard_rows(mesh, ("pod", "data"), values2, gids, mask2)
+    with mesh:
+        merged2 = round_fn(v2, gi2, m2_)
+    ref2 = kops.grouped_moments(jnp.asarray(values2), jnp.asarray(gids),
+                                jnp.asarray(mask2), g, center, impl="ref")
+    np.testing.assert_array_equal(np.asarray(merged2.count),
+                                  np.asarray(ref2.count))
+    np.testing.assert_array_equal(np.asarray(merged2.vmin),
+                                  np.asarray(ref2.vmin))
+    np.testing.assert_array_equal(np.asarray(merged2.vmax),
+                                  np.asarray(ref2.vmax))
+    np.testing.assert_allclose(np.asarray(merged2.mean),
+                               np.asarray(ref2.mean), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(merged2.m2),
+                               np.asarray(ref2.m2), rtol=1e-2)
     print("DIST-AQP-BITWISE-OK")
 
 

@@ -1,58 +1,35 @@
-"""Subprocess worker: distributed AQP round on 8 fake CPU devices.
+"""Subprocess worker: the sharded fused round loop on 8 fake CPU devices
+must match the single-device oracle across the full scenario set
+(group-by, taint, exhaustion, uneven tail, serving pass — see
+``tests/helpers/sharded_scenarios.py`` for the equivalence discipline).
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
-test sets it). Exits nonzero on mismatch."""
+test sets it). Exits nonzero on any mismatch. The same scenarios also
+run in-process in ``tests/test_sharded_scan.py`` when the pytest process
+itself has a multi-device platform (the CI multi-device job)."""
 
 import os
+import sys
+from pathlib import Path
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
-import numpy as np  # noqa: E402
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+sys.path.insert(0, str(Path(__file__).resolve().parents[2]))
 
-from repro.aqp.distributed import make_distributed_round, shard_rows  # noqa: E402
-from repro.kernels import ops as kops  # noqa: E402
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # device loop needs f64
+
+from tests.helpers import sharded_scenarios  # noqa: E402
 
 
 def main():
     assert jax.device_count() == 8, jax.devices()
-    mesh = jax.make_mesh((2, 4), ("pod", "data"))
-    rng = np.random.default_rng(0)
-    n, g = 8 * 4096, 37
-    values = rng.normal(100.0, 25.0, size=n).astype(np.float32)
-    gids = rng.integers(0, g, size=n).astype(np.int32)
-    mask = (rng.random(n) < 0.7).astype(np.float32)
-    center = 100.0
-
-    v, gi, m = shard_rows(mesh, ("pod", "data"), values, gids, mask)
-    round_fn = make_distributed_round(mesh, ("pod", "data"), g, center)
-    with mesh:
-        merged = round_fn(v, gi, m)
-    ref = kops.grouped_moments(jnp.asarray(values), jnp.asarray(gids),
-                               jnp.asarray(mask), g, center, impl="ref")
-    for name, got, want, tol in [
-        ("count", merged.count, ref.count, 0),
-        ("mean", merged.mean, ref.mean, 1e-4),
-        ("m2", merged.m2, ref.m2, 5e-2),
-        ("vmin", merged.vmin, ref.vmin, 0),
-        ("vmax", merged.vmax, ref.vmax, 0),
-    ]:
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=tol, atol=tol, err_msg=name)
-
-    # with histogram
-    round_fn_h = make_distributed_round(
-        mesh, ("pod", "data"), g, center, with_hist=True, hist_bins=256,
-        hist_range=(0.0, 200.0))
-    with mesh:
-        merged2, hist = round_fn_h(v, gi, m)
-    ref_h = kops.grouped_hist(jnp.asarray(values), jnp.asarray(gids),
-                              jnp.asarray(mask), g, 0.0, 200.0, nbins=256,
-                              impl="ref")
-    np.testing.assert_allclose(np.asarray(hist), np.asarray(ref_h.hist))
-    print("DIST-AQP-OK")
+    for scenario in sharded_scenarios.ALL:
+        scenario()
+        print(f"ok {scenario.__name__}")
+    print("SHARDED-AQP-OK")
 
 
 if __name__ == "__main__":

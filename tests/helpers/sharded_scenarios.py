@@ -1,0 +1,219 @@
+"""Sharded-vs-oracle scenarios, shared by the in-process multi-device
+suite (``tests/test_sharded_scan.py``, run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and the
+subprocess worker (``tests/helpers/dist_aqp_worker.py``) that gives
+tier-1 coverage on single-device machines.
+
+Equivalence discipline (mirrors ``EngineConfig.shard_rows``):
+
+  * scan decisions, coverage, taint, fold counts and every scan metric
+    must match the single-device device loop EXACTLY — selection and
+    accounting are replicated computations over replicated inputs, so
+    any difference is a bug, not noise;
+  * fold deltas are bitwise whenever the per-shard f32 partial sums are
+    exactly representable (``scenario_exhaustion_bitwise`` constructs
+    such data and asserts FULL bitwise equality, intervals included);
+  * on general data the shard merge reorders the f32 row sum, so CI
+    endpoints / estimates carry f32-reorder noise — asserted within
+    ``CI_RTOL`` (relative ~1e-3 bound; observed ~1e-6..1e-4).
+
+Callers must enable 64-bit JAX types and provide >= 2 devices before
+invoking any scenario (the device-resident loop requires x64; the mesh
+requires devices fixed before jax initializes).
+"""
+
+import numpy as np
+
+from repro.aqp import (AggQuery, EngineConfig, FastFrame, Filter,
+                       build_scramble)
+from repro.core.optstop import (AbsoluteWidth, ThresholdSide,
+                                TopKSeparated)
+from repro.data import flights
+from repro.serve import FrameServer
+
+EXACT_FIELDS = [
+    "group_codes", "count_seen", "nonempty", "exact", "tainted",
+    "rows_covered", "blocks_fetched", "blocks_skipped_active",
+    "blocks_skipped_static", "bitmap_probes", "rounds", "stopped_early",
+]
+CI_FIELDS = ["estimate", "lo", "hi"]
+CI_RTOL = 1e-3     # f32-reorder noise bound on general data
+CI_ATOL = 1e-6
+
+CFG = dict(device_loop=True, round_blocks=16, lookahead_blocks=64,
+           sync_lookahead_blocks=16, hist_bins=256)
+
+
+def assert_sharded_matches_oracle(r_sh, r_or, bitwise_ci=False):
+    """Exact fields equal; CI endpoints bitwise (``bitwise_ci``, for
+    exactly-representable data) or within the f32-reorder bound."""
+    for f in EXACT_FIELDS:
+        a, b = getattr(r_sh, f), getattr(r_or, f)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        else:
+            assert a == b, (f, a, b)
+    for f in CI_FIELDS:
+        a, b = getattr(r_sh, f), getattr(r_or, f)
+        if bitwise_ci:
+            np.testing.assert_array_equal(a, b, err_msg=f)
+            continue
+        np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b),
+                                      err_msg=f)
+        fin = np.isfinite(a)
+        np.testing.assert_allclose(a[fin], b[fin], rtol=CI_RTOL,
+                                   atol=CI_ATOL, err_msg=f)
+
+
+def run_pair(sc, q, sampling="active_peek", mesh_shape=None, seed=1,
+             start=0, **over):
+    """Run one query sharded (``shard_rows=True``) and on the
+    single-device oracle (``shard_rows=False``), fresh frames each."""
+    kw = dict(CFG)
+    kw.update(over)
+    r_sh = FastFrame(sc, EngineConfig(shard_rows=True,
+                                      mesh_shape=mesh_shape, **kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start)
+    r_or = FastFrame(sc, EngineConfig(shard_rows=False, **kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start)
+    return r_sh, r_or
+
+
+def flights_scramble(n_rows=60_000, block_rows=256):
+    ds = flights.generate(n_rows=n_rows, n_airports=30, n_airlines=5,
+                          seed=3)
+    return build_scramble(ds.columns, catalog=ds.catalog,
+                          block_rows=block_rows, seed=4)
+
+
+def scenario_groupby_topk():
+    """GROUP BY + TopK early stop: activity skipping + probe metrics."""
+    sc = flights_scramble()
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=TopKSeparated(k=2, largest=True), delta=1e-9)
+    assert_sharded_matches_oracle(*run_pair(sc, q))
+
+
+def scenario_groupby_threshold_2d_mesh():
+    """Explicit 2-D mesh_shape (block axis sharded over the flattened
+    axes). Needs >= 4 devices."""
+    import jax
+    n = jax.device_count()
+    assert n >= 4, f"needs >= 4 devices, have {n}"
+    sc = flights_scramble()
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=ThresholdSide(threshold=0.0), delta=1e-9)
+    assert_sharded_matches_oracle(*run_pair(sc, q, mesh_shape=(2, n // 2)))
+
+
+def scenario_filtered_sum():
+    """Unknown-N SUM with a filter (static prefilter + N+ bound math)."""
+    sc = flights_scramble()
+    q = AggQuery(agg="sum", column="dep_delay",
+                 filters=(Filter("airline", "eq", 2),),
+                 stop=AbsoluteWidth(eps=1e6), delta=1e-9)
+    assert_sharded_matches_oracle(*run_pair(sc, q, sampling="scan"))
+
+
+def scenario_taint():
+    """Taint accrued inside the sharded while_loop carry must surface
+    identically (rare group goes inactive -> its blocks activity-skip)."""
+    rng = np.random.default_rng(0)
+    n = 40_000
+    g = (rng.random(n) < 0.02).astype(np.int32)
+    v = np.where(g == 1, rng.normal(50.0, 30.0, n),
+                 rng.normal(100.0, 1.0, n)).astype(np.float32)
+    sc = build_scramble({"g": g, "v": v}, catalog={"v": (-100.0, 250.0)},
+                        block_rows=64, seed=1)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=ThresholdSide(threshold=50.0), delta=1e-6)
+    r_sh, r_or = run_pair(sc, q, round_blocks=8)
+    assert_sharded_matches_oracle(r_sh, r_or)
+    assert r_sh.blocks_skipped_active > 0
+    assert r_sh.tainted[0] and not r_sh.tainted[1]
+
+
+def _integer_scramble(n=50_000, groups=8):
+    """Exactly-representable data: small-integer values, cyclic groups —
+    every per-shard f32 partial sum is an exact integer, so the psum
+    merge computes the same real numbers as the single-device fold (the
+    ``dist_aqp_bitwise_worker`` methodology at engine level)."""
+    g = (np.arange(n) % groups).astype(np.int32)
+    v = (((np.arange(n) * 7) // 5 + g) % 5).astype(np.float32)
+    return build_scramble({"g": g, "v": v}, catalog={"v": (0.0, 4.0)},
+                          block_rows=256, seed=1)
+
+
+def scenario_exhaustion_bitwise():
+    """Scan exhaustion on exactly-representable data: the whole result —
+    intervals included — must be BITWISE identical to the oracle."""
+    sc = _integer_scramble()
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # never fires
+    r_sh, r_or = run_pair(sc, q)
+    assert_sharded_matches_oracle(r_sh, r_or, bitwise_ci=True)
+    assert r_sh.exact.all()
+
+
+def scenario_early_stop_bitwise():
+    """Early stop on exactly-representable data: bitwise, and the stop
+    decision itself (rounds / stopped_early) identical."""
+    sc = _integer_scramble()
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=ThresholdSide(threshold=2.0), delta=1e-6)
+    r_sh, r_or = run_pair(sc, q)
+    assert_sharded_matches_oracle(r_sh, r_or, bitwise_ci=True)
+
+
+def scenario_uneven_tail():
+    """n_blocks not divisible by n_shards: the tail shard is zero-padded;
+    no block may be dropped or double-counted (counts are exact)."""
+    import jax
+    n_dev = jax.device_count()
+    # 61 blocks: indivisible by any device count >= 2
+    sc = flights_scramble(n_rows=61 * 128, block_rows=128)
+    assert sc.n_blocks % n_dev != 0, (sc.n_blocks, n_dev)
+    q = AggQuery(agg="avg", column="dep_delay", group_by="airline",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # exhaustion
+    r_sh, r_or = run_pair(sc, q, round_blocks=8)
+    assert_sharded_matches_oracle(r_sh, r_or)
+    assert r_sh.exact.all()
+
+
+def scenario_server_pass():
+    """A mixed FrameServer batch through the sharded pass loop (shared
+    cursor, per-slot collective folds, finish-time snapshots)."""
+    sc = flights_scramble()
+    queries = [
+        AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=TopKSeparated(k=2), delta=1e-9),
+        AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=ThresholdSide(threshold=0.0), delta=1e-6),
+        AggQuery(agg="sum", column="dep_delay", group_by="airline",
+                 stop=AbsoluteWidth(eps=1e6), delta=1e-9),
+        AggQuery(agg="count", group_by="airline",
+                 stop=AbsoluteWidth(eps=5e3), delta=1e-9),
+        AggQuery(agg="avg", column="dep_delay", bounder="anderson_dkw",
+                 rangetrim=False, stop=AbsoluteWidth(eps=30.0),
+                 delta=1e-9),
+    ]
+    res_sh = FrameServer(FastFrame(sc, EngineConfig(
+        shard_rows=True, **CFG))).run_batch(queries, start_block=0,
+                                            seed=1)
+    res_or = FrameServer(FastFrame(sc, EngineConfig(
+        shard_rows=False, **CFG))).run_batch(queries, start_block=0,
+                                             seed=1)
+    for r_sh, r_or in zip(res_sh, res_or):
+        assert_sharded_matches_oracle(r_sh, r_or)
+
+
+ALL = [
+    scenario_groupby_topk,
+    scenario_groupby_threshold_2d_mesh,
+    scenario_filtered_sum,
+    scenario_taint,
+    scenario_exhaustion_bitwise,
+    scenario_early_stop_bitwise,
+    scenario_uneven_tail,
+    scenario_server_pass,
+]

@@ -1,5 +1,8 @@
 """Multi-device tests run in subprocesses (device count must be fixed before
-jax initializes, so each scenario gets its own interpreter)."""
+jax initializes, so each scenario gets its own interpreter). The same
+sharded-engine scenarios also run in-process in
+``tests/test_sharded_scan.py`` when pytest itself sees a multi-device
+platform (the CI multi-device job)."""
 
 import os
 import subprocess
@@ -24,15 +27,21 @@ def run_worker(name: str, devices: int = 8, timeout: int = 600):
     return proc.stdout
 
 
-def test_distributed_aqp_round():
-    out = run_worker("dist_aqp_worker.py")
-    assert "DIST-AQP-OK" in out
+def test_sharded_round_loop_matches_oracle():
+    """The sharded fused round loop (shard_map + collective folds in the
+    lax.while_loop carry) matches the single-device oracle across the
+    scenario set: group-by, taint, exhaustion (bitwise on
+    exactly-representable data), uneven-tail shards and the serving
+    pass. See tests/helpers/sharded_scenarios.py."""
+    out = run_worker("dist_aqp_worker.py", timeout=900)
+    assert "SHARDED-AQP-OK" in out
 
 
 def test_distributed_merge_bitwise():
-    """psum/pmin/pmax merge == single-device grouped_moments fold, bit
-    for bit, with and without the histogram (exactly-representable data
-    forces bitwise equality — see the worker's docstring)."""
+    """psum/pmin/pmax merge of the raw additive sums == single-device
+    grouped_moments fold, bit for bit, with and without the histogram
+    (exactly-representable data forces bitwise equality — see the
+    worker's docstring)."""
     out = run_worker("dist_aqp_bitwise_worker.py")
     assert "DIST-AQP-BITWISE-OK" in out
 

@@ -201,13 +201,17 @@ def test_materialization_cache_reused_across_batches(ds):
                  filters=(Filter("airline", "eq", 2),),
                  stop=AbsoluteWidth(eps=5.0), delta=1e-9)
     server.run_batch([q], seed=1, start_block=0)
-    vals = frame._dev_values[q.value_key]
-    mask = frame._dev_masks[tuple(f.key() for f in q.filters)]
-    gids = frame._dev_gids["origin"]
+    # cache keys carry the signature component + sharded-layout flag
+    vkey = (q.value_key, False)
+    mkey = (tuple(f.key() for f in q.filters), False)
+    gkey = ("origin", False)
+    vals = frame._dev_values[vkey]
+    mask = frame._dev_masks[mkey]
+    gids = frame._dev_gids[gkey]
     server.run_batch([q], seed=1, start_block=0)
-    assert frame._dev_values[q.value_key] is vals
-    assert frame._dev_masks[tuple(f.key() for f in q.filters)] is mask
-    assert frame._dev_gids["origin"] is gids
+    assert frame._dev_values[vkey] is vals
+    assert frame._dev_masks[mkey] is mask
+    assert frame._dev_gids[gkey] is gids
     # equal-by-value filters constructed separately hit the same entry
     q2 = AggQuery(agg="avg", column="dep_delay", group_by="origin",
                   filters=(Filter("airline", "eq", 2),),
@@ -225,7 +229,7 @@ def test_materialization_cache_is_bounded(ds):
         frame._device_mask((Filter("dep_time", "gt", float(t)),))
     assert len(frame._dev_masks) == 4
     # most-recent keys survive
-    key9 = ((Filter("dep_time", "gt", 9.0).key()),)
+    key9 = (((Filter("dep_time", "gt", 9.0).key()),), False)
     assert key9 in frame._dev_masks
 
 

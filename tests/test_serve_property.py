@@ -1,0 +1,98 @@
+"""Hypothesis property (slow): a random batch through
+``FrameServer.run_batch`` is bitwise identical to sequential
+``FastFrame.run`` calls — across random filters, aggregates, group-bys,
+bounders, stopping conditions and ``device_loop`` on/off.
+
+Scope: every query in the generated batch carries a distinct filter set,
+so each serving pass is a singleton. That is the regime where the server
+GUARANTEES bitwise identity (a shared pass union-selects blocks across
+its queries, which is sound — intervals stay valid — but intentionally
+not bitwise: queries see extra blocks their solo scan would have
+skipped; ``tests/test_serve.py`` covers shared-pass soundness). The
+property fuzzes the singleton guarantee over a much wider space than the
+parametrized suites.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.aqp import (AggQuery, EngineConfig, FastFrame, Filter,
+                       build_scramble)
+from repro.core.optstop import (AbsoluteWidth, ThresholdSide,
+                                TopKSeparated)
+from repro.data import flights
+from repro.serve import FrameServer
+
+from tests.test_fused_scan import assert_bitwise_equal
+
+pytestmark = pytest.mark.slow
+
+CFG = dict(round_blocks=16, lookahead_blocks=64, hist_bins=128)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64(x64_module):
+    # device_loop=True draws need 64-bit types; the host loop is
+    # unaffected by running under x64
+    yield
+
+
+@pytest.fixture(scope="module")
+def sc():
+    ds = flights.generate(n_rows=40_000, n_airports=12, n_airlines=4,
+                          seed=3)
+    return build_scramble(ds.columns, catalog=ds.catalog, block_rows=256,
+                          seed=4)
+
+
+def _query(agg, group_by, bounder, rangetrim, stop_kind, days):
+    filters = (Filter("day_of_week", "isin", tuple(sorted(days))),)
+    if stop_kind == "topk" and group_by is not None:
+        stop = TopKSeparated(k=2, largest=True)
+    elif stop_kind == "threshold" and agg == "avg":
+        stop = ThresholdSide(threshold=10.0)
+    else:
+        eps = {"avg": 20.0, "count": 5e3, "sum": 1e6}[agg]
+        stop = AbsoluteWidth(eps=eps)
+    return AggQuery(
+        agg=agg, column=None if agg == "count" else "dep_delay",
+        filters=filters, group_by=group_by, stop=stop,
+        bounder=bounder, rangetrim=rangetrim, delta=1e-9)
+
+
+_aggs = st.sampled_from(["avg", "sum", "count"])
+_groups = st.sampled_from([None, "airline", "origin"])
+_bounders = st.sampled_from([("bernstein", True), ("bernstein", False),
+                             ("hoeffding_serfling", True),
+                             ("anderson_dkw", False)])
+_stops = st.sampled_from(["width", "threshold", "topk"])
+_qspec = st.tuples(_aggs, _groups, _bounders, _stops)
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(data=st.data(), device_loop=st.booleans())
+def test_run_batch_bitwise_equals_sequential_runs(sc, data, device_loop):
+    n = data.draw(st.integers(min_value=2, max_value=6), label="n_queries")
+    # distinct filter day-sets -> distinct filter keys -> singleton passes
+    day_sets = data.draw(
+        st.lists(st.frozensets(st.integers(0, 6), min_size=1, max_size=7),
+                 min_size=n, max_size=n, unique=True),
+        label="day_sets")
+    specs = data.draw(st.lists(_qspec, min_size=n, max_size=n),
+                      label="specs")
+    queries = [
+        _query(agg, group_by, bounder, rangetrim, stop_kind, days)
+        for (agg, group_by, (bounder, rangetrim), stop_kind), days
+        in zip(specs, day_sets)]
+
+    cfg = dict(CFG, device_loop=device_loop)
+    server = FrameServer(FastFrame(sc, EngineConfig(**cfg)))
+    res_batch = server.run_batch(queries, seed=1, start_block=0)
+    seq_frame = FastFrame(sc, EngineConfig(**cfg))
+    for q, r_batch in zip(queries, res_batch):
+        r_seq = seq_frame.run(q, seed=1, start_block=0)
+        assert_bitwise_equal(r_batch, r_seq)

@@ -50,6 +50,16 @@ CHECKS = [
          baseline="BENCH_device_loop.json",
          key=("config",),
          metric="device_rounds_per_s"),
+    dict(name="bound_eval",
+         current="BENCH_bound_eval_quick.json",
+         baseline="BENCH_bound_eval.json",
+         key=("G",),
+         metric="batched_refreshes_per_s"),
+    dict(name="sharded_scan",
+         current="BENCH_sharded_scan_quick.json",
+         baseline="BENCH_sharded_scan.json",
+         key=("config",),
+         metric="rounds_per_s"),
     # ... plus machine-independent within-run ratios, robust to hardware
     dict(name="fused_scan-ratio",
          current="BENCH_fused_scan_quick.json",
@@ -66,6 +76,16 @@ CHECKS = [
          baseline="BENCH_device_loop.json",
          key=("config",),
          metric="speedup_vs_host_loop"),
+    dict(name="bound_eval-ratio",
+         current="BENCH_bound_eval_quick.json",
+         baseline="BENCH_bound_eval.json",
+         key=("G",),
+         metric="speedup"),
+    dict(name="sharded_scan-ratio",
+         current="BENCH_sharded_scan_quick.json",
+         baseline="BENCH_sharded_scan.json",
+         key=("config",),
+         metric="speedup_vs_single"),
 ]
 
 
