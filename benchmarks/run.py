@@ -1,15 +1,16 @@
 """Benchmark driver (deliverable (d)): one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV per the harness contract, plus the
-human-readable tables, and persists JSON under benchmarks/results/ — with
-every ``BENCH_*.json`` full-sweep report (fused scan, serve, bound eval,
-device loop, ...) mirrored to the repo root so the perf trajectory is
-visible without digging into the results directory.
+human-readable tables, and persists JSON under ``benchmarks/results/`` —
+the CANONICAL location for every ``BENCH_*.json`` report (it is what
+``tools/check_perf_regression.py`` reads). The repo-root ``BENCH_*.json``
+entries are relative symlinks into it, kept only so the perf trajectory
+is visible without digging into the results directory; they can never
+drift from the canonical files.
 """
 
 from __future__ import annotations
 
 import json
-import shutil
 import sys
 import time
 from pathlib import Path
@@ -19,13 +20,19 @@ RESULTS = REPO_ROOT / "benchmarks" / "results"
 
 
 def emit_root_trajectory() -> None:
-    """Mirror every committed full-sweep ``BENCH_*.json`` (quick smokes
-    excluded) from benchmarks/results/ to the repo root."""
+    """Symlink every committed full-sweep ``BENCH_*.json`` (quick smokes
+    excluded) from the canonical benchmarks/results/ into the repo root.
+    Replaces any stale plain-file copy from older revisions."""
     for report in sorted(RESULTS.glob("BENCH_*.json")):
         if report.stem.endswith("_quick"):
             continue
-        shutil.copyfile(report, REPO_ROOT / report.name)
-        print(f"trajectory: {report.name} -> repo root")
+        link = REPO_ROOT / report.name
+        target = report.relative_to(REPO_ROOT)
+        if link.is_symlink() and link.readlink() == target:
+            continue
+        link.unlink(missing_ok=True)
+        link.symlink_to(target)
+        print(f"trajectory: {report.name} -> {target}")
 
 
 def main() -> None:

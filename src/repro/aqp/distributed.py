@@ -109,6 +109,7 @@ class BlockShards:
     nb: int               # real global block count
     n_shards: int
     shard_blocks: int     # padded per-shard block count
+    merge_every: int = 1  # collective cadence K (1 = merge every round)
 
     @property
     def padded_nb(self) -> int:
@@ -119,7 +120,8 @@ class BlockShards:
         """The kernel-layer view of this layout."""
         return kfused.ShardInfo(mesh=self.mesh, axes=self.axes,
                                 n_shards=self.n_shards,
-                                shard_blocks=self.shard_blocks)
+                                shard_blocks=self.shard_blocks,
+                                merge_every=self.merge_every)
 
     def pad_blocks(self, arr: np.ndarray) -> np.ndarray:
         """Zero-pad a ``(nb, ...)`` per-block array to ``padded_nb``."""
@@ -151,16 +153,25 @@ def place_replicated(shards: Optional[BlockShards], arr) -> jax.Array:
     return jnp.asarray(arr)
 
 
-def build_block_shards(nb: int, mesh: Optional[Mesh]
-                       ) -> Optional[BlockShards]:
+def build_block_shards(nb: int, mesh: Optional[Mesh],
+                       merge_every: int = 1) -> Optional[BlockShards]:
     """Layout of ``nb`` scramble blocks over ``mesh`` (None passes
-    through: single-device frames carry no shard layout)."""
+    through: single-device frames carry no shard layout).
+    ``merge_every`` is the collective cadence the sharded round loops
+    run at (``EngineConfig.merge_every``; 1 = the per-round-merge
+    oracle path)."""
     if mesh is None:
         return None
+    if merge_every < 1:
+        raise ValueError(
+            f"merge_every must be >= 1, got {merge_every} (1 merges the "
+            "shard folds every round; K > 1 amortizes the collective "
+            "over K rounds)")
     n_shards = mesh.devices.size
     return BlockShards(mesh=mesh, axes=tuple(mesh.axis_names), nb=nb,
                        n_shards=n_shards,
-                       shard_blocks=-(-nb // n_shards))
+                       shard_blocks=-(-nb // n_shards),
+                       merge_every=merge_every)
 
 
 def make_sharded_fold(mesh: Mesh, dp_axes: Sequence[str], num_groups: int,

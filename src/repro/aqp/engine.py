@@ -239,6 +239,22 @@ class EngineConfig:
             ``(8,)`` or ``(2, 4)``; the block axis is sharded over every
             axis, flattened). ``None`` uses all visible devices as a 1-D
             mesh.
+        merge_every: collective cadence K of the sharded round loop:
+            the cross-shard ``psum``/``pmin``/``pmax`` fold merge fires
+            every K rounds (or earlier, when any shard's local stopping
+            hint says a query might be done — merge-then-confirm, so
+            termination always reads fully-merged stats) instead of
+            every round. Between merges each shard accumulates its raw
+            additive fold delta locally and the reported intervals stay
+            frozen at their last merged values — stale by at most K
+            rounds but still anytime-valid (the ``sync_every`` trick,
+            one level down). 1 (default) is the per-round-merge path,
+            bitwise-identical to not setting this at all; K > 1 only
+            affects sharded loops (no-op when ``shard_rows`` resolves
+            False). Host syncs (``sync_every`` dispatch boundaries,
+            ``on_sync`` snapshots, termination) always flush pending
+            deltas first, so they never observe stale stats. See
+            ``docs/architecture.md`` ("Collective cadence").
     """
 
     round_blocks: int = 64          # processed-block budget per round
@@ -261,6 +277,15 @@ class EngineConfig:
                                     # active and >1 device visible)
     mesh_shape: Optional[Tuple[int, ...]] = None  # explicit mesh shape
                                     # (None = all visible devices, 1-D)
+    merge_every: int = 1            # collective cadence K of the sharded
+                                    # loop (1 = merge folds every round)
+
+    def __post_init__(self):
+        if self.merge_every < 1:
+            raise ValueError(
+                f"EngineConfig(merge_every={self.merge_every}) must be "
+                ">= 1 (1 merges the shard folds every round; K > 1 "
+                "amortizes the collective set over K rounds)")
 
     def resolve_shard_rows(self) -> bool:
         """Whether the device-resident round loop runs sharded over a
@@ -638,9 +663,11 @@ class _DeviceLoop:
         self.nb = nb
         self.window = window
         self.use_hist = slot.use_hist
+        self.nbins = cfg.hist_bins
         self.chunk = cfg.sync_every or cfg.chunk_rounds
         self.max_rounds = max_rounds
         self.shards = shards
+        self.cadence = shards is not None and shards.merge_every > 1
         words = (slot.group_bm.words if probe
                  else np.zeros((1, 1), np.uint32))
         # scan-order-independent buffers; order_pad / cum_rows are filled
@@ -687,6 +714,17 @@ class _DeviceLoop:
         G = slot.G
         f64 = lambda x: jnp.asarray(x, jnp.float64)
         i64 = lambda v: jnp.asarray(v, jnp.int64)
+        pend = {}
+        if self.cadence:
+            # collective-cadence pending slots: empty local delta
+            pend = dict(
+                pend_sums=jnp.zeros((3, G), jnp.float64),
+                pend_vmin=jnp.full((G,), np.inf, jnp.float64),
+                pend_vmax=jnp.full((G,), -np.inf, jnp.float64),
+                pend_hist=(jnp.zeros((G, self.nbins), jnp.float64)
+                           if self.use_hist else None),
+                pend_rounds=jnp.asarray(0, jnp.int32),
+                merge_now=jnp.asarray(False))
         return kfused.QueryLoopCarry(
             pos=jnp.asarray(0, jnp.int32),
             rounds=jnp.asarray(0, jnp.int32),
@@ -704,7 +742,8 @@ class _DeviceLoop:
             refreshed=jnp.asarray(qci.refreshed),
             active=jnp.asarray(qci.active),
             blocks_fetched=i64(slot.blocks_fetched),
-            skipped_static=i64(0), skipped_active=i64(0), probes=i64(0))
+            skipped_static=i64(0), skipped_active=i64(0), probes=i64(0),
+            **pend)
 
     def run(self, carry: kfused.QueryLoopCarry,
             on_sync: Optional[Callable] = None) -> kfused.QueryLoopCarry:
@@ -786,8 +825,9 @@ class FastFrame:
             shards = None
             if self.config.resolve_shard_rows():
                 mesh = adist.make_aqp_mesh(self.config.mesh_shape)
-                shards = adist.build_block_shards(self.scramble.n_blocks,
-                                                  mesh)
+                shards = adist.build_block_shards(
+                    self.scramble.n_blocks, mesh,
+                    merge_every=self.config.merge_every)
             self._block_shards = shards
             self._shards_resolved = True
         return self._block_shards
@@ -1189,7 +1229,8 @@ class FastFrame:
             key = ("run", q.scan_signature(), q.agg, q.bounder,
                    q.rangetrim, q.delta, repr(q.stop), probe, lookahead,
                    max_rounds, cfg.sync_every or cfg.chunk_rounds,
-                   (shards.n_shards, shards.shard_blocks)
+                   (shards.n_shards, shards.shard_blocks,
+                    shards.merge_every)
                    if shards is not None else None)
             dloop = self.device_loops.get_or_build(
                 key,

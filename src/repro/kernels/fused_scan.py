@@ -212,6 +212,9 @@ class ShardInfo(NamedTuple):
     axes: Tuple[str, ...]
     n_shards: int
     shard_blocks: int   # padded per-shard block count (equal on all shards)
+    merge_every: int = 1  # collective cadence K: rounds between full
+                          # psum/pmin/pmax merges (1 = merge every round,
+                          # the bitwise oracle path)
 
 
 def _flat_shard_index(shard: ShardInfo) -> jax.Array:
@@ -235,17 +238,14 @@ def _shard_local_blocks(blk: jax.Array, tvalid: jax.Array,
     return lidx, mine
 
 
-def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl,
-          shard_axes: Optional[Tuple[str, ...]] = None):
-    """Dispatch one round's fold: ref oracle or the fused superkernel.
-
-    With ``shard_axes`` the caller is inside ``shard_map`` and ``v/g/m``
-    are this device's slice of the round's rows: the raw additive sums
-    (count, dsum, dsq about ``center``) merge across the mesh with one
-    ``psum`` and the extremes with ``pmin``/``pmax`` BEFORE the
-    shifted-moment conversion, so the merged state is the single-device
-    fold up to a reordering of the row sum (bitwise equal whenever the
-    per-shard partials are exactly representable)."""
+def _fold_local(v, g, m, center, a, b, num_groups, nbins, use_hist, impl):
+    """This device's raw additive fold of one round's rows: ``(sums
+    (3, G), vmin (1, G), vmax (1, G), hist (G, nbins) | None)`` about
+    ``center``, BEFORE any cross-shard merge or shifted-moment
+    conversion. The additive form is what crosses the mesh (``psum`` /
+    ``pmin`` / ``pmax``) — either per round inside :func:`_fold` or, on
+    a collective cadence, accumulated in the loop carry's f64 pending
+    slots and merged every ``ShardInfo.merge_every`` rounds."""
     if impl == "ref" or not use_hist:
         # No histogram: the plain block_agg kernel already is the fused
         # moment pass; ref: XLA segment ops (bitwise-identical to the
@@ -272,6 +272,23 @@ def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl,
         vmin = vmin[:, :num_groups]
         vmax = vmax[:, :num_groups]
         hist = hist[:num_groups, :nbins]
+    return sums, vmin, vmax, hist
+
+
+def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl,
+          shard_axes: Optional[Tuple[str, ...]] = None):
+    """Dispatch one round's fold: ref oracle or the fused superkernel.
+
+    With ``shard_axes`` the caller is inside ``shard_map`` and ``v/g/m``
+    are this device's slice of the round's rows: the raw additive sums
+    (count, dsum, dsq about ``center``) merge across the mesh with one
+    ``psum`` and the extremes with ``pmin``/``pmax`` BEFORE the
+    shifted-moment conversion, so the merged state is the single-device
+    fold up to a reordering of the row sum (bitwise equal whenever the
+    per-shard partials are exactly representable)."""
+    sums, vmin, vmax, hist = _fold_local(v, g, m, center, a, b,
+                                         num_groups, nbins, use_hist,
+                                         impl)
     if shard_axes:
         # one collective set per round: O(groups) bytes across the mesh
         sums = jax.lax.psum(sums, shard_axes)
@@ -514,6 +531,19 @@ class QueryLoopCarry(NamedTuple):
     skipped_static: jax.Array  # i64
     skipped_active: jax.Array  # i64
     probes: jax.Array          # i64
+    # -- collective-cadence slots (``ShardInfo.merge_every > 1`` only;
+    # None otherwise, so the K=1 carry pytree — and its trace — is
+    # unchanged). The pending slots hold this shard's raw additive fold
+    # delta accumulated since the last full merge; they are zeroed by
+    # every merge and every dispatch exits freshly merged (flush), so
+    # the out-spec replication of the carry still holds.
+    pend_sums: Optional[jax.Array] = None    # (3, G) f64 local delta
+    pend_vmin: Optional[jax.Array] = None    # (G,) f64 local extremes
+    pend_vmax: Optional[jax.Array] = None    # (G,) f64
+    pend_hist: Optional[jax.Array] = None    # (G, K) f64 local hist delta
+    pend_rounds: Optional[jax.Array] = None  # i32 rounds since last merge
+    merge_now: Optional[jax.Array] = None    # bool: merge at next round
+                                             # start (replicated: pmax-ed)
 
 
 def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
@@ -532,16 +562,24 @@ def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
     return win, ok, flags, take, new_pos, covmask
 
 
-def _query_carry_spec(use_hist: bool) -> "QueryLoopCarry":
-    """Fully-replicated shard_map partition spec of the query carry."""
+def _query_carry_spec(use_hist: bool, cadence: bool = False
+                      ) -> "QueryLoopCarry":
+    """Fully-replicated shard_map partition spec of the query carry.
+    The cadence pending slots are per-shard state, but every dispatch
+    exits with them zeroed (flush), so they too are replicated at the
+    shard_map boundary."""
     rep = P()
+    pend = rep if cadence else None
     return QueryLoopCarry(
         pos=rep, rounds=rep, it=rep, live=rep, stopped_early=rep,
         state=MomentState(rep, rep, rep, rep, rep),
         hist=(rep if use_hist else None), processed=rep,
         seen_presence=rep, tainted=rep, exact=rep, lo=rep, hi=rep,
         est=rep, refreshed=rep, active=rep, blocks_fetched=rep,
-        skipped_static=rep, skipped_active=rep, probes=rep)
+        skipped_static=rep, skipped_active=rep, probes=rep,
+        pend_sums=pend, pend_vmin=pend, pend_vmax=pend,
+        pend_hist=(rep if cadence and use_hist else None),
+        pend_rounds=pend, merge_now=pend)
 
 
 def build_query_loop(*, nb: int, window: int, budget: int, center: float,
@@ -575,7 +613,28 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     identical to the single-device loop — and only the per-round fold
     delta crosses the mesh (``psum``/``pmin``/``pmax`` inside
     :func:`_fold`, one collective set per round, no host sync).
+
+    ``shard.merge_every = K > 1`` amortizes that collective set over K
+    rounds (the *collective cadence*; see ``docs/architecture.md``).
+    Each round folds only into the carry's f64 pending slots (this
+    shard's raw additive delta since the last merge) and the reported
+    intervals / active mask stay frozen at their last fully-merged
+    values — stale by at most K rounds but still anytime-valid (frozen
+    intersected CIs can only be supersets of the fresher ones, the same
+    trick the host uses with ``sync_every``). The full merge fires at
+    the START of a round — on data the current round's scan does not
+    depend on, so XLA can overlap the collective with the gather/fold —
+    when either (a) K rounds of delta are pending, or (b) any shard's
+    local stopping hint (merged stats + its own pending delta) says the
+    query *might* be done (merge-then-confirm: termination decisions
+    only ever read fully-merged stats; the hint costs one scalar
+    ``pmax`` per round). Every dispatch flushes its pending delta on
+    exit, so host syncs, ``on_sync`` snapshots and termination always
+    observe fully-merged state. With ``merge_every=1`` (default) this
+    path is not even traced — the per-round-merge loop above survives
+    bitwise as the oracle.
     """
+    cadence = shard is not None and shard.merge_every > 1
 
     def body(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
         k = c.rounds + 1
@@ -645,6 +704,146 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
             blocks_fetched=blocks_fetched, skipped_static=skipped_static,
             skipped_active=skipped_active, probes=probes)
 
+    # -- collective cadence (shard.merge_every = K > 1) ------------------
+
+    def _merge_refresh(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
+        """Fire the collective set on the pending multi-round delta,
+        fold it into the merged running state and re-evaluate the CIs /
+        stopping condition on fully-merged stats. Valid both at a round
+        start (delta-schedule index ``c.rounds`` — the rounds whose data
+        the merged state now covers) and at the dispatch-exit flush;
+        merges zero the pending slots, so each index is consumed at most
+        once (the schedule stays a subset of the K=1 one and the union
+        bound over ``delta`` holds)."""
+        sums = jax.lax.psum(c.pend_sums, shard.axes)
+        vmin = jax.lax.pmin(c.pend_vmin, shard.axes)
+        vmax = jax.lax.pmax(c.pend_vmax, shard.axes)
+        dstate = kops.moments_from_sums(sums, vmin, vmax, center)
+        state = merge_moments(c.state, dstate)
+        hist = (c.hist + jax.lax.psum(c.pend_hist, shard.axes)
+                if use_hist else c.hist)
+        r = jnp.where(c.pos > 0,
+                      bufs.cum_rows[jnp.maximum(c.pos - 1, 0)],
+                      0).astype(jnp.float64)
+        lo, hi, est, refreshed, active = refresh_fn(
+            c.rounds, r, state, hist, c.tainted, c.exact, c.lo, c.hi,
+            c.est, c.refreshed, c.active)
+        live = active.any()
+        stopped_early = c.stopped_early | (~live & (c.pos < nb))
+        return c._replace(
+            live=live, stopped_early=stopped_early, state=state,
+            hist=hist, lo=lo, hi=hi, est=est, refreshed=refreshed,
+            active=active,
+            pend_sums=jnp.zeros_like(c.pend_sums),
+            pend_vmin=jnp.full_like(c.pend_vmin, jnp.inf),
+            pend_vmax=jnp.full_like(c.pend_vmax, -jnp.inf),
+            pend_hist=(jnp.zeros_like(c.pend_hist) if use_hist
+                       else None),
+            pend_rounds=jnp.asarray(0, jnp.int32),
+            merge_now=jnp.asarray(False))
+
+    def cadence_body(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
+        # Selection runs on the PRE-merge active mask, so this round's
+        # scan/gather/fold has no data dependence on the merge and XLA
+        # is free to overlap the collective with the compute (the merge
+        # gates round k+1). merge_now is replicated (pmax-ed below), so
+        # every shard takes the same branch and the collectives inside
+        # the cond rendezvous.
+        sel_active = c.active
+        c = jax.lax.cond(c.merge_now,
+                         functools.partial(_merge_refresh, bufs),
+                         lambda x: x, c)
+        k = c.rounds + 1
+
+        def flags_src(ok, win):
+            if not probe:
+                return ok
+            aw = pack_active_device(sel_active, n_words)
+            act = kops.active_blocks(bufs.words[win], aw, impl=impl) > 0
+            return ok & act
+
+        win, ok, flags, take, new_pos, covmask = _round_scan(
+            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
+        blk, tvalid = _gather_blocks(take, win, window, budget)
+        blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
+        v = bufs.values[blk].reshape(-1)
+        g = bufs.gids[blk].reshape(-1)
+        m = (bufs.mask[blk]
+             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+        dsums, dvmin, dvmax, dhist = _fold_local(
+            v, g, m, center, a, b, num_groups, nbins, use_hist, impl)
+        pend_sums = c.pend_sums + jnp.asarray(dsums, jnp.float64)
+        pend_vmin = jnp.minimum(
+            c.pend_vmin, jnp.asarray(dvmin, jnp.float64).reshape(-1))
+        pend_vmax = jnp.maximum(
+            c.pend_vmax, jnp.asarray(dvmax, jnp.float64).reshape(-1))
+        pend_hist = (c.pend_hist + jnp.asarray(dhist, jnp.float64)
+                     if use_hist else None)
+        pend_rounds = c.pend_rounds + 1
+
+        # -- accounting: replicated, every round (same as the K=1 body) --
+        okc = ok & covmask
+        flagsc = flags & covmask
+        act_skip = okc & ~flagsc
+        pres_win = bufs.presence[win]
+        tainted = c.tainted | (pres_win & act_skip[:, None]).any(axis=0)
+        skipped_static = (c.skipped_static
+                          + (~ok & covmask).sum(dtype=jnp.int64))
+        skipped_active = c.skipped_active + act_skip.sum(dtype=jnp.int64)
+        probes_m = c.probes
+        if probe:
+            probes_m = probes_m + _probe_cost(flags, c.pos, nb, window,
+                                              budget, lookahead,
+                                              cover_cap)
+        processed = c.processed.at[win].max(take)
+        blocks_fetched = c.blocks_fetched + take.sum(dtype=jnp.int64)
+        seen_presence = c.seen_presence + (
+            pres_win & take[:, None]).sum(axis=0, dtype=jnp.int32)
+        cov = seen_presence >= bufs.presence_total
+        cov = cov | ((new_pos >= nb) & ~tainted)
+        exact = c.exact | cov
+
+        # -- local stopping hint: merged stats + this shard's own
+        # pending delta. Per-shard (divergent) by design — it never
+        # touches the reported intervals or the active mask, only
+        # whether the next round opens with a full merge, and that
+        # decision is re-replicated by the scalar pmax. The hint's
+        # delta-schedule index consumes no budget (its output is only
+        # this boolean).
+        hstate = merge_moments(c.state, kops.moments_from_sums(
+            pend_sums, pend_vmin, pend_vmax, center))
+        hhist = c.hist + pend_hist if use_hist else c.hist
+        r = jnp.where(new_pos > 0,
+                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
+                      0).astype(jnp.float64)
+        _, _, _, _, hint_active = refresh_fn(
+            k, r, hstate, hhist, tainted, exact, c.lo, c.hi, c.est,
+            c.refreshed, c.active)
+        might_stop = ~hint_active.any()
+        merge_now = jax.lax.pmax(
+            (might_stop | (pend_rounds >= shard.merge_every)
+             ).astype(jnp.int32), shard.axes) > 0
+
+        return c._replace(
+            pos=new_pos, rounds=k, it=c.it + 1, processed=processed,
+            seen_presence=seen_presence, tainted=tainted, exact=exact,
+            blocks_fetched=blocks_fetched, skipped_static=skipped_static,
+            skipped_active=skipped_active, probes=probes_m,
+            pend_sums=pend_sums, pend_vmin=pend_vmin,
+            pend_vmax=pend_vmax, pend_hist=pend_hist,
+            pend_rounds=pend_rounds, merge_now=merge_now)
+
+    def flush(bufs, carry: QueryLoopCarry) -> QueryLoopCarry:
+        # every dispatch exits fully merged: termination / sync_every
+        # snapshots never see stale stats, and the pending slots leave
+        # the shard_map as replicated zeros. pend_rounds == 0 implies
+        # the pending slots are already zero and merge_now is False.
+        return jax.lax.cond(carry.pend_rounds > 0,
+                            functools.partial(_merge_refresh, bufs),
+                            lambda x: x, carry)
+
+    loop_body = cadence_body if cadence else body
+
     def cond(c: QueryLoopCarry):
         go = c.live & (c.pos < nb) & (c.rounds < max_rounds)
         if chunk is not None:
@@ -654,8 +853,12 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     def chunk_body(bufs: QueryLoopBuffers,
                    carry: QueryLoopCarry) -> QueryLoopCarry:
         carry = carry._replace(it=jnp.asarray(0, jnp.int32))
-        return jax.lax.while_loop(cond, functools.partial(body, bufs),
-                                  carry)
+        carry = jax.lax.while_loop(cond,
+                                   functools.partial(loop_body, bufs),
+                                   carry)
+        if cadence:
+            carry = flush(bufs, carry)
+        return carry
 
     if shard is None:
         return jax.jit(chunk_body)
@@ -665,7 +868,7 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     bufs_spec = QueryLoopBuffers(
         values=data, gids=data, mask=data, words=rep, order_pad=rep,
         static_ok=rep, presence=rep, presence_total=rep, cum_rows=rep)
-    carry_spec = _query_carry_spec(use_hist)
+    carry_spec = _query_carry_spec(use_hist, cadence)
     # check_rep=False: replication of the carry holds by construction
     # (replicated inputs -> replicated selection/accounting; the fold
     # delta is re-replicated by its psum) but the checker cannot see
@@ -711,6 +914,13 @@ class SlotCarry(NamedTuple):
     seen_presence: jax.Array   # (G_s,) i32
     tainted: jax.Array         # (G_s,) bool
     exact: jax.Array           # (G_s,) bool
+    # collective-cadence pending slots (merge_every > 1 only, else None;
+    # see QueryLoopCarry — this shard's raw additive delta since the
+    # last full merge, zeroed by every merge)
+    pend_sums: Optional[jax.Array] = None    # (3, G_s) f64
+    pend_vmin: Optional[jax.Array] = None    # (G_s,) f64
+    pend_vmax: Optional[jax.Array] = None    # (G_s,) f64
+    pend_hist: Optional[jax.Array] = None    # (G_s, K) f64
 
 
 class PassQueryCarry(NamedTuple):
@@ -751,12 +961,19 @@ class PassCarry(NamedTuple):
     probes: jax.Array          # i64 (probing slots share union flags)
     slots: Tuple[SlotCarry, ...]
     queries: Tuple[Tuple[PassQueryCarry, ...], ...]  # [slot][query]
+    # collective-cadence shared state (merge_every > 1 only, else None)
+    pend_rounds: Optional[jax.Array] = None  # i32 rounds since last merge
+    merge_now: Optional[jax.Array] = None    # bool (replicated: pmax-ed)
 
 
 def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
-                     n_queries: Sequence[int]) -> "PassCarry":
-    """Fully-replicated shard_map partition spec of the pass carry."""
+                     n_queries: Sequence[int],
+                     cadence: bool = False) -> "PassCarry":
+    """Fully-replicated shard_map partition spec of the pass carry (the
+    cadence pending slots leave every dispatch zeroed — see
+    :func:`_query_carry_spec`)."""
     rep = P()
+    pend = rep if cadence else None
     qspec = PassQueryCarry(*([rep] * len(PassQueryCarry._fields)))
     return PassCarry(
         pos=rep, rounds=rep, it=rep, n_live=rep, processed=rep,
@@ -764,10 +981,15 @@ def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
         probes=rep,
         slots=tuple(SlotCarry(state=MomentState(rep, rep, rep, rep, rep),
                               hist=(rep if spec.use_hist else None),
-                              seen_presence=rep, tainted=rep, exact=rep)
+                              seen_presence=rep, tainted=rep, exact=rep,
+                              pend_sums=pend, pend_vmin=pend,
+                              pend_vmax=pend,
+                              pend_hist=(rep if cadence and spec.use_hist
+                                         else None))
                     for spec in slot_specs),
         queries=tuple(tuple(qspec for _ in range(nq))
-                      for nq in n_queries))
+                      for nq in n_queries),
+        pend_rounds=pend, merge_now=pend)
 
 
 def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
@@ -794,7 +1016,17 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
     slabs, the union selection / accounting / per-query refreshes stay
     replicated, and each slot's per-round fold delta merges across the
     mesh inside :func:`_fold` (one collective set per slot per round).
+    ``shard.merge_every = K > 1`` applies the collective cadence of
+    :func:`build_query_loop` to the whole pass: one shared ``pend_rounds``
+    / ``merge_now`` schedule, per-slot pending delta slots, per-query
+    intervals / finished flags frozen between merges (selection gates on
+    the stale flags — at most K rounds of extra blocks for a query that
+    just finished), the merge-then-confirm hint OR-ed over every
+    unfinished query, and finish-time snapshots recorded at merges (a
+    query's result reflects exactly the merged rounds that terminated
+    it).
     """
+    cadence = shard is not None and shard.merge_every > 1
     i32 = jnp.int32
     i64 = jnp.int64
 
@@ -907,6 +1139,182 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
             probes=probes, slots=tuple(new_slots),
             queries=tuple(new_queries))
 
+    # -- collective cadence (shard.merge_every = K > 1) ------------------
+
+    def _merge_refresh_pass(bufs, c: PassCarry) -> PassCarry:
+        """Pass twin of build_query_loop's ``_merge_refresh``: one
+        collective set per slot on the pending multi-round deltas, then
+        every unfinished query's CI refresh / stop test on fully-merged
+        stats (delta-schedule index ``c.rounds``), with finish-time
+        snapshots taken from the merged values."""
+        r = jnp.where(c.pos > 0,
+                      bufs.cum_rows[jnp.maximum(c.pos - 1, 0)],
+                      0).astype(jnp.float64)
+        new_slots = []
+        new_queries = []
+        n_live = c.n_live
+        for s, spec in enumerate(slot_specs):
+            sc = c.slots[s]
+            sums = jax.lax.psum(sc.pend_sums, shard.axes)
+            vmin = jax.lax.pmin(sc.pend_vmin, shard.axes)
+            vmax = jax.lax.pmax(sc.pend_vmax, shard.axes)
+            dstate = kops.moments_from_sums(sums, vmin, vmax,
+                                            spec.center)
+            state = merge_moments(sc.state, dstate)
+            hist = (sc.hist + jax.lax.psum(sc.pend_hist, shard.axes)
+                    if spec.use_hist else sc.hist)
+            new_slots.append(sc._replace(
+                state=state, hist=hist,
+                pend_sums=jnp.zeros_like(sc.pend_sums),
+                pend_vmin=jnp.full_like(sc.pend_vmin, jnp.inf),
+                pend_vmax=jnp.full_like(sc.pend_vmax, -jnp.inf),
+                pend_hist=(jnp.zeros_like(sc.pend_hist)
+                           if spec.use_hist else None)))
+            slot_queries = []
+            for qi, qc in enumerate(c.queries[s]):
+                nlo, nhi, nest, nrefr, nact = refresh_fns[s][qi](
+                    c.rounds, r, state, hist, sc.tainted, sc.exact,
+                    qc.lo, qc.hi, qc.est, qc.refreshed, qc.active)
+                fin = qc.finished
+                lo = jnp.where(fin, qc.lo, nlo)
+                hi = jnp.where(fin, qc.hi, nhi)
+                est = jnp.where(fin, qc.est, nest)
+                refreshed = jnp.where(fin, qc.refreshed, nrefr)
+                active = jnp.where(fin, qc.active, nact)
+                now_fin = ~fin & ~active.any()
+                n_live = n_live - now_fin.astype(i32)
+                snap = lambda new, old: jnp.where(now_fin, new, old)
+                slot_queries.append(qc._replace(
+                    lo=lo, hi=hi, est=est, refreshed=refreshed,
+                    active=active, finished=fin | now_fin,
+                    stopped_early=snap(c.pos < nb, qc.stopped_early),
+                    finish_rounds=snap(c.rounds, qc.finish_rounds),
+                    finish_pos=snap(c.pos, qc.finish_pos),
+                    finish_blocks_fetched=snap(
+                        c.blocks_fetched, qc.finish_blocks_fetched),
+                    finish_skipped_static=snap(
+                        c.skipped_static, qc.finish_skipped_static),
+                    finish_skipped_active=snap(
+                        c.skipped_active, qc.finish_skipped_active),
+                    finish_probes=snap(c.probes, qc.finish_probes),
+                    snap_counts=snap(state.count, qc.snap_counts),
+                    snap_exact=snap(sc.exact, qc.snap_exact),
+                    snap_tainted=snap(sc.tainted, qc.snap_tainted)))
+            new_queries.append(tuple(slot_queries))
+        return c._replace(
+            n_live=n_live, slots=tuple(new_slots),
+            queries=tuple(new_queries),
+            pend_rounds=jnp.asarray(0, i32),
+            merge_now=jnp.asarray(False))
+
+    def cadence_body(bufs, c: PassCarry) -> PassCarry:
+        # see build_query_loop.cadence_body: selection gates on the
+        # PRE-merge per-query flags so the merge collective overlaps the
+        # scan; intervals / finished flags only change at merges.
+        sel_queries = c.queries
+        c = jax.lax.cond(c.merge_now,
+                         functools.partial(_merge_refresh_pass, bufs),
+                         lambda x: x, c)
+        k = c.rounds + 1
+
+        def flags_src(ok, win):
+            union = jnp.zeros((window,), bool)
+            for s, spec in enumerate(slot_specs):
+                if spec.probe:
+                    rows = [pack_active_device(qc.active, spec.n_words)
+                            for qc in sel_queries[s]]
+                else:
+                    rows = [(~qc.finished).astype(jnp.uint32).reshape(1)
+                            for qc in sel_queries[s]]
+                stack = jnp.stack(rows)
+                act = kops.active_blocks_multi(bufs.words[s][win], stack,
+                                               impl=impl) > 0
+                union = union | (ok[None, :] & act).any(axis=0)
+            return union
+
+        win, ok, union, take, new_pos, covmask = _round_scan(
+            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
+        blk, tvalid = _gather_blocks(take, win, window, budget)
+        blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
+        m = (bufs.mask[blk]
+             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+
+        # -- shared accounting: replicated, every round ------------------
+        okc = ok & covmask
+        unionc = union & covmask
+        act_skip = okc & ~unionc
+        skipped_static = (c.skipped_static
+                          + (~ok & covmask).sum(dtype=i64))
+        skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
+        probes = c.probes
+        if any_probe:
+            probes = probes + _probe_cost(union, c.pos, nb, window,
+                                          budget, lookahead, cover_cap)
+        processed = c.processed.at[win].max(take)
+        blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
+        r = jnp.where(new_pos > 0,
+                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
+                      0).astype(jnp.float64)
+
+        new_slots = []
+        might_stop = jnp.asarray(False)
+        for s, spec in enumerate(slot_specs):
+            sc = c.slots[s]
+            v = bufs.values[s][blk].reshape(-1)
+            g = bufs.gids[s][blk].reshape(-1)
+            dsums, dvmin, dvmax, dhist = _fold_local(
+                v, g, m, spec.center, spec.a, spec.b, spec.num_groups,
+                spec.nbins, spec.use_hist, impl)
+            pend_sums = sc.pend_sums + jnp.asarray(dsums, jnp.float64)
+            pend_vmin = jnp.minimum(
+                sc.pend_vmin, jnp.asarray(dvmin, jnp.float64).reshape(-1))
+            pend_vmax = jnp.maximum(
+                sc.pend_vmax, jnp.asarray(dvmax, jnp.float64).reshape(-1))
+            pend_hist = (sc.pend_hist + jnp.asarray(dhist, jnp.float64)
+                         if spec.use_hist else None)
+            pres_win = bufs.presence[s][win]
+            tainted = sc.tainted | (pres_win
+                                    & act_skip[:, None]).any(axis=0)
+            seen_presence = sc.seen_presence + (
+                pres_win & take[:, None]).sum(axis=0, dtype=i32)
+            cov = seen_presence >= bufs.presence_total[s]
+            cov = cov | ((new_pos >= nb) & ~tainted)
+            exact = sc.exact | cov
+            new_slots.append(sc._replace(
+                seen_presence=seen_presence, tainted=tainted, exact=exact,
+                pend_sums=pend_sums, pend_vmin=pend_vmin,
+                pend_vmax=pend_vmax, pend_hist=pend_hist))
+
+            # local stopping hint over the slot's unfinished queries
+            # (see build_query_loop.cadence_body)
+            hstate = merge_moments(sc.state, kops.moments_from_sums(
+                pend_sums, pend_vmin, pend_vmax, spec.center))
+            hhist = (sc.hist + pend_hist) if spec.use_hist else sc.hist
+            for qi, qc in enumerate(c.queries[s]):
+                _, _, _, _, hact = refresh_fns[s][qi](
+                    k, r, hstate, hhist, tainted, exact, qc.lo, qc.hi,
+                    qc.est, qc.refreshed, qc.active)
+                might_stop = might_stop | (~qc.finished & ~hact.any())
+
+        pend_rounds = c.pend_rounds + 1
+        merge_now = jax.lax.pmax(
+            (might_stop | (pend_rounds >= shard.merge_every)
+             ).astype(i32), shard.axes) > 0
+        return c._replace(
+            pos=new_pos, rounds=k, it=c.it + 1, processed=processed,
+            blocks_fetched=blocks_fetched, skipped_static=skipped_static,
+            skipped_active=skipped_active, probes=probes,
+            slots=tuple(new_slots), pend_rounds=pend_rounds,
+            merge_now=merge_now)
+
+    def flush(bufs, carry: PassCarry) -> PassCarry:
+        # see build_query_loop.flush
+        return jax.lax.cond(carry.pend_rounds > 0,
+                            functools.partial(_merge_refresh_pass, bufs),
+                            lambda x: x, carry)
+
+    loop_body = cadence_body if cadence else body
+
     def cond(c: PassCarry):
         go = (c.pos < nb) & (c.rounds < max_rounds) & (c.n_live > 0)
         if chunk is not None:
@@ -915,8 +1323,12 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
 
     def chunk_body(bufs: PassLoopBuffers, carry: PassCarry) -> PassCarry:
         carry = carry._replace(it=jnp.asarray(0, jnp.int32))
-        return jax.lax.while_loop(cond, functools.partial(body, bufs),
-                                  carry)
+        carry = jax.lax.while_loop(cond,
+                                   functools.partial(loop_body, bufs),
+                                   carry)
+        if cadence:
+            carry = flush(bufs, carry)
+        return carry
 
     if shard is None:
         return jax.jit(chunk_body)
@@ -929,7 +1341,8 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
         values=(data,) * ns, gids=(data,) * ns, words=(rep,) * ns,
         presence=(rep,) * ns, presence_total=(rep,) * ns)
     carry_spec = _pass_carry_spec(slot_specs,
-                                  [len(fns) for fns in refresh_fns])
+                                  [len(fns) for fns in refresh_fns],
+                                  cadence)
     # check_rep=False: see build_query_loop — carry replication holds by
     # construction but is opaque to the checker.
     return jax.jit(shard_map(

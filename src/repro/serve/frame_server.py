@@ -327,7 +327,8 @@ class FrameServer:
                      for s in slots),
                lookahead, max_rounds,
                cfg.sync_every or cfg.chunk_rounds,
-               (shards.n_shards, shards.shard_blocks)
+               (shards.n_shards, shards.shard_blocks,
+                shards.merge_every)
                if shards is not None else None)
 
         def build():
@@ -367,6 +368,20 @@ class FrameServer:
             cum_rows=rep(cum_rows.astype(np.int64)),
             values=values_t, gids=gids_t, words=words_t,
             presence=presence_t, presence_total=presence_total_t)
+        cadence = shards is not None and shards.merge_every > 1
+
+        def _slot_pend(s):
+            # collective-cadence pending slots: empty local delta
+            if not cadence:
+                return {}
+            G = s.views.G
+            return dict(
+                pend_sums=jnp.zeros((3, G), jnp.float64),
+                pend_vmin=jnp.full((G,), np.inf, jnp.float64),
+                pend_vmax=jnp.full((G,), -np.inf, jnp.float64),
+                pend_hist=(jnp.zeros((G, cfg.hist_bins), jnp.float64)
+                           if s.views.use_hist else None))
+
         slot_carries = tuple(
             kfused.SlotCarry(
                 state=MomentState(*(f64(x) for x in s.views.state)),
@@ -374,7 +389,7 @@ class FrameServer:
                 seen_presence=jnp.asarray(
                     s.views.seen_presence.astype(np.int32)),
                 tainted=jnp.asarray(s.views.tainted),
-                exact=jnp.asarray(s.views.exact))
+                exact=jnp.asarray(s.views.exact), **_slot_pend(s))
             for s in slots)
         query_carries = tuple(
             tuple(kfused.PassQueryCarry(
@@ -392,13 +407,15 @@ class FrameServer:
                 snap_tainted=jnp.zeros(s.views.G, bool))
                 for qc in s.qcis)
             for s in slots)
+        pend = (dict(pend_rounds=i32(0), merge_now=jnp.asarray(False))
+                if cadence else {})
         carry = kfused.PassCarry(
             pos=i32(0), rounds=i32(0), it=i32(0),
             n_live=i32(sum(len(s.qcis) for s in slots)),
             processed=jnp.asarray(slots[0].views.processed),
             blocks_fetched=i64(0), skipped_static=i64(0),
             skipped_active=i64(0), probes=i64(0),
-            slots=slot_carries, queries=query_carries)
+            slots=slot_carries, queries=query_carries, **pend)
 
         while True:
             carry = chunk_fn(bufs, carry)

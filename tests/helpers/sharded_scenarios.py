@@ -207,6 +207,175 @@ def scenario_server_pass():
         assert_sharded_matches_oracle(r_sh, r_or)
 
 
+# -- collective cadence (merge_every > 1) ------------------------------------
+#
+# Equivalence discipline for the cadence path (vs the merge_every=1
+# oracle, both sharded):
+#
+#   * selection/coverage/fold counts stay exact under ``sampling="scan"``
+#     (the cursor never consults the active mask, so the block schedule
+#     is cadence-independent);
+#   * the two paths associate the same per-round fold deltas differently
+#     (K=1 Chan-merges each round's delta; cadence pools K deltas in f64
+#     and merges once), so even on exactly-representable data the CI
+#     endpoints agree only to f64 association-order rounding (observed
+#     ~6e-8; asserted within 1e-5) — and on general f32 data only within
+#     the usual ``CI_RTOL`` f32-reorder class;
+#   * staleness may only *delay* refreshes: every synced cadence CI must
+#     be superset-or-equal of the oracle CI on the same prefix (up to
+#     the noise class above), and termination must never consume
+#     unmerged stats (merge-then-confirm).
+
+CADENCE_TOL = 1e-5   # f64 association-order bound on exact-integer data
+
+
+def run_cadence_pair(sc, q, merge_every=4, sampling="scan", seed=1,
+                     start=0, on_sync=None, **over):
+    """Run one query sharded at ``merge_every=K`` and at the per-round
+    oracle ``merge_every=1`` (both ``shard_rows=True``), fresh frames."""
+    kw = dict(CFG)
+    kw.update(over)
+    snaps_k, snaps_1 = [], []
+    r_k = FastFrame(sc, EngineConfig(
+        shard_rows=True, merge_every=merge_every, **kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start,
+        on_sync=snaps_k.append if on_sync else None)
+    r_1 = FastFrame(sc, EngineConfig(
+        shard_rows=True, merge_every=1, **kw)).run(
+        q, sampling=sampling, seed=seed, start_block=start,
+        on_sync=snaps_1.append if on_sync else None)
+    if on_sync:
+        return (r_k, snaps_k), (r_1, snaps_1)
+    return r_k, r_1
+
+
+def scenario_cadence_superset_sync():
+    """Staleness soundness at every host sync: the cadence CI must be a
+    superset-or-equal of the oracle CI on the same scanned prefix —
+    stale bounds may be looser, never tighter. Exact-integer data keeps
+    the comparison at f64 association-order noise (``CADENCE_TOL``)
+    instead of the much looser f32-reorder class."""
+    sc = _integer_scramble()
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # never fires
+    (r_k, snaps_k), (r_1, snaps_1) = run_cadence_pair(
+        sc, q, merge_every=4, sync_every=3, on_sync=True)
+    assert len(snaps_k) == len(snaps_1) > 1
+    for a, b in zip(snaps_k, snaps_1):
+        # scan-sampled prefixes are identical dispatch by dispatch
+        assert a["rounds"] == b["rounds"]
+        fin = np.isfinite(b["lo"]) & np.isfinite(b["hi"])
+        np.testing.assert_array_equal(np.isfinite(a["lo"]), fin)
+        tol = CADENCE_TOL * np.maximum(1.0, np.abs(b["est"][fin]))
+        assert (a["lo"][fin] <= b["lo"][fin] + tol).all(), \
+            ("cadence lo tighter than oracle",
+             (a["lo"][fin] - b["lo"][fin]).max())
+        assert (a["hi"][fin] >= b["hi"][fin] - tol).all(), \
+            ("cadence hi tighter than oracle",
+             (b["hi"][fin] - a["hi"][fin]).max())
+    np.testing.assert_array_equal(r_k.count_seen, r_1.count_seen)
+    assert r_k.rounds == r_1.rounds and r_k.exact.all()
+
+
+def scenario_cadence_merge_confirm():
+    """A query can never terminate on unmerged stats.
+
+    Adversarial layout: every block is constant 49 or 51, assigned so
+    each shard only ever folds ONE of the two values while every round's
+    global selection mixes them equally (running mean exactly 50, the
+    threshold — globally the CI straddles forever and the scan must run
+    to exhaustion). A loop that terminated on a shard's local hint view
+    (all-49 or all-51 => one-sided CI) would stop in the very first
+    cadence window with estimate ~49; merge-then-confirm must instead
+    fire the collective and keep going."""
+    import jax
+    n_dev = jax.device_count()
+    assert n_dev >= 2 and n_dev % 2 == 0, n_dev
+    shard_blocks, block_rows = 4, 128
+    nb = n_dev * shard_blocks
+    n = nb * block_rows
+    g = np.zeros(n, np.int32)
+    v = np.empty(n, np.float32)
+    for b in range(nb):
+        owner = b // shard_blocks
+        v[b * block_rows:(b + 1) * block_rows] = \
+            49.0 if owner % 2 == 0 else 51.0
+    sc = build_scramble({"g": g, "v": v}, catalog={"v": (49.0, 51.0)},
+                        block_rows=block_rows, seed=1)
+    # build_scramble shuffles blocks; restore the adversarial layout
+    sc.columns["v"][:] = v.reshape(sc.columns["v"].shape)
+    q = AggQuery(agg="avg", column="v", group_by="g",
+                 stop=ThresholdSide(threshold=50.0), delta=1e-6)
+    # two shards per round: one all-49, one all-51
+    r_k, r_1 = run_cadence_pair(sc, q, merge_every=4,
+                                round_blocks=2 * shard_blocks,
+                                lookahead_blocks=nb,
+                                sync_lookahead_blocks=nb)
+    for r in (r_k, r_1):
+        assert not r.stopped_early, r.rounds
+        assert r.exact.all()
+        # center = catalog midpoint 50 => dsum is exactly 0 on the full
+        # scan, so the mean is bitwise 50.0 on both paths
+        np.testing.assert_array_equal(r.estimate, np.float64(50.0))
+    assert r_k.rounds == r_1.rounds == nb // (2 * shard_blocks)
+    np.testing.assert_array_equal(r_k.count_seen, r_1.count_seen)
+
+
+def scenario_cadence_exhaustion():
+    """Full-scan cadence run on general data: every scan metric exact vs
+    the merge_every=1 oracle, CI endpoints within the f32-reorder class
+    (the cadence pools fold deltas in a different association order)."""
+    sc = flights_scramble()
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # never fires
+    r_k, r_1 = run_cadence_pair(sc, q, merge_every=4)
+    assert_sharded_matches_oracle(r_k, r_1)
+    assert r_k.exact.all()
+
+
+def scenario_cadence_early_stop():
+    """Early stop under cadence: termination waits for a merge round, so
+    the cadence path may scan extra rounds but never fewer, and the
+    final (fully merged) answer matches the oracle's."""
+    sc = flights_scramble()
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=TopKSeparated(k=2, largest=True), delta=1e-9)
+    r_k, r_1 = run_cadence_pair(sc, q, merge_every=4)
+    assert r_k.rounds >= r_1.rounds, (r_k.rounds, r_1.rounds)
+    assert r_k.stopped_early == r_1.stopped_early
+    np.testing.assert_array_equal(r_k.group_codes, r_1.group_codes)
+    fin = np.isfinite(r_1.estimate)
+    np.testing.assert_allclose(r_k.estimate[fin], r_1.estimate[fin],
+                               rtol=CI_RTOL, atol=CI_ATOL)
+
+
+def scenario_cadence_server_pass():
+    """FrameServer batch through the cadence pass loop (shared
+    pend_rounds/merge_now, per-slot pending folds, flush before the
+    dispatch returns). Exhaustion queries keep the shared cursor
+    schedule identical to the merge_every=1 oracle."""
+    sc = flights_scramble()
+    queries = [
+        AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9),
+        AggQuery(agg="sum", column="dep_delay",
+                 filters=(Filter("airline", "eq", 2),),
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9),
+        AggQuery(agg="count", group_by="airline",
+                 stop=AbsoluteWidth(eps=1e-9), delta=1e-9),
+        AggQuery(agg="avg", column="dep_delay", bounder="anderson_dkw",
+                 rangetrim=False, stop=AbsoluteWidth(eps=1e-9),
+                 delta=1e-9),
+    ]
+    res = []
+    for k in (4, 1):
+        res.append(FrameServer(FastFrame(sc, EngineConfig(
+            shard_rows=True, merge_every=k, **CFG))).run_batch(
+            queries, start_block=0, seed=1))
+    for r_k, r_1 in zip(*res):
+        assert_sharded_matches_oracle(r_k, r_1)
+
+
 ALL = [
     scenario_groupby_topk,
     scenario_groupby_threshold_2d_mesh,
@@ -216,4 +385,9 @@ ALL = [
     scenario_early_stop_bitwise,
     scenario_uneven_tail,
     scenario_server_pass,
+    scenario_cadence_superset_sync,
+    scenario_cadence_merge_confirm,
+    scenario_cadence_exhaustion,
+    scenario_cadence_early_stop,
+    scenario_cadence_server_pass,
 ]

@@ -37,6 +37,9 @@ def _scenarios():
     "scenario_groupby_topk", "scenario_filtered_sum", "scenario_taint",
     "scenario_exhaustion_bitwise", "scenario_early_stop_bitwise",
     "scenario_uneven_tail", "scenario_server_pass",
+    "scenario_cadence_superset_sync", "scenario_cadence_merge_confirm",
+    "scenario_cadence_exhaustion", "scenario_cadence_early_stop",
+    "scenario_cadence_server_pass",
 ])
 def test_sharded_scenario(name, x64_module):
     getattr(_scenarios(), name)()
@@ -74,6 +77,22 @@ def test_shard_rows_requires_device_loop(x64):
 def test_mesh_shape_larger_than_platform_raises():
     with pytest.raises(ValueError, match="devices"):
         make_aqp_mesh((jax.device_count() + 1,))
+
+
+@pytest.mark.parametrize("bad", [0, -1])
+def test_merge_every_must_be_positive(bad):
+    with pytest.raises(ValueError, match="merge_every"):
+        EngineConfig(merge_every=bad)
+    with pytest.raises(ValueError, match="merge_every"):
+        build_block_shards(64, _FakeMesh(4), merge_every=bad)
+
+
+def test_merge_every_threads_through_layout():
+    shards = build_block_shards(64, _FakeMesh(4), merge_every=4)
+    assert shards.merge_every == 4
+    assert shards.info.merge_every == 4
+    # default stays the per-round-merge oracle
+    assert build_block_shards(64, _FakeMesh(4)).info.merge_every == 1
 
 
 # -- block-shard layout (single-device safe) ---------------------------------
