@@ -1,0 +1,197 @@
+"""Microbenchmark: continuous-batching scheduler vs sequential serving.
+
+A shared-signature trace of W queries is served two ways:
+
+  * ``sequential`` — the pre-scheduler baseline: one
+    ``FrameServer.run_batch([q])`` per arrival, in arrival order — each
+    query pays its own pass (materialization, cursor walk, folds);
+  * ``scheduler``  — ``repro.serve.QueryScheduler``: arrivals join the
+    in-flight shared pass at round boundaries (same-signature queries
+    fold together; late joiners anchor a carousel slot at the current
+    cursor), and slots retire the moment OptStop fires.
+
+Workload shapes:
+
+  * ``burst``   — all W queries arrive at once (saturating burst: the
+    continuous-batching best case and the acceptance-criterion trace —
+    one signature, W stopping widths);
+  * ``poisson`` — seeded Poisson arrivals of a mixed non-probe workload
+    (mid-scan joins and retirements interleave).
+
+Reported per workload: sustained queries/sec for both paths, the
+within-run speedup, and scheduler-side p50/p99 latency (wall time from
+submission to result materialization; arrivals are virtual —
+``SimClock`` — so latency measures the serving loop, not sleeps).
+Results go to ``benchmarks/results/BENCH_scheduler.json`` and the
+``name,us_per_call,derived`` CSV contract is printed. The CI perf guard
+(``tools/check_perf_regression.py``) checks scheduler q/s and the
+speedup against the committed baseline, holds p50/p99 to
+lower-is-better rows, and enforces the >=2x burst-speedup floor.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_scheduler.py [--quick]``
+     ``... bench_scheduler.py --trace poisson --n 64 --seed 7`` replays
+     a ``tests/helpers/sim_workload`` trace through the scheduler only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.aqp import AggQuery, EngineConfig, FastFrame, build_scramble
+from repro.core.optstop import AbsoluteWidth
+from repro.data import flights
+from repro.serve import FrameServer, QueryScheduler, SimClock
+
+ROOT = Path(__file__).resolve().parent.parent
+BLOCK_ROWS = 256
+SWEEP_NB = (512, 2048)   # quick (CI) size is the first sweep point
+N_QUERIES = 16
+ROUND_COST_S = 1e-3      # virtual SLO/arrival time unit, not wall time
+
+
+def build_frame(nb: int, seed: int = 7) -> FastFrame:
+    ds = flights.generate(n_rows=nb * BLOCK_ROWS, n_airports=120,
+                          n_airlines=14, seed=seed)
+    sc = build_scramble(ds.columns, catalog=ds.catalog,
+                        block_rows=BLOCK_ROWS, seed=seed + 1)
+    return FastFrame(sc, EngineConfig(round_blocks=64,
+                                      lookahead_blocks=1024))
+
+
+def shared_sig_query(i: int) -> AggQuery:
+    # one scan signature (non-probe AVG), a spread of stopping widths:
+    # tight ones scan the full lap, loose ones stop early and retire
+    eps = [0.4, 0.8, 1.5, 3.0][i % 4] * (1.0 + 0.1 * (i // 4))
+    return AggQuery(agg="avg", column="dep_delay",
+                    stop=AbsoluteWidth(eps=eps), delta=1e-9)
+
+
+def make_query(rng: np.random.Generator) -> AggQuery:
+    agg = ["avg", "sum", "count"][int(rng.integers(3))]
+    eps = {"avg": float(rng.uniform(0.5, 3.0)),
+           "sum": float(rng.uniform(1e5, 1e6)),
+           "count": float(rng.uniform(1e3, 1e4))}[agg]
+    return AggQuery(agg=agg, column="dep_delay",
+                    stop=AbsoluteWidth(eps=eps), delta=1e-9)
+
+
+def make_trace(workload: str, n: int, seed: int):
+    sys.path.insert(0, str(ROOT))
+    from tests.helpers.sim_workload import burst_trace, poisson_trace
+    if workload == "burst":
+        return [type(a)(t=a.t, query=shared_sig_query(i),
+                        deadline=None)
+                for i, a in enumerate(
+                    burst_trace(make_query, n=n, seed=seed))]
+    return poisson_trace(make_query, n=n, rate=200.0, seed=seed)
+
+
+def run_scheduler(frame: FastFrame, trace):
+    sched = QueryScheduler(FrameServer(frame), SimClock(), seed=1,
+                           round_cost_s=ROUND_COST_S, max_slots=8)
+    sched.submit_trace(trace)
+    t0 = time.perf_counter()
+    sched.run_until_idle()
+    wall = time.perf_counter() - t0
+    assert all(tk.status == "done" for tk in sched.tickets)
+    lats = sorted(tk.result.wall_time_s for tk in sched.tickets)
+    return wall, lats
+
+
+def run_sequential(frame: FastFrame, trace):
+    srv = FrameServer(frame)
+    kw = dict(sampling="active_peek", seed=1, start_block=0)
+    t0 = time.perf_counter()
+    for a in trace:
+        srv.run_batch([a.query], **kw)
+    return time.perf_counter() - t0
+
+
+def run_workload(workload: str, nb: int, n: int, seed: int):
+    trace = make_trace(workload, n, seed)
+    # warm-up on throwaway frames (compile cache), then timed best-of-2
+    run_scheduler(build_frame(nb), trace)
+    run_sequential(build_frame(nb), trace)
+    wall, lats = min((run_scheduler(build_frame(nb), trace)
+                      for _ in range(2)), key=lambda wl: wl[0])
+    t_seq = min(run_sequential(build_frame(nb), trace) for _ in range(2))
+    qps_sched = n / wall
+    qps_seq = n / t_seq
+    return dict(workload=workload, nb=nb, n_queries=n,
+                block_rows=BLOCK_ROWS,
+                scheduler_qps=qps_sched, sequential_qps=qps_seq,
+                speedup=qps_sched / qps_seq,
+                p50_latency_ms=1e3 * lats[len(lats) // 2],
+                p99_latency_ms=1e3 * lats[min(len(lats) - 1,
+                                              int(len(lats) * 0.99))])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest scramble only (CI smoke)")
+    ap.add_argument("--trace", choices=["burst", "poisson",
+                                        "adversarial"],
+                    help="replay one sim_workload trace through the "
+                         "scheduler and print its stats (no baseline, "
+                         "no report)")
+    ap.add_argument("--n", type=int, default=N_QUERIES)
+    ap.add_argument("--seed", type=int, default=11)
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        sys.path.insert(0, str(ROOT))
+        from tests.helpers import sim_workload as sw
+        gen = {"burst": sw.burst_trace, "poisson":
+               lambda mq, n, seed: sw.poisson_trace(mq, n=n, rate=200.0,
+                                                    seed=seed),
+               "adversarial": sw.adversarial_trace}[args.trace]
+        trace = gen(make_query, n=args.n, seed=args.seed)
+        sched = QueryScheduler(FrameServer(build_frame(SWEEP_NB[0])),
+                               SimClock(), seed=1,
+                               round_cost_s=ROUND_COST_S, max_slots=8)
+        sched.submit_trace(trace)
+        sched.run_until_idle()
+        print(json.dumps(sched.stats(), indent=1))
+        print(f"log events: {len(sched.log)}")
+        return sched
+
+    rows = []
+    for nb in (SWEEP_NB[:1] if args.quick else SWEEP_NB):
+        rows.append(run_workload("burst", nb, args.n, args.seed))
+        rows.append(run_workload("poisson", nb, args.n, args.seed))
+
+    print(f"{'workload':>8s} {'nb':>6s} {'seq q/s':>9s} "
+          f"{'sched q/s':>10s} {'speedup':>8s} {'p50 ms':>8s} "
+          f"{'p99 ms':>8s}")
+    for r in rows:
+        print(f"{r['workload']:>8s} {r['nb']:6d} "
+              f"{r['sequential_qps']:9.2f} {r['scheduler_qps']:10.2f} "
+              f"{r['speedup']:8.2f} {r['p50_latency_ms']:8.2f} "
+              f"{r['p99_latency_ms']:8.2f}")
+
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    report = dict(bench="scheduler", block_rows=BLOCK_ROWS,
+                  n_queries=args.n, rows=rows)
+    name = ("BENCH_scheduler_quick.json" if args.quick
+            else "BENCH_scheduler.json")
+    (out_dir / name).write_text(json.dumps(report, indent=1,
+                                           default=float))
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        us = 1e6 / r["scheduler_qps"]
+        print(f"scheduler/{r['workload']}/served,{us:.2f},"
+              f"{r['speedup']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

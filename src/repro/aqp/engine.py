@@ -341,10 +341,17 @@ class _ScanViews:
     """
 
     def __init__(self, frame: "FastFrame", q: AggQuery,
-                 use_hist: Optional[bool] = None):
+                 use_hist: Optional[bool] = None, anchor: int = 0):
         self.frame = frame
         self.rep_q = q
         sc = frame.scramble
+        # Carousel anchor: the pass cursor position where this slot
+        # joined a shared walk. Its lap is [anchor, anchor + n_blocks) in
+        # pass-cursor coordinates — one full rotation of the scan order,
+        # so the skipped prefix is covered at the end of the lap. A solo
+        # run is the anchor=0 case.
+        self.anchor = anchor
+        self.lap_end = anchor + sc.n_blocks
         self.gcol, self.G = (None, 1)
         if q.group_by is not None:
             self.gcol, self.G = frame._composite_group(q.group_cols)
@@ -395,14 +402,15 @@ class _ScanViews:
         self.seen_presence += self.presence[idx].sum(axis=0)
 
     def update_exact(self, pos: Optional[int] = None) -> None:
-        """Mark fully-covered views exact; on sweep exhaustion
-        (``pos >= n_blocks``) also untainted views — an untainted view's
-        unprocessed blocks were all static-skipped (zero view rows),
-        whereas a tainted view lost member rows to activity skips and must
-        finish via the recovery pass (collapsing it early would overwrite
-        a valid frozen CI with a biased point estimate)."""
+        """Mark fully-covered views exact; on lap exhaustion
+        (``pos >= lap_end``, i.e. the cursor walked one full rotation
+        from this slot's anchor) also untainted views — an untainted
+        view's unprocessed blocks were all static-skipped (zero view
+        rows), whereas a tainted view lost member rows to activity skips
+        and must finish via the recovery pass (collapsing it early would
+        overwrite a valid frozen CI with a biased point estimate)."""
         cov = self.seen_presence >= self.presence_total
-        if pos is not None and pos >= self.frame.scramble.n_blocks:
+        if pos is not None and pos >= self.lap_end:
             cov = cov | ~self.tainted
         self.exact |= cov
 
@@ -493,19 +501,26 @@ class _QueryIntervals:
 
     def result(self, rounds: int, pos: int, cum_rows: np.ndarray,
                metrics: Dict[str, int], t0: float,
-               stopped_early: bool) -> QueryResult:
+               stopped_early: bool,
+               rows_covered: Optional[int] = None) -> QueryResult:
         """Build the QueryResult from the CURRENT slot/query state (the
-        arrays are copied, so the result is a consistent snapshot even if
-        a shared scan keeps mutating the slot afterwards — the serving
-        layer calls this the moment a query finishes)."""
+        arrays are copied — including ``count_seen``, which must not
+        alias the slot's live fold state — so the result is a consistent
+        snapshot even if a shared scan keeps mutating the slot afterwards
+        — the serving layer calls this the moment a query finishes).
+        ``rows_covered`` overrides the prefix-sum lookup for anchored
+        slots whose lap does not start at cursor position 0."""
         slot = self.slot
         counts = slot.counts
+        if rows_covered is None:
+            rows_covered = int(cum_rows[pos - 1]) if pos else 0
         return QueryResult(
             group_codes=np.arange(slot.G), estimate=self.est.copy(),
-            lo=self.lo.copy(), hi=self.hi.copy(), count_seen=counts,
+            lo=self.lo.copy(), hi=self.hi.copy(),
+            count_seen=counts.copy(),
             nonempty=counts > 0, exact=slot.exact.copy(),
             tainted=slot.tainted.copy(),
-            rows_covered=int(cum_rows[pos - 1]) if pos else 0,
+            rows_covered=rows_covered,
             blocks_fetched=slot.blocks_fetched,
             blocks_skipped_active=metrics["skipped_active"],
             blocks_skipped_static=metrics["skipped_static"],
@@ -1084,31 +1099,42 @@ class FastFrame:
 
     def _fused_accounting(self, order, pos, new_pos, ok, flags, presence,
                           tainted, lookahead, budget, cover_cap, probe,
-                          metrics):
+                          metrics, lap_end=None):
         """Host-side bookkeeping for one fused round: replicates the
         reference `_advance` skip/taint/probe accounting bit-for-bit from
         the per-position verdicts the kernel returned, and materializes
-        the selected block ids."""
+        the selected block ids.
+
+        ``lap_end`` clamps the accounting to one slot's carousel lap in a
+        shared pass whose cursor runs past ``n_blocks`` (late joiners):
+        window positions at or beyond the slot's lap end belong to other
+        slots' laps and must not count toward this slot's skip/taint/
+        probe metrics, nor appear in its selected block ids. The cursor
+        position maps to a block via ``order[position % n_blocks]``
+        (the scan order is a rotation for every anchor). Defaults to
+        ``n_blocks`` — the plain single-lap scan."""
         nb = order.shape[0]
+        end = nb if lap_end is None else lap_end
         if probe:
             # probe metric: the reference path probes whole lookahead
             # batches until the budget is met (or cap/end reached)
-            win_len = min(len(flags), nb - pos)
+            win_len = min(len(flags), end - pos)
             total, p = 0, 0
             while total < budget and p < win_len and p < cover_cap:
-                end = min(p + lookahead, win_len)
-                metrics["probes"] += end - p
-                total += int(flags[p:end].sum())
-                p = end
-        covered = new_pos - pos
+                e = min(p + lookahead, win_len)
+                metrics["probes"] += e - p
+                total += int(flags[p:e].sum())
+                p = e
+        covered = min(new_pos, end) - pos
         okc, flagsc = ok[:covered], flags[:covered]
         metrics["skipped_static"] += int((~okc).sum())
         act_skip = okc & ~flagsc
         metrics["skipped_active"] += int(act_skip.sum())
+        win_ids = order[(pos + np.arange(covered)) % nb]
         if act_skip.any():
-            tainted |= presence[order[pos:new_pos][act_skip]].any(axis=0)
+            tainted |= presence[win_ids[act_skip]].any(axis=0)
         sel = np.nonzero(flagsc)[0][:budget]
-        return (order[pos + sel] if sel.size
+        return (win_ids[sel] if sel.size
                 else np.zeros(0, dtype=np.int64))
 
     # -- recovery (soundness of termination) -----------------------------------

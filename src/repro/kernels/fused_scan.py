@@ -299,11 +299,14 @@ def _fold(v, g, m, center, a, b, num_groups, nbins, use_hist, impl,
     return kops.moments_from_sums(sums, vmin, vmax, center), hist
 
 
-def _budget_select(flags: jax.Array, pos: jax.Array, nb: int, window: int,
+def _budget_select(flags: jax.Array, pos: jax.Array, nb, window: int,
                    budget: int):
     """Budgeted selection, replicating the reference cursor bit-for-bit:
     take the first ``budget`` flagged blocks; the cursor cut is one past
-    the budget-th selected block, else the (nb-clamped) window end.
+    the budget-th selected block, else the (limit-clamped) window end.
+    ``nb`` is the cursor limit — the static block count for a plain scan,
+    or a traced i32 horizon for a carousel pass whose cursor runs past
+    the scramble length (late joiners walk a wrapped lap).
     Returns ``(take mask over the window, new_pos)``."""
     csum = jnp.cumsum(flags.astype(jnp.int32))
     take = flags & (csum <= budget)
@@ -311,19 +314,20 @@ def _budget_select(flags: jax.Array, pos: jax.Array, nb: int, window: int,
     cut = jnp.argmax((csum == budget) & flags).astype(jnp.int32)
     covered = jnp.where(n_sel >= budget, cut + 1,
                         jnp.minimum(jnp.int32(window),
-                                    jnp.int32(nb) - pos))
+                                    jnp.asarray(nb, jnp.int32) - pos))
     return take, pos + covered
 
 
 def _gather_blocks(take: jax.Array, win: jax.Array, window: int,
                    budget: int):
-    """Selected window positions -> padded block ids + padding-lane mask.
-    Padding lanes point at block 0 with ``tvalid`` False (their rows are
-    masked out of the fold)."""
+    """Selected window positions -> padded block ids + padding-lane mask
+    + window position per lane. Padding lanes point at block 0 with
+    ``tvalid`` False (their rows are masked out of the fold) and
+    ``take_idx`` = window."""
     take_idx = jnp.nonzero(take, size=budget, fill_value=window)[0]
     tvalid = take_idx < window
     blk = jnp.where(tvalid, win[jnp.minimum(take_idx, window - 1)], 0)
-    return blk, tvalid
+    return blk, tvalid, take_idx
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -368,7 +372,7 @@ def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
         flags = ok
 
     take, new_pos = _budget_select(flags, pos, nb, window, budget)
-    blk, tvalid = _gather_blocks(take, win, window, budget)
+    blk, tvalid, _ = _gather_blocks(take, win, window, budget)
     v = values[blk].reshape(-1)
     g = gids[blk].reshape(-1)
     m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
@@ -379,11 +383,12 @@ def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "nb", "window", "budget", "meta", "impl"))
+    "nb", "window", "budget", "meta", "impl", "wrap"))
 def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
                       static_ok: jax.Array, pos: jax.Array,
                       values, gids, words, active, *, nb: int, window: int,
-                      budget: int, meta, impl: str):
+                      budget: int, meta, impl: str, wrap: bool = False,
+                      limit=None, lap_ends=None):
     """One fused scan round shared by several queries (one device
     dispatch per round for a whole :class:`repro.serve.FrameServer`
     pass). All queries share the predicate mask, static prefilter and the
@@ -415,14 +420,31 @@ def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
     selection and fold are the same computation as :func:`fused_round`,
     so a served singleton stays bitwise identical to ``FastFrame.run``.
 
+    Carousel mode (``wrap=True``): the cursor position runs past ``nb``
+    and wraps around the scan order — a query admitted mid-scan gets a
+    slot *anchored* at the join position whose lap covers the skipped
+    prefix at the end of the walk. ``order_pad``'s tail must then be
+    wrap-filled (``order[:window]``), ``limit`` is the traced i32 pass
+    horizon (the max live-slot lap end) bounding ``in_range`` and the
+    budget clamp, and ``lap_ends`` is a length-S tuple of traced i32 lap
+    ends: a selected block at cursor position >= a slot's lap end is
+    fetched for the other slots but gated out of that slot's fold, so
+    each slot's state covers exactly its own lap.
+
     Returns ``(states, hists, flag_stacks, ok, new_pos)``: per-slot
     mergeable deltas (``hists[s]`` is None when the slot has no
     histogram), per-slot ``(Q_s, window)`` bool per-query activity
     verdicts, the shared static verdicts and the advanced cursor.
     """
     offs = jnp.arange(window, dtype=jnp.int32)
-    in_range = (pos + offs) < nb
-    win = jax.lax.dynamic_slice(order_pad, (pos,), (window,))
+    if wrap:
+        bound = jnp.asarray(limit, jnp.int32)
+        start = jax.lax.rem(pos, jnp.int32(nb))
+    else:
+        bound = nb
+        start = pos
+    in_range = (pos + offs) < bound
+    win = jax.lax.dynamic_slice(order_pad, (start,), (window,))
     ok = static_ok[win] & in_range
 
     flag_stacks = []
@@ -434,15 +456,21 @@ def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
         flag_stacks.append(fl)
         union = union | fl.any(axis=0)
 
-    take, new_pos = _budget_select(union, pos, nb, window, budget)
-    blk, tvalid = _gather_blocks(take, win, window, budget)
+    take, new_pos = _budget_select(union, pos, bound, window, budget)
+    blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
     m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
 
     states, hists = [], []
     for s, (num_groups, nbins, use_hist, a, b, center) in enumerate(meta):
+        if wrap:
+            gate = tvalid & ((pos + take_idx) < lap_ends[s])
+            m_s = (mask[blk] * gate[:, None].astype(jnp.float32)
+                   ).reshape(-1)
+        else:
+            m_s = m
         v = values[s][blk].reshape(-1)
         g = gids[s][blk].reshape(-1)
-        st, h = _fold(v, g, m, center, a, b, num_groups, nbins,
+        st, h = _fold(v, g, m_s, center, a, b, num_groups, nbins,
                       use_hist, impl)
         states.append(st)
         hists.append(h)
@@ -547,17 +575,24 @@ class QueryLoopCarry(NamedTuple):
 
 
 def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
-                budget: int):
+                budget: int, bound: Optional[int] = None,
+                wrap: bool = False):
     """Shared per-round cursor/selection plumbing: window slice, static
     verdicts, caller-supplied activity flags, budgeted selection and the
     covered-range accounting masks. ``flags_src(ok, win)`` returns the
-    activity-tested flags for this round."""
+    activity-tested flags for this round.
+
+    ``bound`` overrides the cursor limit (a carousel pass's horizon can
+    exceed ``nb``); ``wrap`` slices the order at ``pos % nb`` — the
+    order pad must then be wrap-filled (``order[:window]``)."""
     offs = jnp.arange(window, dtype=jnp.int32)
-    in_range = (pos + offs) < nb
-    win = jax.lax.dynamic_slice(bufs.order_pad, (pos,), (window,))
+    lim = nb if bound is None else bound
+    in_range = (pos + offs) < lim
+    start = jax.lax.rem(pos, jnp.int32(nb)) if wrap else pos
+    win = jax.lax.dynamic_slice(bufs.order_pad, (start,), (window,))
     ok = bufs.static_ok[win] & in_range
     flags = flags_src(ok, win)
-    take, new_pos = _budget_select(flags, pos, nb, window, budget)
+    take, new_pos = _budget_select(flags, pos, lim, window, budget)
     covmask = offs < (new_pos - pos)
     return win, ok, flags, take, new_pos, covmask
 
@@ -648,7 +683,7 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
 
         win, ok, flags, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
-        blk, tvalid = _gather_blocks(take, win, window, budget)
+        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
         if shard is not None:
             blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         v = bufs.values[blk].reshape(-1)
@@ -764,7 +799,7 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
 
         win, ok, flags, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
-        blk, tvalid = _gather_blocks(take, win, window, budget)
+        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
         blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         v = bufs.values[blk].reshape(-1)
         g = bufs.gids[blk].reshape(-1)
@@ -921,6 +956,17 @@ class SlotCarry(NamedTuple):
     pend_vmin: Optional[jax.Array] = None    # (G_s,) f64
     pend_vmax: Optional[jax.Array] = None    # (G_s,) f64
     pend_hist: Optional[jax.Array] = None    # (G_s, K) f64
+    # carousel-mode per-slot coverage/metrics (``lap_ends`` builds only,
+    # else None): slots anchored at different join positions fold — and
+    # therefore process, fetch and skip — different subsets of the
+    # union selection, so the shared pass-level counters cannot stand in
+    # for any one slot's bookkeeping.
+    processed: Optional[jax.Array] = None       # (nb,) bool
+    blocks_fetched: Optional[jax.Array] = None  # i64
+    skipped_static: Optional[jax.Array] = None  # i64
+    skipped_active: Optional[jax.Array] = None  # i64
+    probes: Optional[jax.Array] = None          # i64
+    lap_rounds: Optional[jax.Array] = None      # i32 round the lap ended
 
 
 class PassQueryCarry(NamedTuple):
@@ -998,7 +1044,12 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     slot_specs: Sequence[SlotSpec],
                     refresh_fns: Sequence[Sequence[Callable]],
                     any_probe: bool,
-                    shard: Optional[ShardInfo] = None) -> Callable:
+                    shard: Optional[ShardInfo] = None,
+                    horizon: Optional[int] = None, wrap: bool = False,
+                    lap_ends: Optional[Sequence[int]] = None,
+                    round_offsets: Optional[Sequence[int]] = None,
+                    row_offsets: Optional[Sequence[int]] = None
+                    ) -> Callable:
     """Build the jitted device-resident loop for one FrameServer pass
     (S slots, each with its own queries, sharing one cursor walk).
 
@@ -1025,13 +1076,38 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
     unfinished query, and finish-time snapshots recorded at merges (a
     query's result reflects exactly the merged rounds that terminated
     it).
+
+    **Carousel mode** (``lap_ends`` given): the pass is a wrapped-cursor
+    "carousel" whose slots were admitted at different scan positions
+    (:class:`repro.serve.FrameServer` continuous batching). The cursor
+    runs in unwrapped pass coordinates up to the static ``horizon`` (the
+    max live ``lap_end``), the order pad is wrap-filled so the window
+    slice at ``pos % nb`` is a rotation of the scan order, and every
+    slot replays its solo scan exactly inside its own lap
+    ``[anchor, lap_ends[s])``: folds / coverage / taint / metrics gate
+    each selected lane on ``pos + lane < lap_ends[s]`` (per-slot carry
+    fields in :class:`SlotCarry`), CI refreshes of a slot that already
+    finished its lap are suppressed (its queries wait for the host
+    recovery pass, like a solo run exiting its loop at exhaustion), and
+    refreshes use slot-local round/row counts via the static
+    ``round_offsets[s]`` (pass rounds already elapsed at admission) and
+    ``row_offsets[s]`` (rows before the slot's anchor, in pass
+    coordinates; per-position rows are periodic with period ``nb`` so
+    ``cum_rows`` needs no extension). Not composable with ``shard``.
     """
     cadence = shard is not None and shard.merge_every > 1
+    gated = lap_ends is not None
+    bound = nb if horizon is None else horizon
+    if (gated or wrap) and shard is not None:
+        raise ValueError(
+            "carousel pass loops (anchored slots) do not compose with "
+            "the sharded device loop; step anchored passes on host")
     i32 = jnp.int32
     i64 = jnp.int64
 
     def body(bufs, c: PassCarry) -> PassCarry:
         k = c.rounds + 1
+        offs = jnp.arange(window, dtype=i32)
 
         def flags_src(ok, win):
             union = jnp.zeros((window,), bool)
@@ -1049,39 +1125,68 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
             return union
 
         win, ok, union, take, new_pos, covmask = _round_scan(
-            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
-        blk, tvalid = _gather_blocks(take, win, window, budget)
+            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget,
+            bound=None if horizon is None else bound, wrap=wrap)
+        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
         if shard is not None:
             blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         m = (bufs.mask[blk]
              * tvalid[:, None].astype(jnp.float32)).reshape(-1)
 
-        # -- shared accounting (union flags; twin of the host pass) ------
-        okc = ok & covmask
-        unionc = union & covmask
-        act_skip = okc & ~unionc
-        skipped_static = (c.skipped_static
-                          + (~ok & covmask).sum(dtype=i64))
-        skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
-        probes = c.probes
-        if any_probe:
-            probes = probes + _probe_cost(union, c.pos, nb, window,
-                                          budget, lookahead, cover_cap)
-        processed = c.processed.at[win].max(take)
-        blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
+        if gated:
+            # carousel: all coverage/metric accounting is per-slot (each
+            # slot only owns the selection inside its own lap); the
+            # shared pass-level counters just ride along unchanged
+            skipped_static = c.skipped_static
+            skipped_active = c.skipped_active
+            probes = c.probes
+            processed = c.processed
+            blocks_fetched = c.blocks_fetched
+            act_skip = None
+            r = None
+            R_total = bufs.cum_rows[nb - 1]
+        else:
+            # -- shared accounting (union flags; twin of the host pass) --
+            okc = ok & covmask
+            unionc = union & covmask
+            act_skip = okc & ~unionc
+            skipped_static = (c.skipped_static
+                              + (~ok & covmask).sum(dtype=i64))
+            skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
+            probes = c.probes
+            if any_probe:
+                probes = probes + _probe_cost(union, c.pos, nb, window,
+                                              budget, lookahead,
+                                              cover_cap)
+            processed = c.processed.at[win].max(take)
+            blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
 
-        r = jnp.where(new_pos > 0,
-                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
-                      0).astype(jnp.float64)
+            r = jnp.where(new_pos > 0,
+                          bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
+                          0).astype(jnp.float64)
 
         new_slots = []
         new_queries = []
         n_live = c.n_live
         for s, spec in enumerate(slot_specs):
             sc = c.slots[s]
+            if gated:
+                le = lap_ends[s]
+                in_lap = c.pos < le
+                gate = tvalid & ((c.pos + take_idx) < le)
+                lane_in = (c.pos + offs) < le
+                covmask_s = covmask & lane_in
+                take_s = take & lane_in
+                m_s = (bufs.mask[blk]
+                       * gate[:, None].astype(jnp.float32)).reshape(-1)
+                act_skip_s = (ok & covmask_s) & ~union
+            else:
+                le = nb
+                covmask_s, take_s, m_s = covmask, take, m
+                act_skip_s = act_skip
             v = bufs.values[s][blk].reshape(-1)
             g = bufs.gids[s][blk].reshape(-1)
-            dstate, dhist = _fold(v, g, m, spec.center, spec.a, spec.b,
+            dstate, dhist = _fold(v, g, m_s, spec.center, spec.a, spec.b,
                                   spec.num_groups, spec.nbins,
                                   spec.use_hist, impl,
                                   shard_axes=shard.axes if shard else None)
@@ -1090,43 +1195,89 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     if spec.use_hist else sc.hist)
             pres_win = bufs.presence[s][win]
             tainted = sc.tainted | (pres_win
-                                    & act_skip[:, None]).any(axis=0)
+                                    & act_skip_s[:, None]).any(axis=0)
             seen_presence = sc.seen_presence + (
-                pres_win & take[:, None]).sum(axis=0, dtype=i32)
+                pres_win & take_s[:, None]).sum(axis=0, dtype=i32)
             cov = seen_presence >= bufs.presence_total[s]
-            cov = cov | ((new_pos >= nb) & ~tainted)
+            cov = cov | ((new_pos >= le) & ~tainted)
             exact = sc.exact | cov
+            if gated:
+                # per-slot metrics: exactly the blocks/probes the slot's
+                # solo run would have paid inside its lap
+                s_probes = sc.probes
+                if spec.probe:
+                    s_probes = s_probes + _probe_cost(
+                        union, c.pos, le, window, budget, lookahead,
+                        cover_cap)
+                slot_extra = dict(
+                    processed=sc.processed.at[win].max(take_s),
+                    blocks_fetched=(sc.blocks_fetched
+                                    + take_s.sum(dtype=i64)),
+                    skipped_static=(sc.skipped_static
+                                    + (~ok & covmask_s).sum(dtype=i64)),
+                    skipped_active=(sc.skipped_active
+                                    + act_skip_s.sum(dtype=i64)),
+                    probes=s_probes,
+                    lap_rounds=jnp.where(in_lap & (new_pos >= le), k,
+                                         sc.lap_rounds))
+                s_blocks_fetched = slot_extra["blocks_fetched"]
+                s_skipped_static = slot_extra["skipped_static"]
+                s_skipped_active = slot_extra["skipped_active"]
+                # slot-local round index and row coverage: rows over pass
+                # positions are periodic with period nb (one lap = the
+                # whole scramble), so rows(p) needs only cum_rows + laps
+                p_end = jnp.minimum(new_pos, le)
+                pm1 = p_end - 1
+                rows_abs = jnp.where(
+                    p_end > 0,
+                    (pm1 // nb).astype(i64) * R_total
+                    + bufs.cum_rows[pm1 % nb],
+                    jnp.asarray(0, i64))
+                r_s = (rows_abs - row_offsets[s]).astype(jnp.float64)
+                k_s = k - round_offsets[s]
+            else:
+                slot_extra = {}
+                s_blocks_fetched = blocks_fetched
+                s_skipped_static = skipped_static
+                s_skipped_active = skipped_active
+                s_probes = probes
+                r_s = r
+                k_s = k
             new_slots.append(SlotCarry(
                 state=state, hist=hist, seen_presence=seen_presence,
-                tainted=tainted, exact=exact))
+                tainted=tainted, exact=exact, **slot_extra))
 
             slot_queries = []
             for qi, qc in enumerate(c.queries[s]):
                 nlo, nhi, nest, nrefr, nact = refresh_fns[s][qi](
-                    k, r, state, hist, tainted, exact, qc.lo, qc.hi,
+                    k_s, r_s, state, hist, tainted, exact, qc.lo, qc.hi,
                     qc.est, qc.refreshed, qc.active)
                 fin = qc.finished
-                lo = jnp.where(fin, qc.lo, nlo)
-                hi = jnp.where(fin, qc.hi, nhi)
-                est = jnp.where(fin, qc.est, nest)
-                refreshed = jnp.where(fin, qc.refreshed, nrefr)
-                active = jnp.where(fin, qc.active, nact)
+                # a lapped carousel slot stops refreshing (its solo twin
+                # exited the loop at exhaustion); queries still active
+                # there await the host recovery pass
+                skip = fin if not gated else (fin | ~in_lap)
+                lo = jnp.where(skip, qc.lo, nlo)
+                hi = jnp.where(skip, qc.hi, nhi)
+                est = jnp.where(skip, qc.est, nest)
+                refreshed = jnp.where(skip, qc.refreshed, nrefr)
+                active = jnp.where(skip, qc.active, nact)
                 now_fin = ~fin & ~active.any()
                 n_live = n_live - now_fin.astype(i32)
                 snap = lambda new, old: jnp.where(now_fin, new, old)
                 slot_queries.append(PassQueryCarry(
                     lo=lo, hi=hi, est=est, refreshed=refreshed,
                     active=active, finished=fin | now_fin,
-                    stopped_early=snap(new_pos < nb, qc.stopped_early),
-                    finish_rounds=snap(k, qc.finish_rounds),
+                    stopped_early=snap(new_pos < le, qc.stopped_early),
+                    finish_rounds=snap(k_s, qc.finish_rounds),
                     finish_pos=snap(new_pos, qc.finish_pos),
                     finish_blocks_fetched=snap(
-                        blocks_fetched, qc.finish_blocks_fetched),
+                        s_blocks_fetched, qc.finish_blocks_fetched),
                     finish_skipped_static=snap(
-                        skipped_static, qc.finish_skipped_static),
+                        s_skipped_static, qc.finish_skipped_static),
                     finish_skipped_active=snap(
-                        skipped_active, qc.finish_skipped_active),
-                    finish_probes=snap(probes, qc.finish_probes),
+                        s_skipped_active, qc.finish_skipped_active),
+                    finish_probes=snap(s_probes, qc.finish_probes),
                     snap_counts=snap(state.count, qc.snap_counts),
                     snap_exact=snap(exact, qc.snap_exact),
                     snap_tainted=snap(tainted, qc.snap_tainted)))
@@ -1234,7 +1385,7 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
 
         win, ok, union, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
-        blk, tvalid = _gather_blocks(take, win, window, budget)
+        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
         blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         m = (bufs.mask[blk]
              * tvalid[:, None].astype(jnp.float32)).reshape(-1)
@@ -1316,7 +1467,7 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
     loop_body = cadence_body if cadence else body
 
     def cond(c: PassCarry):
-        go = (c.pos < nb) & (c.rounds < max_rounds) & (c.n_live > 0)
+        go = (c.pos < bound) & (c.rounds < max_rounds) & (c.n_live > 0)
         if chunk is not None:
             go = go & (c.it < chunk)
         return go

@@ -1,10 +1,17 @@
 """repro.serve — query serving layer.
 
 :class:`FrameServer` plans batches of concurrent aggregate queries over
-one :class:`~repro.aqp.engine.FastFrame` into shared fused-scan passes
-(see :mod:`repro.serve.frame_server` and ``docs/serving.md``).
+one :class:`~repro.aqp.engine.FastFrame` into shared fused-scan passes;
+:class:`SharedPass` exposes the incremental admit/step/retire/finish
+lifecycle underneath, and :class:`QueryScheduler` turns it into a
+continuous-batching serving loop with simulated or wall clocks (see
+:mod:`repro.serve.frame_server`, :mod:`repro.serve.scheduler` and
+``docs/serving.md``).
 """
 
-from repro.serve.frame_server import FrameServer
+from repro.serve.frame_server import FrameServer, SharedPass
+from repro.serve.scheduler import (AdmissionQuote, QueryScheduler,
+                                   QueryTicket, SimClock, WallClock)
 
-__all__ = ["FrameServer"]
+__all__ = ["FrameServer", "SharedPass", "QueryScheduler", "QueryTicket",
+           "AdmissionQuote", "SimClock", "WallClock"]

@@ -23,19 +23,50 @@ the same scramble. :class:`FrameServer` amortizes it three ways:
      _QueryIntervals` (OptStop schedule, CI refresh, stopping condition),
      which is the cheap part of a round.
 
+A pass is no longer a static batch: :class:`SharedPass` exposes the
+lifecycle as **admit / step / retire / finish**, so a serving loop
+(:mod:`repro.serve.scheduler`) can feed queries into an in-flight cursor
+walk continuously:
+
+  * ``admit`` at any round boundary anchors a new slot at the current
+    cursor position. The pass cursor then runs past ``n_blocks`` in
+    unwrapped *pass coordinates* — a "carousel": each slot's lap is
+    ``[anchor, anchor + n_blocks)``, the block under cursor position
+    ``p`` is ``order[p % n_blocks]``, and a late joiner pays only the
+    blocks it missed (its skipped prefix comes around at the end of its
+    lap; fetches are shared with whatever other slots select meanwhile).
+    Because the scan order is a rotation for every anchor, a slot's lap
+    replays the solo scan ``engine.run(start_block=(start + anchor) %
+    n_blocks)`` — for slots whose selection is membership-independent
+    (non-probe slots, or probe slots whose queries share one activity
+    evolution) the fold/coverage/taint sequence, and therefore every
+    finished query's :class:`~repro.aqp.query.QueryResult`, is bitwise
+    identical to that solo run.
+  * ``step`` runs one round (host) or one dispatch chunk (device loop),
+    snapshotting each query's result the moment it finishes.
+  * ``retire`` drops slots whose queries have all finished, freeing fold
+    width for the next admission (``run_batch`` never retires — a static
+    batch keeps its dispatch shapes stable).
+  * ``finish`` runs the shared recovery pass for queries still active at
+    lap exhaustion and assembles the remaining results.
+
 Under the device-resident pass loop, a frame with a sharded block
 layout (``EngineConfig.shard_rows``; :mod:`repro.aqp.distributed`) runs
 the whole pass SHARDED over the device mesh: each slot's value/group
 slabs are row-sharded, selection and per-query interval state stay
 replicated, and every slot's per-round fold delta merges across the
 mesh inside the ``lax.while_loop`` carry (see ``docs/architecture.md``).
+Anchored (carousel) passes do not compose with the sharded loop; a
+scheduler over a sharded frame steps its passes on host.
 
 Soundness: a pass skips a block only when NO query in it has an active
 view there, so each query's skipped blocks contain only views inactive
 for that query — exactly the single-query taint invariant, enforced per
 query by the shared accounting. Every query keeps its own delta schedule
-(evaluated at the shared pass round number, a valid OptStop schedule),
-and the recovery pass finishes any view left active at exhaustion.
+(evaluated at its slot-local OptStop round number, a valid schedule),
+and the recovery pass finishes any view left active at lap exhaustion.
+A late-joining slot is never marked exact before its own lap covers the
+prefix it skipped (`_ScanViews.lap_end` gates exhaustion-exactness).
 
 A batch containing a single query (or a pass whose slots reduce to one
 query) runs the same selection/fold computation as ``FastFrame.run`` and
@@ -62,12 +93,17 @@ from repro.core.state import MomentState
 from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
 
-__all__ = ["FrameServer"]
+__all__ = ["FrameServer", "SharedPass"]
 
 
 class _SlotExec:
     """One (filters, column, group-by) signature inside a pass: the shared
     fold state plus the device buffers and per-query interval states.
+
+    ``anchor`` is the pass-cursor position where the slot was admitted
+    (its lap is ``[anchor, anchor + n_blocks)``; 0 for a static batch)
+    and ``join_round`` the pass round count at admission, so slot-local
+    OptStop rounds are ``pass_rounds - join_round``.
 
     ``shards`` (a :class:`repro.aqp.distributed.BlockShards`) row-shards
     the slot's value/group slabs over the mesh for the sharded device
@@ -75,10 +111,17 @@ class _SlotExec:
     selection are replicated computations)."""
 
     def __init__(self, frame: FastFrame, rep_q: AggQuery, skipping: bool,
-                 queries: Sequence[AggQuery], shards=None):
+                 queries: Sequence[AggQuery], shards=None,
+                 anchor: int = 0, join_round: int = 0,
+                 row_offset: int = 0):
         use_hist_any = any(q.needs_hist for q in queries)
-        self.views = _ScanViews(frame, rep_q, use_hist=use_hist_any)
+        self.views = _ScanViews(frame, rep_q, use_hist=use_hist_any,
+                                anchor=anchor)
         self.qcis = [_QueryIntervals(frame, q, self.views) for q in queries]
+        self.anchor = anchor
+        self.join_round = join_round
+        self.row_offset = row_offset   # rows before anchor, pass coords
+        self.lap_done_round = None     # pass round when the lap completed
         v = self.views
         # probe slots activity-test their real group bitmap; non-probe
         # slots (no GROUP BY, or non-skipping sampling) carry an all-ones
@@ -106,6 +149,535 @@ class _SlotExec:
         return jnp.asarray(np.stack(rows))
 
 
+class SharedPass:
+    """One shared cursor walk with a continuous admit/step/retire/finish
+    lifecycle (the carousel described in the module docstring).
+
+    Construct via :meth:`FrameServer.open_pass`; all queries of a pass
+    must share their filters. ``chunk_rounds`` overrides the device-loop
+    dispatch granularity (``EngineConfig.sync_every``/``chunk_rounds``)
+    — a scheduler uses small chunks so admission boundaries come up
+    often; ``run_batch`` keeps the config default and runs to
+    completion."""
+
+    def __init__(self, frame: FastFrame, filters, sampling: str,
+                 start_block: Optional[int], seed: int, max_rounds: int,
+                 chunk_rounds: Optional[int] = None):
+        self.t0 = time.perf_counter()
+        self.frame = frame
+        cfg = frame.config
+        self.cfg = cfg
+        sc = frame.scramble
+        self.nb = sc.n_blocks
+        self.filters = tuple(filters)
+        self.sampling = sampling
+        self.max_rounds = max_rounds
+        rng = np.random.default_rng(seed)
+        self.start = (rng.integers(self.nb) if start_block is None
+                      else start_block)
+        self.order = (self.start + np.arange(self.nb)) % self.nb
+        self.cum_rows = np.cumsum(frame._valid_counts[self.order])
+        self.R_total = int(self.cum_rows[-1])
+
+        self.skipping = sampling in ("active_peek", "active_sync")
+        self.lookahead = (cfg.sync_lookahead_blocks
+                          if sampling == "active_sync"
+                          else cfg.lookahead_blocks)
+        self.cover_cap = cfg.round_blocks * cfg.cover_cap_factor
+        self.window = _round_window(self.nb, self.lookahead,
+                                    self.cover_cap)
+        self.impl = kops.resolve_impl(cfg.impl)
+        self.device_pass = cfg.resolve_device_loop()
+        if cfg.shard_rows:
+            cfg.resolve_shard_rows()  # loud guard, as in FastFrame.run
+        # the sharded layout applies to the device pass loop only (the
+        # host loop and the recovery pass materialize on host)
+        self.shards = frame.block_shards() if self.device_pass else None
+        self.chunk = (chunk_rounds if chunk_rounds is not None
+                      else (cfg.sync_every or cfg.chunk_rounds))
+
+        # wrap-filled order pad: the window slice at ``pos % nb`` is a
+        # rotation of the scan order, so the pad never grows when late
+        # admissions push the horizon past nb (static dispatch shapes
+        # forever). For the non-wrap path the tail is invisible — the
+        # in-range mask zeroes every lane past the cursor limit.
+        opad = np.zeros(self.nb + self.window, np.int32)
+        opad[:self.nb] = self.order
+        opad[self.nb:] = self.order[np.arange(self.window) % self.nb]
+        rep = lambda a: adist.place_replicated(self.shards, a)
+        self._rep = rep
+        self.order_pad_dev = rep(opad)
+        self.mask_dev = None      # set on first admit (needs a query)
+        self.static_ok_dev = None
+
+        self.pos = 0
+        self.rounds = 0
+        self.n_live = 0
+        self.wrap = False         # sticky: any slot anchored past 0
+        self.slots: List[_SlotExec] = []
+        self.finished: Dict[int, QueryResult] = {}  # id(qci) -> result
+        self._qc_of: Dict[int, _QueryIntervals] = {}  # id(query) -> qci
+        self._t0: Dict[int, float] = {}             # id(qci) -> t0
+        self._rec_rounds: Dict[int, int] = {}       # id(slot) -> rounds
+
+    # -- coordinates -----------------------------------------------------------
+
+    def _rows_at(self, p: int) -> int:
+        """Valid rows under pass-cursor positions ``[0, p)``. Rows are
+        periodic in the lap length, so no extended prefix sums needed."""
+        if p <= 0:
+            return 0
+        laps, rem = divmod(p - 1, self.nb)
+        return laps * self.R_total + int(self.cum_rows[rem])
+
+    @property
+    def horizon(self) -> int:
+        """Static cursor limit: the furthest live lap end."""
+        return max((s.views.lap_end for s in self.slots), default=self.nb)
+
+    @property
+    def can_step(self) -> bool:
+        """True while stepping can still progress some unfinished query
+        (queries stuck active past their lap end wait for the recovery
+        pass in :meth:`finish`)."""
+        if self.rounds >= self.max_rounds or self.n_live == 0:
+            return False
+        return any(not qc.finished and self.pos < s.views.lap_end
+                   for s in self.slots for qc in s.qcis)
+
+    # -- admit -----------------------------------------------------------------
+
+    def admit(self, queries: Sequence[AggQuery],
+              t0: Optional[float] = None) -> List[_QueryIntervals]:
+        """Admit queries at the current round boundary. Queries sharing a
+        scan signature form one slot anchored at the current cursor
+        position (merged into a same-signature slot created at this same
+        boundary, if histogram needs allow). Returns the new
+        :class:`~repro.aqp.engine._QueryIntervals` in input order."""
+        frame = self.frame
+        t0 = self.t0 if t0 is None else t0
+        for q in queries:
+            if tuple(f.key() for f in q.filters) != tuple(
+                    f.key() for f in self.filters):
+                raise ValueError("query filters do not match this pass")
+        by_sig: Dict[Tuple, List[AggQuery]] = {}
+        for q in queries:
+            by_sig.setdefault(q.scan_signature(), []).append(q)
+        out_qcis: Dict[int, _QueryIntervals] = {}
+        for sig, qs in by_sig.items():
+            slot = next(
+                (s for s in self.slots
+                 if s.anchor == self.pos and s.join_round == self.rounds
+                 and s.views.rep_q.scan_signature() == sig
+                 and (s.views.use_hist
+                      or not any(q.needs_hist for q in qs))),
+                None)
+            if slot is not None:
+                new = [_QueryIntervals(frame, q, slot.views) for q in qs]
+                slot.qcis.extend(new)
+            else:
+                slot = _SlotExec(
+                    frame, qs[0], self.skipping, qs, self.shards,
+                    anchor=self.pos, join_round=self.rounds,
+                    row_offset=self._rows_at(self.pos))
+                if self.pos > 0:
+                    self.wrap = True
+                self.slots.append(slot)
+                new = slot.qcis[-len(qs):]
+            for q, qc in zip(qs, new):
+                self._qc_of[id(q)] = qc
+                self._t0[id(qc)] = t0
+                out_qcis[id(q)] = qc
+            self.n_live += len(qs)
+        if self.mask_dev is None:
+            self.mask_dev = frame._device_mask(queries[0].filters,
+                                               self.shards)
+            self.static_ok_dev = self._rep(self.slots[0].views.static_ok)
+        if self.wrap and self.shards is not None:
+            raise RuntimeError(
+                "carousel admission (anchor > 0) is not supported on a "
+                "sharded frame's device pass loop; disable shard_rows or "
+                "step the pass on host (device_loop=False)")
+        return [out_qcis[id(q)] for q in queries]
+
+    # -- retire ----------------------------------------------------------------
+
+    def retire(self) -> int:
+        """Drop slots whose queries have all finished, freeing their fold
+        width (and device dispatch shapes) for the next admission.
+        Called by the scheduler at admission boundaries; ``run_batch``
+        keeps its slots static."""
+        keep = [s for s in self.slots
+                if not all(id(qc) in self.finished for qc in s.qcis)]
+        dropped = len(self.slots) - len(keep)
+        self.slots = keep
+        return dropped
+
+    # -- step ------------------------------------------------------------------
+
+    def step(self) -> List[AggQuery]:
+        """Advance the pass one round (host loop) or one dispatch chunk
+        (device loop); returns the queries that finished during it."""
+        if self.device_pass:
+            return self._device_step(until_done=False)
+        return self._step_host()
+
+    def run_to_completion(self) -> None:
+        """Step until no unfinished query can progress (static-batch
+        driver; the device path keeps its carry resident across chunk
+        dispatches and writes back once, exactly the ``run_batch``
+        behavior)."""
+        if self.device_pass:
+            self._device_step(until_done=True)
+        else:
+            while self.can_step:
+                self._step_host()
+
+    def _step_host(self) -> List[AggQuery]:
+        frame = self.frame
+        cfg = self.cfg
+        pos0 = self.pos
+        self.rounds += 1
+        stacks = tuple(s.active_stack() for s in self.slots)
+        kwargs = {}
+        if self.wrap:
+            kwargs = dict(
+                wrap=True,
+                limit=jnp.asarray(self.horizon, jnp.int32),
+                lap_ends=tuple(jnp.asarray(s.views.lap_end, jnp.int32)
+                               for s in self.slots))
+        states, hists, flag_stacks, ok_d, new_pos_d = \
+            kfused.fused_round_multi(
+                self.mask_dev, self.order_pad_dev, self.static_ok_dev,
+                jnp.asarray(pos0, jnp.int32),
+                tuple(s.values for s in self.slots),
+                tuple(s.gids for s in self.slots),
+                tuple(s.words for s in self.slots), stacks,
+                nb=self.nb, window=self.window,
+                budget=cfg.round_blocks,
+                meta=tuple(s.meta for s in self.slots), impl=self.impl,
+                **kwargs)
+        ok = np.asarray(ok_d)
+        new_pos = int(new_pos_d)
+        union = np.logical_or.reduce(
+            [np.asarray(fl).any(axis=0) for fl in flag_stacks])
+        for s, st, h in zip(self.slots, states, hists):
+            le = s.views.lap_end
+            if pos0 >= le:
+                continue  # lapped: no selection lane belongs to it
+            idx = frame._fused_accounting(
+                self.order, pos0, new_pos, ok, union, s.views.presence,
+                s.views.tainted, self.lookahead, cfg.round_blocks,
+                self.cover_cap, s.probe, s.metrics,
+                lap_end=None if not self.wrap else le)
+            if len(idx):
+                s.views.ingest_delta(idx, st, h)
+            s.views.update_exact(new_pos)
+            if new_pos >= le and s.lap_done_round is None:
+                s.lap_done_round = self.rounds
+        self.pos = new_pos
+        newly: List[AggQuery] = []
+        for s in self.slots:
+            le = s.views.lap_end
+            if pos0 >= le:
+                continue  # a lapped slot's solo twin exited its loop
+            k_s = self.rounds - s.join_round
+            r_s = self._rows_at(min(new_pos, le)) - s.row_offset
+            for qc in s.qcis:
+                if qc.finished:
+                    continue
+                qc.refresh(k_s, r_s)
+                if not qc.update_active():
+                    qc.finished = True
+                    self.n_live -= 1
+                    self.finished[id(qc)] = qc.result(
+                        k_s, new_pos, self.cum_rows, dict(s.metrics),
+                        self._t0[id(qc)], stopped_early=new_pos < le,
+                        rows_covered=r_s)
+                    newly.append(qc.q)
+        return newly
+
+    # -- finish ----------------------------------------------------------------
+
+    def finish(self) -> None:
+        """Recovery per slot for queries that exhausted their lap while
+        still active (shared block fetches across the slot's queries),
+        then assemble their results. Idempotent per slot."""
+        frame = self.frame
+        for s in self.slots:
+            rec = [qc for qc in s.qcis if not qc.finished]
+            if rec and id(s) not in self._rec_rounds:
+                base = (s.lap_done_round - s.join_round
+                        if s.lap_done_round is not None
+                        else self.rounds - s.join_round)
+                self._rec_rounds[id(s)] = frame._recovery_pass(
+                    s.views, rec, base, self.max_rounds)
+            for qc in s.qcis:
+                if id(qc) in self.finished:
+                    continue
+                qc.collapse_exact()
+                le = s.views.lap_end
+                r_s = self._rows_at(min(self.pos, le)) - s.row_offset
+                local = self._rec_rounds.get(
+                    id(s), self.rounds - s.join_round)
+                self.finished[id(qc)] = qc.result(
+                    local, self.pos, self.cum_rows, s.metrics,
+                    self._t0[id(qc)], False, rows_covered=r_s)
+                qc.finished = True
+
+    def result_of(self, q: AggQuery) -> QueryResult:
+        return self.finished[id(self._qc_of[id(q)])]
+
+    # -- device-resident stepping ----------------------------------------------
+
+    def _device_step(self, until_done: bool) -> List[AggQuery]:
+        """Run the pass's round loop device-resident
+        (:func:`repro.kernels.fused_scan.build_pass_loop`).
+
+        ``until_done=True`` keeps the carry device-resident across chunk
+        dispatches and writes back once (the ``run_batch`` whole-pass
+        behavior). ``until_done=False`` runs ONE chunk dispatch and
+        writes the carry back to host so admission/retirement can change
+        the slot membership before the next step; the loop is rebuilt
+        (and LRU-cached) per membership epoch — anchors, lap ends and
+        round offsets are static in the trace."""
+        frame = self.frame
+        cfg = self.cfg
+        nb = self.nb
+        slots = self.slots
+        shards = self.shards
+        wrap = self.wrap
+        if wrap and shards is not None:
+            raise RuntimeError(
+                "carousel passes do not compose with the sharded device "
+                "loop")
+        horizon = self.horizon
+        bound = horizon if wrap else nb
+        f64 = lambda x: jnp.asarray(x, jnp.float64)
+        i32 = lambda v: jnp.asarray(v, jnp.int32)
+        i64 = lambda v: jnp.asarray(v, jnp.int64)
+        rep = self._rep
+
+        # the compiled pass loop (+ its order-independent device buffers)
+        # is cached on the frame by the pass's static identity: repeat
+        # batches / epochs reuse the traced lax.while_loop
+        key = ("pass",
+               tuple((qc.q.scan_signature(), qc.q.agg, qc.q.bounder,
+                      qc.q.rangetrim, qc.q.delta, repr(qc.q.stop))
+                     for s in slots for qc in s.qcis),
+               tuple((len(s.qcis), s.probe, s.views.use_hist)
+                     for s in slots),
+               self.lookahead, self.max_rounds, self.chunk,
+               (shards.n_shards, shards.shard_blocks, shards.merge_every)
+               if shards is not None else None,
+               (wrap, horizon,
+                tuple(s.anchor for s in slots),
+                tuple(s.join_round for s in slots)) if wrap else None)
+
+        def build():
+            slot_specs = tuple(
+                kfused.SlotSpec(
+                    num_groups=s.views.G, nbins=cfg.hist_bins,
+                    use_hist=s.views.use_hist, a=float(s.views.a),
+                    b=float(s.views.b), center=float(s.views.center),
+                    probe=s.probe, n_words=int(s.words.shape[1]))
+                for s in slots)
+            refresh_fns = tuple(
+                tuple(_make_device_refresh(qc.q, qc, s.views.a,
+                                           s.views.b, qc.use_hist,
+                                           float(qc.R), s.views.valid)
+                      for qc in s.qcis)
+                for s in slots)
+            chunk_fn = kfused.build_pass_loop(
+                nb=nb, window=self.window, budget=cfg.round_blocks,
+                impl=self.impl, lookahead=self.lookahead,
+                cover_cap=self.cover_cap, max_rounds=self.max_rounds,
+                chunk=self.chunk, slot_specs=slot_specs,
+                refresh_fns=refresh_fns,
+                any_probe=any(s.probe for s in slots),
+                shard=shards.info if shards is not None else None,
+                horizon=horizon if wrap else None, wrap=wrap,
+                lap_ends=(tuple(s.views.lap_end for s in slots)
+                          if wrap else None),
+                round_offsets=(tuple(s.join_round for s in slots)
+                               if wrap else None),
+                row_offsets=(tuple(s.row_offset for s in slots)
+                             if wrap else None))
+            presence = tuple(rep(s.views.presence) for s in slots)
+            presence_total = tuple(
+                rep(s.views.presence_total.astype(np.int32))
+                for s in slots)
+            return chunk_fn, presence, presence_total
+
+        chunk_fn, presence_t, presence_total_t = \
+            frame.device_loops.get_or_build(key, build)
+
+        bufs = kfused.PassLoopBuffers(
+            mask=self.mask_dev, order_pad=self.order_pad_dev,
+            static_ok=self.static_ok_dev,
+            cum_rows=rep(self.cum_rows.astype(np.int64)),
+            values=tuple(s.values for s in slots),
+            gids=tuple(s.gids for s in slots),
+            words=tuple(s.words for s in slots),
+            presence=presence_t, presence_total=presence_total_t)
+        cadence = shards is not None and shards.merge_every > 1
+
+        def _slot_pend(s):
+            # collective-cadence pending slots: empty local delta
+            if not cadence:
+                return {}
+            G = s.views.G
+            return dict(
+                pend_sums=jnp.zeros((3, G), jnp.float64),
+                pend_vmin=jnp.full((G,), np.inf, jnp.float64),
+                pend_vmax=jnp.full((G,), -np.inf, jnp.float64),
+                pend_hist=(jnp.zeros((G, cfg.hist_bins), jnp.float64)
+                           if s.views.use_hist else None))
+
+        def _slot_wrap(s):
+            # carousel per-slot coverage/metrics, held ABSOLUTE in the
+            # carry (initialized from host state, written back as-is)
+            if not wrap:
+                return {}
+            return dict(
+                processed=jnp.asarray(s.views.processed),
+                blocks_fetched=i64(s.views.blocks_fetched),
+                skipped_static=i64(s.metrics["skipped_static"]),
+                skipped_active=i64(s.metrics["skipped_active"]),
+                probes=i64(s.metrics["probes"]),
+                lap_rounds=i32(s.lap_done_round or 0))
+
+        slot_carries = tuple(
+            kfused.SlotCarry(
+                state=MomentState(*(f64(x) for x in s.views.state)),
+                hist=(f64(s.views.hist) if s.views.use_hist else None),
+                seen_presence=jnp.asarray(
+                    s.views.seen_presence.astype(np.int32)),
+                tainted=jnp.asarray(s.views.tainted),
+                exact=jnp.asarray(s.views.exact),
+                **_slot_pend(s), **_slot_wrap(s))
+            for s in slots)
+        query_carries = tuple(
+            tuple(kfused.PassQueryCarry(
+                lo=f64(qc.lo), hi=f64(qc.hi), est=f64(qc.est),
+                refreshed=jnp.asarray(qc.refreshed),
+                active=jnp.asarray(qc.active
+                                   & ~np.asarray(qc.finished)),
+                finished=jnp.asarray(bool(qc.finished)),
+                stopped_early=jnp.asarray(False),
+                finish_rounds=i32(0), finish_pos=i32(0),
+                finish_blocks_fetched=i64(0),
+                finish_skipped_static=i64(0),
+                finish_skipped_active=i64(0), finish_probes=i64(0),
+                snap_counts=jnp.zeros(s.views.G, jnp.float64),
+                snap_exact=jnp.zeros(s.views.G, bool),
+                snap_tainted=jnp.zeros(s.views.G, bool))
+                for qc in s.qcis)
+            for s in slots)
+        pend = (dict(pend_rounds=i32(0), merge_now=jnp.asarray(False))
+                if cadence else {})
+        # per-dispatch bases for the shared delta counters (the trivial
+        # pass accumulates skip/probe metrics as deltas in the carry)
+        base_ss = {id(s): s.metrics["skipped_static"] for s in slots}
+        base_sa = {id(s): s.metrics["skipped_active"] for s in slots}
+        base_pr = {id(s): s.metrics["probes"] for s in slots}
+        carry = kfused.PassCarry(
+            pos=i32(self.pos), rounds=i32(self.rounds), it=i32(0),
+            n_live=i32(self.n_live),
+            processed=jnp.asarray(slots[0].views.processed),
+            blocks_fetched=i64(slots[0].views.blocks_fetched),
+            skipped_static=i64(0),
+            skipped_active=i64(0), probes=i64(0),
+            slots=slot_carries, queries=query_carries, **pend)
+
+        while True:
+            carry = chunk_fn(bufs, carry)
+            if not until_done:
+                break
+            if (int(carry.n_live) == 0 or int(carry.pos) >= bound
+                    or int(carry.rounds) >= self.max_rounds):
+                break
+
+        # -- writeback: slots' shared fold state + metrics ----------------
+        self.pos, self.rounds = int(carry.pos), int(carry.rounds)
+        self.n_live = int(carry.n_live)
+        host = _host_copy
+        for s, scarry in zip(slots, carry.slots):
+            if wrap:
+                _restore_views_from_carry(
+                    s.views, scarry.state, scarry.hist, scarry.processed,
+                    scarry.seen_presence, scarry.tainted, scarry.exact,
+                    scarry.blocks_fetched, s.metrics, 0, 0)
+                s.metrics["skipped_static"] = int(scarry.skipped_static)
+                s.metrics["skipped_active"] = int(scarry.skipped_active)
+                s.metrics["probes"] = int(scarry.probes)
+                if (self.pos >= s.views.lap_end
+                        and s.lap_done_round is None):
+                    s.lap_done_round = int(scarry.lap_rounds)
+            else:
+                _restore_views_from_carry(
+                    s.views, scarry.state, scarry.hist, carry.processed,
+                    scarry.seen_presence, scarry.tainted, scarry.exact,
+                    carry.blocks_fetched, s.metrics, carry.skipped_static,
+                    carry.skipped_active)
+                if s.probe:
+                    s.metrics["probes"] += int(carry.probes)
+
+        # -- per-query interval state + finish-time snapshot results ------
+        newly: List[AggQuery] = []
+        for s, qcarries in zip(slots, carry.queries):
+            le = s.views.lap_end
+            for qc, qcar in zip(s.qcis, qcarries):
+                if id(qc) in self.finished:
+                    continue  # result already materialized; carry frozen
+                qc.lo = host(qcar.lo, np.float64)
+                qc.hi = host(qcar.hi, np.float64)
+                qc.est = host(qcar.est, np.float64)
+                qc.refreshed = host(qcar.refreshed)
+                qc.active = host(qcar.active)
+                qc.finished = bool(qcar.finished)
+                if not qc.finished:
+                    continue
+                snap_counts = host(qcar.snap_counts, np.float64)
+                fpos = int(qcar.finish_pos)
+                if wrap:
+                    rows_cov = (self._rows_at(min(fpos, le))
+                                - s.row_offset)
+                    skipped_static = int(qcar.finish_skipped_static)
+                    skipped_active = int(qcar.finish_skipped_active)
+                    probes = int(qcar.finish_probes)
+                else:
+                    rows_cov = (int(self.cum_rows[fpos - 1])
+                                if fpos else 0)
+                    skipped_static = (base_ss[id(s)]
+                                      + int(qcar.finish_skipped_static))
+                    skipped_active = (base_sa[id(s)]
+                                      + int(qcar.finish_skipped_active))
+                    probes = (base_pr[id(s)]
+                              + (int(qcar.finish_probes)
+                                 if s.probe else 0))
+                self.finished[id(qc)] = QueryResult(
+                    group_codes=np.arange(s.views.G),
+                    estimate=host(qcar.est, np.float64),
+                    lo=host(qcar.lo, np.float64),
+                    hi=host(qcar.hi, np.float64),
+                    count_seen=snap_counts,
+                    nonempty=snap_counts > 0,
+                    exact=host(qcar.snap_exact),
+                    tainted=host(qcar.snap_tainted),
+                    rows_covered=rows_cov,
+                    blocks_fetched=int(qcar.finish_blocks_fetched),
+                    blocks_skipped_active=skipped_active,
+                    blocks_skipped_static=skipped_static,
+                    bitmap_probes=probes,
+                    rounds=int(qcar.finish_rounds),
+                    wall_time_s=(time.perf_counter()
+                                 - self._t0[id(qc)]),
+                    stopped_early=bool(qcar.stopped_early))
+                newly.append(qc.q)
+        return newly
+
+
 class FrameServer:
     """Serve batches of :class:`~repro.aqp.query.AggQuery` over one
     :class:`~repro.aqp.engine.FastFrame` with shared fused-scan passes.
@@ -117,7 +689,10 @@ class FrameServer:
 
     The server is stateless between batches except for the device
     materialization caches it shares with the frame, so it is safe to
-    interleave ``run_batch`` with direct ``frame.run`` calls.
+    interleave ``run_batch`` with direct ``frame.run`` calls. For
+    continuous serving, :meth:`open_pass` exposes the incremental
+    :class:`SharedPass` lifecycle used by
+    :class:`repro.serve.scheduler.QueryScheduler`.
     """
 
     def __init__(self, frame: FastFrame):
@@ -135,6 +710,15 @@ class FrameServer:
             pkey = tuple(f.key() for f in q.filters)
             passes.setdefault(pkey, []).append(i)
         return passes
+
+    def open_pass(self, filters, sampling: str = "active_peek",
+                  start_block: Optional[int] = None, seed: int = 0,
+                  max_rounds: int = 100_000,
+                  chunk_rounds: Optional[int] = None) -> SharedPass:
+        """Open an incremental shared pass for queries with ``filters``
+        (admit/step/retire/finish lifecycle; see :class:`SharedPass`)."""
+        return SharedPass(self.frame, filters, sampling, start_block,
+                          seed, max_rounds, chunk_rounds)
 
     def run_batch(self, queries: Sequence[AggQuery],
                   sampling: str = "active_peek",
@@ -169,304 +753,18 @@ class FrameServer:
                 results[i] = res
         return results
 
-    # -- one shared pass -------------------------------------------------------
+    # -- one shared pass (static batch) ----------------------------------------
 
     def _run_pass(self, queries: Sequence[AggQuery], sampling: str,
                   start_block: Optional[int], seed: int,
                   max_rounds: int) -> List[QueryResult]:
-        t0 = time.perf_counter()
-        frame = self.frame
-        cfg = frame.config
-        sc = frame.scramble
-        nb = sc.n_blocks
-        rng = np.random.default_rng(seed)
-        start = (rng.integers(nb) if start_block is None else start_block)
-        order = (start + np.arange(nb)) % nb
-        cum_rows = np.cumsum(frame._valid_counts[order])
-
-        skipping = sampling in ("active_peek", "active_sync")
-        lookahead = (cfg.sync_lookahead_blocks
-                     if sampling == "active_sync" else cfg.lookahead_blocks)
-        cover_cap = cfg.round_blocks * cfg.cover_cap_factor
-        window = _round_window(nb, lookahead, cover_cap)
-        impl = kops.resolve_impl(cfg.impl)
-        device_pass = cfg.resolve_device_loop()
-        if cfg.shard_rows:
-            cfg.resolve_shard_rows()  # loud guard, as in FastFrame.run
-        # the sharded layout applies to the device pass loop only (the
-        # host loop and the recovery pass materialize on host)
-        shards = frame.block_shards() if device_pass else None
-
-        # slots: one fold per distinct scan signature
-        by_sig: Dict[Tuple, List[AggQuery]] = {}
-        for q in queries:
-            by_sig.setdefault(q.scan_signature(), []).append(q)
-        slots = [_SlotExec(frame, qs[0], skipping, qs, shards)
-                 for qs in by_sig.values()]
-        qci_of = {id(q): qc for s in slots
-                  for q, qc in zip(by_sig[s.views.rep_q.scan_signature()],
-                                   s.qcis)}
-
-        rep = lambda a: adist.place_replicated(shards, a)
-        mask_dev = frame._device_mask(queries[0].filters, shards)
-        static_ok = slots[0].views.static_ok
-        static_ok_dev = rep(static_ok)
-        opad = np.zeros(nb + window, np.int32)
-        opad[:nb] = order
-        order_pad_dev = rep(opad)
-        values_t = tuple(s.values for s in slots)
-        gids_t = tuple(s.gids for s in slots)
-        words_t = tuple(s.words for s in slots)
-        meta_t = tuple(s.meta for s in slots)
-
-        # a query's QueryResult is built the moment it finishes, so its
-        # metrics AND per-view state are one consistent snapshot (the
-        # slot keeps scanning for the pass's remaining queries afterwards)
-        finished: Dict[int, QueryResult] = {}   # id(qci) -> result
-        pos = 0
-        rounds = 0
-        n_live = sum(len(s.qcis) for s in slots)
-        if device_pass:
-            # device-resident pass loop: the whole multi-query round loop
-            # (per-query activity stacks, union selection, per-slot folds,
-            # per-query CI refresh / stop tests with finish-time
-            # snapshots) iterates inside lax.while_loop dispatches —
-            # sharded over the mesh when the frame carries a shard layout
-            pos, rounds = self._device_pass(
-                slots, order, cum_rows, lookahead, window, cover_cap,
-                impl, mask_dev, order_pad_dev, static_ok_dev, values_t,
-                gids_t, words_t, max_rounds, t0, finished, shards)
-        else:
-            while pos < nb and rounds < max_rounds and n_live:
-                rounds += 1
-                stacks = tuple(s.active_stack() for s in slots)
-                states, hists, flag_stacks, ok_d, new_pos_d = \
-                    kfused.fused_round_multi(
-                        mask_dev, order_pad_dev, static_ok_dev,
-                        jnp.asarray(pos, jnp.int32), values_t, gids_t,
-                        words_t, stacks, nb=nb, window=window,
-                        budget=cfg.round_blocks, meta=meta_t, impl=impl)
-                ok = np.asarray(ok_d)
-                new_pos = int(new_pos_d)
-                union = np.logical_or.reduce(
-                    [np.asarray(fl).any(axis=0) for fl in flag_stacks])
-                for s, st, h in zip(slots, states, hists):
-                    idx = frame._fused_accounting(
-                        order, pos, new_pos, ok, union, s.views.presence,
-                        s.views.tainted, lookahead, cfg.round_blocks,
-                        cover_cap, s.probe, s.metrics)
-                    if len(idx):
-                        s.views.ingest_delta(idx, st, h)
-                    s.views.update_exact(new_pos)
-                pos = new_pos
-                r = int(cum_rows[pos - 1]) if pos > 0 else 0
-                for s in slots:
-                    for qc in s.qcis:
-                        if qc.finished:
-                            continue
-                        qc.refresh(rounds, r)
-                        if not qc.update_active():
-                            qc.finished = True
-                            n_live -= 1
-                            finished[id(qc)] = qc.result(
-                                rounds, pos, cum_rows, dict(s.metrics),
-                                t0, stopped_early=pos < nb)
-
-        # recovery per slot for queries that exhausted the scramble while
-        # still active (shared block fetches across the slot's queries)
-        rec_rounds: Dict[int, int] = {}
-        for s in slots:
-            rec = [qc for qc in s.qcis if not qc.finished]
-            if rec:
-                rec_rounds[id(s)] = frame._recovery_pass(
-                    s.views, rec, rounds, max_rounds)
-
-        out = []
-        for q in queries:
-            qc = qci_of[id(q)]
-            if id(qc) in finished:
-                out.append(finished[id(qc)])
-                continue
-            s = next(s for s in slots if qc in s.qcis)
-            qc.collapse_exact()
-            out.append(qc.result(rec_rounds.get(id(s), rounds), pos,
-                                 cum_rows, s.metrics, t0, False))
-        return out
-
-    # -- device-resident pass loop ---------------------------------------------
-
-    def _device_pass(self, slots: Sequence[_SlotExec], order, cum_rows,
-                     lookahead: int, window: int, cover_cap: int,
-                     impl: str, mask_dev, order_pad_dev, static_ok_dev,
-                     values_t, gids_t, words_t, max_rounds: int,
-                     t0: float, finished: Dict[int, QueryResult],
-                     shards=None) -> Tuple[int, int]:
-        """Run one pass's whole round loop device-resident
-        (:func:`repro.kernels.fused_scan.build_pass_loop`), then write
-        the final carry back into the slots' host bookkeeping and
-        materialize the finish-time snapshots into
-        :class:`~repro.aqp.query.QueryResult`\\ s. Returns the final
-        ``(pos, rounds)``; unfinished queries are left for the shared
-        recovery/assembly tail (identical to the host path's)."""
-        frame = self.frame
-        cfg = frame.config
-        nb = frame.scramble.n_blocks
-        f64 = lambda x: jnp.asarray(x, jnp.float64)
-        i32 = lambda v: jnp.asarray(v, jnp.int32)
-        i64 = lambda v: jnp.asarray(v, jnp.int64)
-
-        # the compiled pass loop (+ its order-independent device buffers)
-        # is cached on the frame by the pass's static identity: repeat
-        # batches reuse the traced lax.while_loop instead of recompiling
-        rep = lambda a: adist.place_replicated(shards, a)
-        key = ("pass",
-               tuple((qc.q.scan_signature(), qc.q.agg, qc.q.bounder,
-                      qc.q.rangetrim, qc.q.delta, repr(qc.q.stop))
-                     for s in slots for qc in s.qcis),
-               tuple((len(s.qcis), s.probe, s.views.use_hist)
-                     for s in slots),
-               lookahead, max_rounds,
-               cfg.sync_every or cfg.chunk_rounds,
-               (shards.n_shards, shards.shard_blocks,
-                shards.merge_every)
-               if shards is not None else None)
-
-        def build():
-            slot_specs = tuple(
-                kfused.SlotSpec(
-                    num_groups=s.views.G, nbins=cfg.hist_bins,
-                    use_hist=s.views.use_hist, a=float(s.views.a),
-                    b=float(s.views.b), center=float(s.views.center),
-                    probe=s.probe, n_words=int(s.words.shape[1]))
-                for s in slots)
-            refresh_fns = tuple(
-                tuple(_make_device_refresh(qc.q, qc, s.views.a,
-                                           s.views.b, qc.use_hist,
-                                           float(qc.R), s.views.valid)
-                      for qc in s.qcis)
-                for s in slots)
-            chunk_fn = kfused.build_pass_loop(
-                nb=nb, window=window, budget=cfg.round_blocks, impl=impl,
-                lookahead=lookahead, cover_cap=cover_cap,
-                max_rounds=max_rounds,
-                chunk=cfg.sync_every or cfg.chunk_rounds,
-                slot_specs=slot_specs, refresh_fns=refresh_fns,
-                any_probe=any(s.probe for s in slots),
-                shard=shards.info if shards is not None else None)
-            presence = tuple(rep(s.views.presence) for s in slots)
-            presence_total = tuple(
-                rep(s.views.presence_total.astype(np.int32))
-                for s in slots)
-            return chunk_fn, presence, presence_total
-
-        chunk_fn, presence_t, presence_total_t = \
-            frame.device_loops.get_or_build(key, build)
-
-        bufs = kfused.PassLoopBuffers(
-            mask=mask_dev, order_pad=order_pad_dev,
-            static_ok=static_ok_dev,
-            cum_rows=rep(cum_rows.astype(np.int64)),
-            values=values_t, gids=gids_t, words=words_t,
-            presence=presence_t, presence_total=presence_total_t)
-        cadence = shards is not None and shards.merge_every > 1
-
-        def _slot_pend(s):
-            # collective-cadence pending slots: empty local delta
-            if not cadence:
-                return {}
-            G = s.views.G
-            return dict(
-                pend_sums=jnp.zeros((3, G), jnp.float64),
-                pend_vmin=jnp.full((G,), np.inf, jnp.float64),
-                pend_vmax=jnp.full((G,), -np.inf, jnp.float64),
-                pend_hist=(jnp.zeros((G, cfg.hist_bins), jnp.float64)
-                           if s.views.use_hist else None))
-
-        slot_carries = tuple(
-            kfused.SlotCarry(
-                state=MomentState(*(f64(x) for x in s.views.state)),
-                hist=(f64(s.views.hist) if s.views.use_hist else None),
-                seen_presence=jnp.asarray(
-                    s.views.seen_presence.astype(np.int32)),
-                tainted=jnp.asarray(s.views.tainted),
-                exact=jnp.asarray(s.views.exact), **_slot_pend(s))
-            for s in slots)
-        query_carries = tuple(
-            tuple(kfused.PassQueryCarry(
-                lo=f64(qc.lo), hi=f64(qc.hi), est=f64(qc.est),
-                refreshed=jnp.asarray(qc.refreshed),
-                active=jnp.asarray(qc.active),
-                finished=jnp.asarray(False),
-                stopped_early=jnp.asarray(False),
-                finish_rounds=i32(0), finish_pos=i32(0),
-                finish_blocks_fetched=i64(0),
-                finish_skipped_static=i64(0),
-                finish_skipped_active=i64(0), finish_probes=i64(0),
-                snap_counts=jnp.zeros(s.views.G, jnp.float64),
-                snap_exact=jnp.zeros(s.views.G, bool),
-                snap_tainted=jnp.zeros(s.views.G, bool))
-                for qc in s.qcis)
-            for s in slots)
-        pend = (dict(pend_rounds=i32(0), merge_now=jnp.asarray(False))
-                if cadence else {})
-        carry = kfused.PassCarry(
-            pos=i32(0), rounds=i32(0), it=i32(0),
-            n_live=i32(sum(len(s.qcis) for s in slots)),
-            processed=jnp.asarray(slots[0].views.processed),
-            blocks_fetched=i64(0), skipped_static=i64(0),
-            skipped_active=i64(0), probes=i64(0),
-            slots=slot_carries, queries=query_carries, **pend)
-
-        while True:
-            carry = chunk_fn(bufs, carry)
-            if (int(carry.n_live) == 0 or int(carry.pos) >= nb
-                    or int(carry.rounds) >= max_rounds):
-                break
-
-        # -- writeback: slots' shared fold state + metrics ----------------
-        pos, rounds = int(carry.pos), int(carry.rounds)
-        host = _host_copy
-        for s, scarry in zip(slots, carry.slots):
-            _restore_views_from_carry(
-                s.views, scarry.state, scarry.hist, carry.processed,
-                scarry.seen_presence, scarry.tainted, scarry.exact,
-                carry.blocks_fetched, s.metrics, carry.skipped_static,
-                carry.skipped_active)
-            if s.probe:
-                s.metrics["probes"] += int(carry.probes)
-
-        # -- per-query interval state + finish-time snapshot results ------
-        for s, qcarries in zip(slots, carry.queries):
-            for qc, qcar in zip(s.qcis, qcarries):
-                qc.lo = host(qcar.lo, np.float64)
-                qc.hi = host(qcar.hi, np.float64)
-                qc.est = host(qcar.est, np.float64)
-                qc.refreshed = host(qcar.refreshed)
-                qc.active = host(qcar.active)
-                qc.finished = bool(qcar.finished)
-                if not qc.finished:
-                    continue
-                snap_counts = host(qcar.snap_counts, np.float64)
-                fpos = int(qcar.finish_pos)
-                finished[id(qc)] = QueryResult(
-                    group_codes=np.arange(s.views.G),
-                    estimate=host(qcar.est, np.float64),
-                    lo=host(qcar.lo, np.float64),
-                    hi=host(qcar.hi, np.float64),
-                    count_seen=snap_counts,
-                    nonempty=snap_counts > 0,
-                    exact=host(qcar.snap_exact),
-                    tainted=host(qcar.snap_tainted),
-                    rows_covered=int(cum_rows[fpos - 1]) if fpos else 0,
-                    blocks_fetched=int(qcar.finish_blocks_fetched),
-                    blocks_skipped_active=int(
-                        qcar.finish_skipped_active),
-                    blocks_skipped_static=int(
-                        qcar.finish_skipped_static),
-                    bitmap_probes=(s.views.probes0
-                                   + (int(qcar.finish_probes)
-                                      if s.probe else 0)),
-                    rounds=int(qcar.finish_rounds),
-                    wall_time_s=time.perf_counter() - t0,
-                    stopped_early=bool(qcar.stopped_early))
-        return pos, rounds
+        """Static-batch pass: admit everything at cursor position 0,
+        run to completion, recover, assemble — computation-for-
+        computation the pre-lifecycle pass (bitwise-identical
+        results)."""
+        p = SharedPass(self.frame, queries[0].filters, sampling,
+                       start_block, seed, max_rounds)
+        p.admit(queries)
+        p.run_to_completion()
+        p.finish()
+        return [p.result_of(q) for q in queries]

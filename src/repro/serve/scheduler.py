@@ -1,0 +1,431 @@
+"""Continuous-batching query scheduler: an async serving loop over
+:class:`~repro.serve.frame_server.FrameServer`.
+
+``run_batch`` answers a *static* batch; a serving front-end has queries
+arriving and finishing continuously. :class:`QueryScheduler` turns the
+:class:`~repro.serve.frame_server.SharedPass` admit/step/retire/finish
+lifecycle into a server:
+
+  * **Queue + arrivals** — ``submit()`` enqueues a query (optionally with
+    a deadline) at a clock timestamp; trace- or Poisson-driven workloads
+    replay through the same entry point
+    (``tests/helpers/sim_workload.py``).
+  * **Admission at round boundaries** — between two pass rounds, queued
+    queries whose filters match the in-flight pass join the running
+    cursor walk mid-scan (a carousel slot anchored at the current
+    position: they pay only the blocks they missed, and their
+    coverage/taint accounting reflects the skipped prefix — see
+    ``frame_server``). Queries with new filters open their own pass.
+  * **Retirement** — the moment a query's OptStop condition fires its
+    result is snapshotted; slots whose queries have all finished are
+    retired at the next boundary, freeing fold width for admission.
+  * **SLO-aware admission** — a deadline translates into a round budget;
+    a Hoeffding-style width projection (distribution-free, from the
+    column's catalog bounds) prices the query's target width in rounds.
+    Infeasible queries are rejected *with the quote* so the client can
+    renegotiate width or deadline.
+  * **Progressive streaming** — every step boundary (one round on the
+    host loop, one ``chunk_rounds`` dispatch on the device loop — the
+    same cadence as ``run(on_sync=...)``/``sync_every``) emits a
+    per-query interval snapshot to ``on_stream`` and the event log.
+
+**Simulation-first**: every scheduling decision flows through an
+injectable :class:`Clock` and a deterministic event heap. Under
+:class:`SimClock` no wall clock is ever read, service time advances by
+``round_cost_s`` per round, and the entire interleaving is captured in
+``scheduler.log`` — replaying the same workload yields an identical log
+(asserted by ``tests/test_scheduler.py``). :class:`WallClock` swaps in
+real timestamps for production use; nothing in the loop sleeps.
+
+Bitwise guarantee: a query served through the scheduler whose slot
+selection is membership-independent (non-probe slots — e.g. no GROUP BY
+under skipping sampling — or probe slots whose co-resident queries share
+one activity evolution) returns a :class:`~repro.aqp.query.QueryResult`
+bitwise identical to its solo ``engine.run`` with the rotated start
+``(start + anchor) % n_blocks`` (property-tested in
+``tests/test_serve_property.py``).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.aqp.query import AggQuery, QueryResult
+from repro.serve.frame_server import FrameServer, SharedPass
+
+__all__ = ["SimClock", "WallClock", "AdmissionQuote", "QueryTicket",
+           "QueryScheduler"]
+
+
+class SimClock:
+    """Virtual clock for deterministic simulation: time only moves when
+    the scheduler processes an event. No wall-clock reads, ever."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, float(t))
+
+
+class WallClock:
+    """Real monotonic clock (seconds since construction). ``advance_to``
+    is a no-op — real time cannot be set."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def advance_to(self, t: float) -> None:
+        pass
+
+
+@dataclass(frozen=True)
+class AdmissionQuote:
+    """Admission-time cost estimate for one query (PilotDB-style:
+    deadline -> per-query width/round budget). ``est_rounds`` prices the
+    query's target width via a Hoeffding projection on the column's
+    catalog bounds; ``width_at_deadline`` is the width the budget buys.
+    A rejected ticket carries its quote so the client can renegotiate."""
+
+    feasible: bool
+    target_width: Optional[float]
+    est_rounds: Optional[int]
+    est_seconds: Optional[float]
+    round_budget: Optional[int]
+    width_at_deadline: Optional[float]
+    reason: str
+
+
+@dataclass
+class QueryTicket:
+    """One submitted query's lifecycle record."""
+
+    query: AggQuery
+    arrival_t: float
+    deadline: Optional[float] = None
+    status: str = "queued"            # queued|running|done|rejected
+    quote: Optional[AdmissionQuote] = None
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    result: Optional[QueryResult] = None
+    # progressive stream: (t, slot-local rounds, max CI width over views)
+    snapshots: List[Tuple[float, int, float]] = field(default_factory=list)
+    _wall_arrival: float = 0.0
+    _qc: object = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        return (None if self.finish_t is None
+                else self.finish_t - self.arrival_t)
+
+
+class _PassState:
+    """One in-flight SharedPass plus its ticket bookkeeping."""
+
+    def __init__(self, pkey: Tuple, pas: SharedPass):
+        self.pkey = pkey
+        self.pas = pas
+        self.pending: List[QueryTicket] = []
+        self.running: List[QueryTicket] = []
+        self.by_query: Dict[int, QueryTicket] = {}
+
+
+class QueryScheduler:
+    """Deterministic event-driven serving loop (see module docstring).
+
+    Args:
+        server: the :class:`FrameServer` to serve through.
+        clock: a :class:`SimClock` (default — fully deterministic) or
+            :class:`WallClock`.
+        sampling / start_block / seed / max_rounds: per-pass scan
+            parameters, as in :meth:`FrameServer.run_batch`.
+        max_slots: soft cap on concurrently-live fold slots across all
+            passes — queued queries wait for retirement to free width.
+            (At least one slot is always allowed to run, so the cap can
+            never deadlock the queue.)
+        round_cost_s: virtual service time of one OptStop round; the
+            SLO admission test prices deadlines in these units, and the
+            simulated clock advances by it per round stepped.
+        chunk_rounds: device-loop dispatch granularity between admission
+            boundaries (defaults to the engine config's sync cadence).
+        on_stream: ``fn(ticket, t, rounds, width)`` called at every
+            step boundary for every running query.
+    """
+
+    def __init__(self, server: FrameServer, clock=None, *,
+                 sampling: str = "active_peek", start_block: int = 0,
+                 seed: int = 0, max_rounds: int = 100_000,
+                 max_slots: int = 8, round_cost_s: float = 1e-3,
+                 chunk_rounds: Optional[int] = None,
+                 on_stream: Optional[Callable] = None):
+        self.server = server
+        self.frame = server.frame
+        self.clock = clock if clock is not None else SimClock()
+        self.sampling = sampling
+        self.start_block = start_block
+        self.seed = seed
+        self.max_rounds = max_rounds
+        self.max_slots = max_slots
+        self.round_cost_s = round_cost_s
+        self.chunk_rounds = chunk_rounds
+        self.on_stream = on_stream
+        self.tickets: List[QueryTicket] = []
+        self.log: List[Tuple[float, int, str, tuple]] = []
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._passes: Dict[Tuple, _PassState] = {}
+
+    # -- event plumbing --------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _log(self, t: float, kind: str, *payload) -> None:
+        self.log.append((round(t, 9), len(self.log), kind, payload))
+
+    @property
+    def live_slots(self) -> int:
+        return sum(len(ps.pas.slots) for ps in self._passes.values())
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(self, query: AggQuery, deadline: Optional[float] = None,
+               at: Optional[float] = None) -> QueryTicket:
+        """Enqueue a query (arrival at ``at``, default: now). ``deadline``
+        is an absolute clock time; admission prices it into a round
+        budget and rejects-with-quote when infeasible."""
+        t = self.clock.now() if at is None else float(at)
+        tk = QueryTicket(query=query, arrival_t=t, deadline=deadline,
+                         _wall_arrival=time.perf_counter())
+        self.tickets.append(tk)
+        self._push(t, "arrival", tk)
+        return tk
+
+    def submit_trace(self, arrivals) -> List[QueryTicket]:
+        """Submit a whole workload trace (``sim_workload`` arrivals:
+        objects with ``.t``, ``.query`` and optional ``.deadline``)."""
+        return [self.submit(a.query, deadline=getattr(a, "deadline", None),
+                            at=a.t) for a in arrivals]
+
+    # -- SLO quoting -----------------------------------------------------------
+
+    def quote(self, query: AggQuery, now: Optional[float] = None,
+              deadline: Optional[float] = None) -> AdmissionQuote:
+        """Price a query's stopping width in rounds (Hoeffding-style
+        width projection on the catalog bounds — distribution-free, so
+        the quote is an upper-bound planning estimate, not a guarantee)
+        and test it against the deadline's round budget."""
+        now = self.clock.now() if now is None else now
+        frame = self.frame
+        cfg = frame.config
+        R = frame.scramble.n_rows
+        rows_per_round = max(
+            1.0, cfg.round_blocks * float(np.mean(frame._valid_counts)))
+        target = getattr(query.stop, "eps", None)
+        budget = None
+        if deadline is not None:
+            budget = int(max(0.0, deadline - now) / self.round_cost_s)
+        if target is None:
+            # no width target (ordering/threshold conditions): admit;
+            # the deadline budget is still recorded for observability
+            return AdmissionQuote(
+                feasible=True, target_width=None, est_rounds=None,
+                est_seconds=None, round_budget=budget,
+                width_at_deadline=None, reason="no width target")
+        _, (a, b) = frame._values_and_bounds(query)
+        span = {"avg": b - a, "sum": (b - a) * R, "count": float(R)}[
+            query.agg]
+        ln_term = math.log(2.0 / max(query.delta, 1e-300))
+
+        def width_at(n_rows: float) -> float:
+            return span * math.sqrt(ln_term / (2.0 * max(n_rows, 1.0)))
+
+        n_needed = span * span * ln_term / (2.0 * target * target)
+        est_rounds = max(1, math.ceil(n_needed / rows_per_round))
+        est_seconds = est_rounds * self.round_cost_s
+        if budget is None:
+            return AdmissionQuote(
+                feasible=True, target_width=float(target),
+                est_rounds=est_rounds, est_seconds=est_seconds,
+                round_budget=None, width_at_deadline=None,
+                reason="no deadline")
+        wad = width_at(budget * rows_per_round)
+        if est_rounds <= budget:
+            return AdmissionQuote(
+                feasible=True, target_width=float(target),
+                est_rounds=est_rounds, est_seconds=est_seconds,
+                round_budget=budget, width_at_deadline=wad,
+                reason="within deadline budget")
+        return AdmissionQuote(
+            feasible=False, target_width=float(target),
+            est_rounds=est_rounds, est_seconds=est_seconds,
+            round_budget=budget, width_at_deadline=wad,
+            reason=(f"needs ~{est_rounds} rounds, deadline budget is "
+                    f"{budget}; achievable width ~{wad:.3g}"))
+
+    # -- main loop -------------------------------------------------------------
+
+    def run_until_idle(self) -> List[QueryTicket]:
+        """Process events until the queue drains and every pass
+        finishes. Deterministic under :class:`SimClock`: identical
+        submissions produce an identical event log."""
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.clock.advance_to(t)
+            if kind == "arrival":
+                self._on_arrival(t, payload)
+            elif kind == "round":
+                self._on_round(t, payload)
+        return self.tickets
+
+    def _pkey(self, q: AggQuery) -> Tuple:
+        return tuple(f.key() for f in q.filters)
+
+    def _on_arrival(self, t: float, tk: QueryTicket) -> None:
+        pkey = self._pkey(tk.query)
+        self._log(t, "arrival", str(tk.query.scan_signature()),
+                  tk.deadline)
+        ps = self._passes.get(pkey)
+        if ps is None:
+            pas = self.server.open_pass(
+                tk.query.filters, sampling=self.sampling,
+                start_block=self.start_block, seed=self.seed,
+                max_rounds=self.max_rounds,
+                chunk_rounds=self.chunk_rounds)
+            ps = _PassState(pkey, pas)
+            self._passes[pkey] = ps
+            self._push(t, "round", pkey)
+        ps.pending.append(tk)
+
+    def _admit(self, t: float, ps: _PassState) -> None:
+        """Round-boundary admission: retire finished slots first (freed
+        fold width is reclaimed here), then admit pending tickets in
+        arrival order under the capacity cap and the SLO test."""
+        retired = ps.pas.retire()
+        if retired:
+            self._log(t, "retire", retired)
+        still: List[QueryTicket] = []
+        blocked = False
+        for tk in ps.pending:
+            q = (self.quote(tk.query, now=t, deadline=tk.deadline)
+                 if tk.deadline is not None else None)
+            if q is not None and not q.feasible:
+                tk.status, tk.quote, tk.finish_t = "rejected", q, t
+                self._log(t, "reject", q.reason)
+                continue
+            if blocked or (self.live_slots >= self.max_slots
+                           and self.live_slots > 0):
+                blocked = True       # strict FIFO: keep the rest queued
+                still.append(tk)     # wait for retirement to free width
+                continue
+            tk.quote = q
+            tk._qc = ps.pas.admit([tk.query], t0=tk._wall_arrival)[0]
+            tk.status, tk.admit_t = "running", t
+            ps.running.append(tk)
+            ps.by_query[id(tk.query)] = tk
+            self._log(t, "admit", ps.pas.pos, ps.pas.rounds)
+        ps.pending = still
+
+    def _stream(self, t: float, ps: _PassState) -> None:
+        for tk in ps.running:
+            if tk.status != "running" or tk._qc.finished:
+                continue
+            qc = tk._qc
+            valid = qc.slot.valid
+            width = float(np.max((qc.hi - qc.lo)[valid])) \
+                if valid.any() else 0.0
+            rounds = ps.pas.rounds - next(
+                s.join_round for s in ps.pas.slots if qc in s.qcis)
+            tk.snapshots.append((t, rounds, width))
+            self._log(t, "sync", width)
+            if self.on_stream is not None:
+                self.on_stream(tk, t, rounds, width)
+
+    def _on_round(self, t: float, pkey: Tuple) -> None:
+        ps = self._passes.get(pkey)
+        if ps is None:
+            return
+        self._admit(t, ps)
+        if ps.pas.can_step:
+            self._step_pass(t, ps, pkey)
+            return
+        # cannot step: pass is done (all finished / lap exhausted) or
+        # nothing was ever admitted (capacity wait)
+        if ps.pas.slots or ps.pas.rounds > 0:
+            self._finish_pass(t, ps)     # recovery + final snapshots
+            del self._passes[pkey]
+            if ps.pending:
+                # reopen a fresh pass for the still-queued tickets
+                nps = _PassState(pkey, self.server.open_pass(
+                    ps.pending[0].query.filters, sampling=self.sampling,
+                    start_block=self.start_block, seed=self.seed,
+                    max_rounds=self.max_rounds,
+                    chunk_rounds=self.chunk_rounds))
+                nps.pending = ps.pending
+                self._passes[pkey] = nps
+                self._push(t + self.round_cost_s, "round", pkey)
+            return
+        # virgin pass, capacity-blocked: poll the next boundary so
+        # width freed by other passes' retirements can admit the queue
+        if ps.pending:
+            self._push(t + self.round_cost_s, "round", pkey)
+        else:
+            del self._passes[pkey]
+
+    def _step_pass(self, t: float, ps: _PassState, pkey: Tuple) -> None:
+        r0 = ps.pas.rounds
+        newly = ps.pas.step()
+        t_done = t + (ps.pas.rounds - r0) * self.round_cost_s
+        for q in newly:
+            tk = ps.by_query[id(q)]
+            tk.status, tk.finish_t = "done", t_done
+            tk.result = ps.pas.result_of(q)
+            self._log(t_done, "finish",
+                      ps.pas.rounds, tk.result.rounds,
+                      bool(tk.result.stopped_early))
+        self._stream(t_done, ps)
+        self._push(t_done, "round", pkey)
+
+    def _finish_pass(self, t: float, ps: _PassState) -> None:
+        ps.pas.finish()
+        for tk in ps.running:
+            if tk.status != "running":
+                continue
+            tk.status, tk.finish_t = "done", t
+            tk.result = ps.pas.result_of(tk.query)
+            self._log(t, "finish", ps.pas.rounds, tk.result.rounds,
+                      bool(tk.result.stopped_early))
+        ps.running = [tk for tk in ps.running if tk.status == "running"]
+
+    # -- reporting -------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        """Latency/throughput summary over completed tickets (virtual
+        time under SimClock, wall time under WallClock)."""
+        done = [tk for tk in self.tickets if tk.status == "done"]
+        lats = sorted(tk.latency for tk in done)
+        out = {"n_done": float(len(done)),
+               "n_rejected": float(sum(tk.status == "rejected"
+                                       for tk in self.tickets))}
+        if done:
+            span = (max(tk.finish_t for tk in done)
+                    - min(tk.arrival_t for tk in done))
+            out["makespan_s"] = span
+            out["qps"] = len(done) / span if span > 0 else float("inf")
+            out["p50_latency_s"] = lats[len(lats) // 2]
+            out["p99_latency_s"] = lats[min(len(lats) - 1,
+                                            int(len(lats) * 0.99))]
+        return out

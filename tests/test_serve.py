@@ -281,3 +281,38 @@ def test_shared_pass_taint_stays_per_query_sound():
     for r in res:
         assert r.lo[0] - 1e-3 <= truth0 <= r.hi[0] + 1e-3
         assert r.lo[1] - 1e-3 <= truth1 <= r.hi[1] + 1e-3
+
+
+def test_retired_result_snapshot_frozen_while_pass_continues(ds):
+    """Regression: a query that finishes (and whose slot retires) while
+    the shared pass keeps scanning must have its result frozen at finish
+    time — rounds, blocks paid, count_seen and intervals must NOT drift
+    with the surviving pass. (``count_seen`` used to alias the live
+    per-query counts array instead of copying it.)"""
+    frame = fresh_frame(ds)
+    srv = FrameServer(frame)
+    p = srv.open_pass([])
+    fast = AggQuery(agg="avg", column="dep_delay",
+                    stop=AbsoluteWidth(eps=8.0), delta=1e-9)
+    slow = AggQuery(agg="avg", column="dep_delay",
+                    stop=AbsoluteWidth(eps=1e-6), delta=1e-9)
+    p.admit([fast, slow])      # same signature -> one shared slot
+    done = []
+    while p.can_step and not done:
+        done = p.step()
+    assert done == [fast], "fast query should stop early"
+    r_at_finish = p.result_of(fast)
+    frozen = {f: np.copy(getattr(r_at_finish, f)) for f in RESULT_FIELDS}
+    p.retire()                 # slot survives: slow is still running
+    while p.can_step:
+        p.step()
+    p.finish()
+    r_after = p.result_of(fast)
+    assert r_after is r_at_finish          # one snapshot, not recomputed
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(getattr(r_after, f), frozen[f],
+                                      err_msg=f)
+    # the surviving query really did keep scanning past the finish point
+    r_slow = p.result_of(slow)
+    assert r_slow.rounds > r_at_finish.rounds
+    assert r_slow.blocks_fetched > r_at_finish.blocks_fetched

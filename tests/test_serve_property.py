@@ -11,6 +11,11 @@ not bitwise: queries see extra blocks their solo scan would have
 skipped; ``tests/test_serve.py`` covers shared-pass soundness). The
 property fuzzes the singleton guarantee over a much wider space than the
 parametrized suites.
+
+A second property covers the carousel regime underneath the scheduler:
+shared-signature non-probe queries joining an in-flight pass mid-scan
+and retiring early, under any drawn admission/retirement schedule, stay
+bitwise identical to solo runs rotated to their admission anchor.
 """
 
 import numpy as np
@@ -96,3 +101,77 @@ def test_run_batch_bitwise_equals_sequential_runs(sc, data, device_loop):
     for q, r_batch in zip(queries, res_batch):
         r_seq = seq_frame.run(q, seed=1, start_block=0)
         assert_bitwise_equal(r_batch, r_seq)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(data=st.data(), device_loop=st.booleans())
+def test_shared_pass_any_admission_retirement_schedule_bitwise(
+        sc, data, device_loop):
+    """Carousel property: for ANY admission/retirement schedule over
+    shared-signature non-probe queries (mid-scan joins at drawn round
+    boundaries, retirement interleaved at drawn boundaries, early stops
+    and full-lap exhaustion mixed), each query's final ``QueryResult``
+    is bitwise identical to its solo ``engine.run`` started at the
+    slot's admission anchor — the scan order is a rotation, so a late
+    joiner's lap IS a solo scan that started where it joined.
+
+    Non-probe (no GROUP BY) keeps slot selection membership-independent,
+    which is exactly the regime where the server guarantees bitwise
+    identity (probe slots union activity across co-resident queries)."""
+    days = data.draw(
+        st.frozensets(st.integers(0, 6), min_size=2, max_size=7),
+        label="days")
+    filters = (Filter("day_of_week", "isin", tuple(sorted(days))),)
+    n = data.draw(st.integers(min_value=2, max_value=5), label="n_queries")
+    specs = []
+    for i in range(n):
+        agg = data.draw(_aggs, label=f"agg{i}")
+        scale = data.draw(st.sampled_from([0.05, 1.0, 10.0]),
+                          label=f"eps_scale{i}")
+        eps = {"avg": 20.0, "count": 5e3, "sum": 1e6}[agg] * scale
+        delay = data.draw(st.integers(min_value=0, max_value=6),
+                          label=f"join_delay{i}")
+        q = AggQuery(agg=agg,
+                     column=None if agg == "count" else "dep_delay",
+                     filters=filters, stop=AbsoluteWidth(eps=eps),
+                     delta=1e-9)
+        specs.append((q, delay))
+
+    cfg = dict(CFG, device_loop=device_loop)
+    frame = FastFrame(sc, EngineConfig(**cfg))
+    seq_frame = FastFrame(sc, EngineConfig(**cfg))
+    # static prefilter probing is paid once per frame and cached
+    # (probes0 = 0 on a warm frame); warm BOTH frames so bitmap_probes
+    # compares the per-query dynamic probing, not cache temperature —
+    # otherwise only the first-built slot/solo pair would match
+    frame._static_ok(specs[0][0])
+    seq_frame._static_ok(specs[0][0])
+    chunk = data.draw(st.integers(1, 4), label="chunk") \
+        if device_loop else None
+    p = FrameServer(frame).open_pass(filters, seed=1, start_block=0,
+                                     chunk_rounds=chunk)
+    order = sorted(range(n), key=lambda i: (specs[i][1], i))
+    anchors = {}
+    idx, steps = 0, 0
+    while idx < n or p.can_step:
+        while idx < n and (specs[order[idx]][1] <= steps
+                           or not p.can_step):
+            i = order[idx]
+            (qc,) = p.admit([specs[i][0]])
+            anchors[i] = qc.slot.anchor
+            idx += 1
+        if data.draw(st.booleans(), label="retire_here"):
+            p.retire()
+        if not p.can_step:
+            break
+        p.step()
+        steps += 1
+    p.finish()
+
+    nb = frame.scramble.n_blocks
+    for i, (q, _) in enumerate(specs):
+        r_served = p.result_of(q)
+        r_solo = seq_frame.run(q, seed=1,
+                               start_block=anchors[i] % nb)
+        assert_bitwise_equal(r_served, r_solo)

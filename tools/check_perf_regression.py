@@ -16,6 +16,13 @@ with very different hardware from the baseline machine may need a looser
 setting). Rows present in only one report are reported but never fail
 the guard (a new sweep point has no baseline yet).
 
+Checks come in four kinds: plain baseline comparisons (higher is
+better), ``direction="lower"`` baseline comparisons for latency rows
+(fail when the current value EXCEEDS baseline * (1 + threshold)),
+``kind="within"`` same-report ratios (machine-independent), and
+``kind="floor"`` absolute metric floors (hard product claims the
+threshold does not soften).
+
 Usage: python tools/check_perf_regression.py [--threshold 0.30]
 Wired into CI (.github/workflows/ci.yml, perf-guard job) after the quick
 benchmark runs.
@@ -60,6 +67,25 @@ CHECKS = [
          baseline="BENCH_sharded_scan.json",
          key=("config",),
          metric="rounds_per_s"),
+    dict(name="scheduler",
+         current="BENCH_scheduler_quick.json",
+         baseline="BENCH_scheduler.json",
+         key=("workload", "nb"),
+         metric="scheduler_qps"),
+    # latency rows are lower-is-better: fail when current EXCEEDS the
+    # baseline by more than the threshold
+    dict(name="scheduler-p50",
+         current="BENCH_scheduler_quick.json",
+         baseline="BENCH_scheduler.json",
+         key=("workload", "nb"),
+         metric="p50_latency_ms",
+         direction="lower"),
+    dict(name="scheduler-p99",
+         current="BENCH_scheduler_quick.json",
+         baseline="BENCH_scheduler.json",
+         key=("workload", "nb"),
+         metric="p99_latency_ms",
+         direction="lower"),
     # ... plus machine-independent within-run ratios, robust to hardware
     dict(name="fused_scan-ratio",
          current="BENCH_fused_scan_quick.json",
@@ -86,6 +112,20 @@ CHECKS = [
          baseline="BENCH_sharded_scan.json",
          key=("config",),
          metric="speedup_vs_single"),
+    dict(name="scheduler-ratio",
+         current="BENCH_scheduler_quick.json",
+         baseline="BENCH_scheduler.json",
+         key=("workload", "nb"),
+         metric="speedup"),
+    # hard product floor, machine-independent: continuous batching must
+    # sustain >= 2x sequential q/s on the shared-signature burst trace
+    dict(name="scheduler-burst-floor",
+         kind="floor",
+         current="BENCH_scheduler_quick.json",
+         key=("workload", "nb"),
+         row=("burst", 512),
+         metric="speedup",
+         floor=2.0),
     # per-shard scaling floor: efficiency = speedup_vs_single / n_shards
     dict(name="sharded_scan-efficiency",
          current="BENCH_sharded_scan_quick.json",
@@ -129,6 +169,7 @@ def check_one(spec, threshold: float) -> int:
     cur = _rows_by_key(cur_path, spec["key"])
     base = _rows_by_key(base_path, spec["key"])
     metric = spec["metric"]
+    lower_is_better = spec.get("direction") == "lower"
     failures = 0
     compared = 0
     for k, row in sorted(cur.items(), key=str):
@@ -138,11 +179,18 @@ def check_one(spec, threshold: float) -> int:
         compared += 1
         got = float(row[metric])
         want = float(base[k][metric])
-        floor = want * (1.0 - threshold)
-        verdict = "ok  " if got >= floor else "FAIL"
+        if lower_is_better:
+            ceil = want * (1.0 + threshold)
+            ok = got <= ceil
+            bound_txt = f"(ceiling {ceil:.2f})"
+        else:
+            floor = want * (1.0 - threshold)
+            ok = got >= floor
+            bound_txt = f"(floor {floor:.2f})"
+        verdict = "ok  " if ok else "FAIL"
         print(f"{verdict} {spec['name']}{k}: {metric} {got:.2f} vs "
-              f"baseline {want:.2f} (floor {floor:.2f})")
-        if got < floor:
+              f"baseline {want:.2f} {bound_txt}")
+        if not ok:
             failures += 1
     for k in sorted(set(base) - set(cur), key=str):
         print(f"note {spec['name']}{k}: baseline-only row (not in quick "
@@ -184,6 +232,31 @@ def check_within(spec, threshold: float) -> int:
     return 0 if ok else 1
 
 
+def check_floor(spec) -> int:
+    """A ``kind="floor"`` check holds one row of the current report to an
+    absolute metric floor — a machine-independent product claim (e.g.
+    continuous batching must beat sequential serving 2x), so the
+    regression threshold does not soften it."""
+    cur_path = RESULTS / spec["current"]
+    if not cur_path.exists():
+        print(f"MISSING {spec['name']}: no quick report at "
+              f"{cur_path.name} (run the quick benchmark first)")
+        return 1
+    cur = _rows_by_key(cur_path, spec["key"])
+    k = tuple(spec["row"])
+    if k not in cur:
+        print(f"FAIL {spec['name']}: row {k} missing from "
+              f"{cur_path.name} — sweep points diverged from the guard "
+              "config")
+        return 1
+    got = float(cur[k][spec["metric"]])
+    floor = float(spec["floor"])
+    ok = got >= floor
+    print(f"{'ok  ' if ok else 'FAIL'} {spec['name']}{k}: "
+          f"{spec['metric']} {got:.2f} (hard floor {floor:.2f})")
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float,
@@ -196,6 +269,8 @@ def main(argv=None) -> int:
     for spec in CHECKS:
         if spec.get("kind") == "within":
             failures += check_within(spec, args.threshold)
+        elif spec.get("kind") == "floor":
+            failures += check_floor(spec)
         else:
             failures += check_one(spec, args.threshold)
     if failures:
