@@ -1,8 +1,11 @@
 """Repo-root conftest: make the `benchmarks` package importable when the
 suite runs as ``PYTHONPATH=src pytest tests/`` (tests reference the
-benchmark harness, e.g. the roofline model)."""
+benchmark harness, e.g. the roofline model), and `aqplint` importable
+for the static-analysis suite and the retrace-budget fixtures."""
 
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).parent))
+_root = Path(__file__).parent
+sys.path.insert(0, str(_root))
+sys.path.insert(0, str(_root / "tools"))

@@ -360,8 +360,8 @@ class AndersonDKWBounder(Bounder):
         (the histogram grid is pinned, as on host — enforced statically)."""
         if s.hist is None:
             raise ValueError("AndersonDKW requires histogram state")
-        a = float(a)  # static by construction: the engine's pinned grid
-        b = float(b)
+        a = float(a)  # static by construction: the engine's pinned grid  # aqplint: disable=AQP101(a is the pinned histogram grid edge, always a Python float at trace time)
+        b = float(b)  # aqplint: disable=AQP101(b is the pinned histogram grid edge, always a Python float at trace time)
         m = s.count
         eps = jnp.sqrt(jnp.log(1.0 / delta) / (2.0 * m))
         hist = s.hist

@@ -60,6 +60,7 @@ def _axis_size(mesh: Mesh, axes: Axes) -> int:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
+    # aqplint: disable=AQP101(mesh.shape is host-side mesh metadata, never traced)
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 

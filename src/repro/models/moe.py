@@ -85,6 +85,7 @@ def moe_apply(p, cfg: ArchConfig, x) -> Tuple[jax.Array, jax.Array]:
     logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
                         p["router"])
     gates = jax.nn.softmax(logits, axis=-1)
+    # aqplint: disable=AQP101(Sg/k/E are shape- and config-derived Python ints - capacity is static under trace)
     capacity = max(int(Sg * k * cfg.capacity_factor / E), 4)
     dispatch, combine, aux = _dispatch_masks(gates, k, capacity)
     dispatch = dispatch.astype(x.dtype)

@@ -253,3 +253,34 @@ def test_device_early_stop_inside_chunk_no_overscan(sc, x64):
     assert r_dev.rows_covered == r_host.rows_covered
     assert r_dev.blocks_fetched == r_host.blocks_fetched
     assert r_dev.bitmap_probes == r_host.bitmap_probes
+
+
+# -- retrace budgets (dynamic half of the aqplint AQP5xx pass) -----------------
+#
+# The static-shape padding (PR 3) makes every steady-state re-dispatch
+# hit the jit cache; a shape signature varying per call would keep the
+# results bitwise identical while recompiling every round, which no
+# value-comparing test can see. Budgets live in
+# tools/aqplint/retrace_budgets.json and are exact ceilings.
+
+def test_fused_rerun_stays_within_retrace_budget(sc):
+    from aqplint.retrace import assert_within_budget, count_compiles
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=AbsoluteWidth(eps=8.0), delta=0.05)
+    frame = FastFrame(sc, EngineConfig(fused=True))
+    frame.run(q, sampling="sample", seed=1)          # warm-up
+    with count_compiles() as counter:
+        frame.run(q, sampling="sample", seed=2)      # same shapes
+    assert_within_budget("fused_scan::rerun_same_shapes", counter)
+
+
+def test_fresh_frame_same_scramble_hits_jit_cache(sc):
+    from aqplint.retrace import assert_within_budget, count_compiles
+    q = AggQuery(agg="avg", column="dep_delay", group_by="origin",
+                 stop=AbsoluteWidth(eps=8.0), delta=0.05)
+    FastFrame(sc, EngineConfig(fused=True)).run(q, sampling="sample",
+                                                seed=1)
+    with count_compiles() as counter:
+        FastFrame(sc, EngineConfig(fused=True)).run(q, sampling="sample",
+                                                    seed=1)
+    assert_within_budget("fused_scan::fresh_frame_same_scramble", counter)

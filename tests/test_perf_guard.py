@@ -1,0 +1,138 @@
+"""Self-tests for the CI perf guard (tools/check_perf_regression.py)
+and the row-matching primitives it shares with aqplint
+(aqplint.perfrows) — in particular the ``direction="lower"`` latency
+checks and ``kind="floor"`` absolute floors added in PR 7, which until
+now were only exercised by real CI runs."""
+
+import json
+
+import check_perf_regression as guard
+from aqplint.perfrows import compare, meets_floor, rows_by_key
+
+
+def write_report(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return path
+
+
+# -- perfrows primitives -------------------------------------------------------
+
+def test_rows_by_key_indexes_by_tuple(tmp_path):
+    p = write_report(tmp_path / "r.json", [
+        {"workload": "burst", "nb": 512, "qps": 10.0},
+        {"workload": "poisson", "nb": 512, "qps": 4.0}])
+    rows = rows_by_key(p, ("workload", "nb"))
+    assert rows[("burst", 512)]["qps"] == 10.0
+    assert set(rows) == {("burst", 512), ("poisson", 512)}
+
+
+def test_compare_higher_direction():
+    ok, bound, label = compare(70.0, 100.0, 0.30)
+    assert ok and label == "floor" and bound == 70.0
+    assert not compare(69.9, 100.0, 0.30)[0]
+
+
+def test_compare_lower_direction():
+    # latency: 30% above baseline is the ceiling
+    ok, bound, label = compare(130.0, 100.0, 0.30, direction="lower")
+    assert ok and label == "ceiling" and abs(bound - 130.0) < 1e-9
+    assert not compare(130.1, 100.0, 0.30, direction="lower")[0]
+    # a latency IMPROVEMENT never fails
+    assert compare(1.0, 100.0, 0.30, direction="lower")[0]
+
+
+def test_meets_floor():
+    assert meets_floor(2.0, 2.0)
+    assert not meets_floor(1.99, 2.0)
+
+
+# -- guard: direction="lower" latency rows -------------------------------------
+
+def _latency_spec():
+    return dict(name="lat", current="cur.json", baseline="base.json",
+                key=("workload",), metric="p99_latency_ms",
+                direction="lower")
+
+
+def test_guard_latency_passes_within_ceiling(tmp_path, capsys):
+    write_report(tmp_path / "base.json", [
+        {"workload": "burst", "p99_latency_ms": 100.0}])
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "p99_latency_ms": 120.0}])
+    assert guard.check_one(_latency_spec(), 0.30,
+                           results_dir=tmp_path) == 0
+    assert "ceiling" in capsys.readouterr().out
+
+
+def test_guard_latency_fails_beyond_ceiling(tmp_path, capsys):
+    write_report(tmp_path / "base.json", [
+        {"workload": "burst", "p99_latency_ms": 100.0}])
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "p99_latency_ms": 140.0}])
+    assert guard.check_one(_latency_spec(), 0.30,
+                           results_dir=tmp_path) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_guard_throughput_direction_still_fails_on_drop(tmp_path):
+    spec = dict(name="tp", current="cur.json", baseline="base.json",
+                key=("workload",), metric="qps")
+    write_report(tmp_path / "base.json", [{"workload": "b", "qps": 100.0}])
+    write_report(tmp_path / "cur.json", [{"workload": "b", "qps": 60.0}])
+    assert guard.check_one(spec, 0.30, results_dir=tmp_path) == 1
+
+
+def test_guard_zero_matched_rows_fails(tmp_path, capsys):
+    # a sweep-point rename must not silently disable the guard
+    write_report(tmp_path / "base.json", [
+        {"workload": "old", "p99_latency_ms": 1.0}])
+    write_report(tmp_path / "cur.json", [
+        {"workload": "new", "p99_latency_ms": 1.0}])
+    assert guard.check_one(_latency_spec(), 0.30,
+                           results_dir=tmp_path) >= 1
+    assert "zero rows matched" in capsys.readouterr().out
+
+
+# -- guard: kind="floor" absolute floors ---------------------------------------
+
+def _floor_spec(floor=2.0):
+    return dict(name="burst-floor", kind="floor", current="cur.json",
+                key=("workload", "nb"), row=("burst", 512),
+                metric="speedup", floor=floor)
+
+
+def test_guard_floor_passes_at_or_above(tmp_path):
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "nb": 512, "speedup": 2.0}])
+    assert guard.check_floor(_floor_spec(), results_dir=tmp_path) == 0
+
+
+def test_guard_floor_fails_below_regardless_of_threshold(tmp_path, capsys):
+    # the threshold never softens an absolute floor: 1.9 < 2.0 fails
+    # even though it is within 30% of it
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "nb": 512, "speedup": 1.9}])
+    assert guard.check_floor(_floor_spec(), results_dir=tmp_path) == 1
+    assert "hard floor" in capsys.readouterr().out
+
+
+def test_guard_floor_missing_row_fails(tmp_path):
+    write_report(tmp_path / "cur.json", [
+        {"workload": "poisson", "nb": 512, "speedup": 9.0}])
+    assert guard.check_floor(_floor_spec(), results_dir=tmp_path) == 1
+
+
+# -- guard: kind="within" same-report ratio ------------------------------------
+
+def test_guard_within_compares_same_report(tmp_path):
+    spec = dict(name="cadence", kind="within", current="cur.json",
+                key=("config",), metric="rounds_per_s",
+                faster="mesh2_k4", slower="mesh2_k1")
+    write_report(tmp_path / "cur.json", [
+        {"config": "mesh2_k4", "rounds_per_s": 95.0},
+        {"config": "mesh2_k1", "rounds_per_s": 100.0}])
+    assert guard.check_within(spec, 0.30, results_dir=tmp_path) == 0
+    write_report(tmp_path / "cur.json", [
+        {"config": "mesh2_k4", "rounds_per_s": 60.0},
+        {"config": "mesh2_k1", "rounds_per_s": 100.0}])
+    assert guard.check_within(spec, 0.30, results_dir=tmp_path) == 1

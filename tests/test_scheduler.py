@@ -317,3 +317,24 @@ def test_burst_bitwise_vs_solo_device_loop(scramble, x64):
             arr.query, sampling="active_peek", seed=1,
             start_block=anchor % nb)
         assert_bitwise_equal(tk.result, solo)
+
+
+# -- retrace budget (dynamic half of the aqplint AQP5xx pass) ------------------
+
+def test_scheduler_rerun_stays_within_retrace_budget(scramble):
+    """A second trace with a fresh frame/scheduler but the same shape
+    profile must hit the jit cache — the serving loop compiling per
+    trace (or per query) would be invisible to every bitwise test
+    while destroying the ~7x burst throughput."""
+    from aqplint.retrace import assert_within_budget, count_compiles
+
+    def run(seed):
+        sched = make_scheduler(scramble)
+        sched.submit_trace(poisson_trace(make_query, n=8, rate=50.0,
+                                         seed=seed))
+        sched.run_until_idle()
+
+    run(5)                                   # warm-up
+    with count_compiles() as counter:
+        run(6)
+    assert_within_budget("scheduler::rerun_same_shape_trace", counter)

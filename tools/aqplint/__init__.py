@@ -1,0 +1,41 @@
+"""aqplint: a repo-specific, JAX-aware static-analysis suite.
+
+Machine-checks the AQP engine's soundness invariants — the conventions
+that keep the paper's (1-delta) interval guarantees true but that no
+unit test can see failing (a silent f32 demotion still *runs*; a
+``_device`` twin with a drifted parameter list still *passes* the tests
+that never call it; a host sync inside ``lax.while_loop`` merely makes
+the loop slow or untraceable later).
+
+Five AST passes over a shared module-walker / call-graph core
+(:mod:`aqplint.core`):
+
+  * ``purity``       (AQP1xx) — no host-sync / side-effecting calls in
+    code reachable from ``lax.while_loop`` bodies, ``pallas_call``
+    kernels or ``shard_map``-wrapped loops;
+  * ``parity``       (AQP2xx) — every bounder / stopping-condition API
+    with a ``_batch`` / ``_device`` twin keeps coverage and signatures
+    in sync;
+  * ``dtype``        (AQP3xx) — no f32 literals/casts in bound-eval
+    code; device-twin call sites sit behind ``state.require_x64``;
+  * ``collectives``  (AQP4xx) — ``psum/pmin/pmax/axis_index`` name the
+    AQP mesh axis, stay inside ``shard_map`` regions, and
+    cadence-pending folds merge only at the designated merge step;
+  * ``shapes``       (AQP5xx) — static-shape / retrace hygiene in
+    jitted code (data-dependent shapes, traced-value slicing,
+    non-hashable static args).
+
+Plus one *dynamic* sanitizer (:mod:`aqplint.retrace`): a pytest helper
+that counts XLA compilations against committed budgets
+(``retrace_budgets.json``), so shape-padding fixes cannot silently
+regress into per-round retraces.
+
+CLI: ``python -m aqplint src tests`` (see ``docs/static_analysis.md``).
+Inline suppression: ``# aqplint: disable=CODE(reason)``. Committed
+baseline: ``tools/aqplint/baseline.json`` — new findings beyond the
+baseline fail CI.
+"""
+
+from aqplint.core import Finding, Project  # noqa: F401
+
+__version__ = "1.0"

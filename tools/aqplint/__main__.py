@@ -1,0 +1,127 @@
+"""CLI driver: ``python -m aqplint [paths...]``.
+
+Exit codes: 0 clean (no findings beyond the baseline), 1 new findings,
+2 usage or internal error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from aqplint import baseline as baseline_mod
+from aqplint.core import Finding, Project
+from aqplint.passes import ALL_PASSES
+
+
+def build_findings(project: Project,
+                   passes=ALL_PASSES) -> List[Finding]:
+    """Run every pass, apply inline suppressions, and append the
+    suppression-hygiene findings (AQP001/AQP002)."""
+    raw: List[Finding] = []
+    for _name, run in passes:
+        raw.extend(run(project))
+
+    modules_by_path = {m.relpath: m for m in project.modules.values()}
+    kept: List[Finding] = []
+    for f in raw:
+        mod = modules_by_path.get(f.path)
+        suppressed = False
+        if mod is not None:
+            for s in mod.suppressions:
+                if s.code == f.code and s.line == f.line:
+                    s.used = True
+                    if s.reason:
+                        suppressed = True
+                    # empty reason: the suppression is NOT honoured —
+                    # AQP001 below points at it
+        if not suppressed:
+            kept.append(f)
+
+    for mod in modules_by_path.values():
+        for s in mod.suppressions:
+            if not s.reason:
+                kept.append(Finding(
+                    code="AQP001", path=mod.relpath, line=s.comment_line,
+                    col=0, symbol=mod.enclosing_function(s.comment_line),
+                    message=(f"suppression of {s.code} without a reason "
+                             "— use `# aqplint: disable="
+                             f"{s.code}(why it is safe)`")))
+            elif not s.used:
+                kept.append(Finding(
+                    code="AQP002", path=mod.relpath, line=s.comment_line,
+                    col=0, symbol=mod.enclosing_function(s.comment_line),
+                    message=(f"unused suppression of {s.code} — the "
+                             "finding it silenced is gone; delete the "
+                             "comment")))
+    kept.sort(key=lambda f: (f.path, f.line, f.code))
+    return kept
+
+
+def main(argv: List[str] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m aqplint",
+        description=("JAX-aware static analysis for the AQP engine's "
+                     "soundness invariants (see docs/static_analysis.md)"))
+    parser.add_argument("paths", nargs="*", default=["src", "tests"],
+                        help="files/directories to analyze "
+                             "(default: src tests)")
+    parser.add_argument("--baseline", default="tools/aqplint/baseline.json",
+                        help="baseline file (default: %(default)s)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline: report everything")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current findings as the new baseline "
+                             "and exit 0")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit findings as JSON")
+    args = parser.parse_args(argv)
+
+    roots = [Path(p) for p in args.paths]
+    missing = [p for p in roots if not p.exists()]
+    if missing:
+        print(f"aqplint: no such path: {missing[0]}", file=sys.stderr)
+        return 2
+
+    try:
+        project = Project(roots, repo_root=Path.cwd())
+        findings = build_findings(project)
+    except Exception as exc:  # internal error must not look like "clean"
+        print(f"aqplint: internal error: {exc!r}", file=sys.stderr)
+        return 2
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        baseline_mod.save(baseline_path, findings)
+        print(f"aqplint: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}")
+        return 0
+
+    base = {} if args.no_baseline else baseline_mod.load(baseline_path)
+    new, stale = baseline_mod.diff(findings, base)
+
+    if args.as_json:
+        print(json.dumps({
+            "new": [vars(f) for f in new],
+            "baselined": len(findings) - len(new),
+            "stale_baseline_keys": stale,
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for k in stale:
+            print(f"aqplint: stale baseline entry {k} — finding is "
+                  "gone, shrink the baseline with --write-baseline")
+        n_mod = len(project.modules)
+        n_base = len(findings) - len(new)
+        tail = f" ({n_base} baselined)" if n_base else ""
+        print(f"aqplint: {len(new)} finding(s) in {n_mod} module(s), "
+              f"{len(ALL_PASSES)} passes{tail}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Committed-baseline workflow.
+
+The baseline maps ``"CODE::path::symbol"`` -> count. Line numbers are
+deliberately not part of the key so edits above a baselined finding do
+not un-baseline it. A run fails (exit 1) only on findings *beyond* the
+baseline counts; findings that disappear are reported so the baseline
+can be shrunk (``--write-baseline``), never grown silently.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from aqplint.core import Finding
+
+
+def key_of(finding: Finding) -> str:
+    code, path, symbol = finding.key()
+    return f"{code}::{path}::{symbol}"
+
+
+def load(path: Path) -> Dict[str, int]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return {str(k): int(v) for k, v in data.get("findings", {}).items()}
+
+
+def save(path: Path, findings: List[Finding]) -> None:
+    counts = Counter(key_of(f) for f in findings)
+    payload = {
+        "comment": ("aqplint baseline: pre-existing findings tolerated "
+                    "by CI. Shrink with --write-baseline after fixing; "
+                    "never grow by hand."),
+        "findings": dict(sorted(counts.items())),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def diff(findings: List[Finding],
+         baseline: Dict[str, int]) -> Tuple[List[Finding], List[str]]:
+    """Split into (new findings beyond baseline, stale baseline keys)."""
+    counts = Counter(key_of(f) for f in findings)
+    budget = dict(baseline)
+    new: List[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        k = key_of(f)
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+        else:
+            new.append(f)
+    stale = sorted(k for k, v in baseline.items()
+                   if counts.get(k, 0) < v)
+    return new, stale

@@ -1,0 +1,13 @@
+"""Pass registry: every pass is ``run(project) -> list[Finding]``."""
+
+from aqplint.passes import (collectives, dtype, parity, purity,
+                            shapes)
+
+#: execution order (stable so output and baselines are deterministic)
+ALL_PASSES = [
+    ("purity", purity.run),
+    ("parity", parity.run),
+    ("dtype", dtype.run),
+    ("collectives", collectives.run),
+    ("shapes", shapes.run),
+]

@@ -1,0 +1,144 @@
+"""AQP4xx — collective placement.
+
+A ``psum`` outside its ``shard_map`` region fails at trace time on a
+mesh but passes every single-device test; a collective naming the wrong
+axis folds across the wrong mesh dimension (silently wrong totals on a
+2-D mesh); and a cadence-pending fold merged outside the designated
+merge step breaks the merge-then-confirm termination contract from the
+collective-cadence design (PR 6) — bounds stop being sound-but-stale
+and become simply wrong.
+
+AQP401 — collective call in a function not reachable from any
+  ``shard_map``-wrapped callable.
+AQP402 — collective without an axis name, or with a literal axis not in
+  the known AQP mesh-axis vocabulary (``shards``, ``shardN``, ``data``,
+  ``model``, ``pod``). Non-literal axis expressions (a parameter, a
+  ``ShardInfo`` field) are accepted — they are resolved at mesh-build
+  time against the real mesh.
+AQP403 — a collective whose arguments touch the cadence-pending fold
+  slots (``pend_sums``/``pend_vmin``/``pend_vmax``/``pend_hist``)
+  outside the designated merge functions (``_merge_refresh``,
+  ``_merge_refresh_pass``, ``flush``). The per-round scalar ``pmax``
+  hint on ``pend_rounds`` is deliberately NOT in the payload set.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from aqplint.core import Finding, Project
+
+_COLLECTIVES = {"psum", "pmin", "pmax", "pmean", "all_gather",
+                "ppermute", "axis_index", "psum_scatter", "all_to_all"}
+#: collectives that take no payload (axis is the first positional)
+_AXIS_FIRST = {"axis_index"}
+
+_KNOWN_AXES = {"shards", "data", "model", "pod"}
+_SHARD_AXIS_RE = re.compile(r"^shard\d+$")
+
+_PENDING_SLOTS = {"pend_sums", "pend_vmin", "pend_vmax", "pend_hist"}
+_MERGE_FUNCS = {"_merge_refresh", "_merge_refresh_pass", "flush"}
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules.values():
+        for f in mod.functions.values():
+            for node in ast.walk(f.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if mod.enclosing_function(node.lineno) != f.qualname:
+                    continue
+                leaf = _collective_leaf(mod, node)
+                if leaf is None:
+                    continue
+                if f.fid not in project.sharded:
+                    findings.append(_f(
+                        "AQP401", mod, node, f.qualname,
+                        f"collective `{leaf}` in code not reachable from "
+                        "any shard_map-wrapped function — it will fail "
+                        "at trace time on a mesh (and no single-device "
+                        "test can see it)"))
+                _check_axis(mod, node, f.qualname, leaf, findings)
+                _check_pending(mod, node, f.qualname, leaf, findings)
+    return findings
+
+
+def _collective_leaf(mod, node: ast.Call) -> Optional[str]:
+    dotted = mod.resolve_call_name(node.func)
+    if dotted is None:
+        return None
+    leaf = dotted.rsplit(".", 1)[-1]
+    if leaf not in _COLLECTIVES:
+        return None
+    # accept jax.lax.psum, lax.psum (unresolved local), bare psum import
+    if "." in dotted and "lax" not in dotted and not dotted.startswith(
+            "jax."):
+        return None
+    return leaf
+
+
+def _check_axis(mod, node: ast.Call, symbol: str, leaf: str,
+                findings: List[Finding]) -> None:
+    axis = None
+    for kw in node.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            axis = kw.value
+            break
+    if axis is None:
+        pos = 0 if leaf in _AXIS_FIRST else 1
+        if len(node.args) > pos:
+            axis = node.args[pos]
+    if axis is None:
+        findings.append(_f(
+            "AQP402", mod, node, symbol,
+            f"collective `{leaf}` without an axis name — it must name "
+            "the AQP mesh axis explicitly"))
+        return
+    for lit in _literal_axes(axis):
+        if lit not in _KNOWN_AXES and not _SHARD_AXIS_RE.match(lit):
+            findings.append(_f(
+                "AQP402", mod, node, symbol,
+                f"collective `{leaf}` names unknown mesh axis "
+                f"'{lit}' (known: {sorted(_KNOWN_AXES)} or shardN)"))
+
+
+def _literal_axes(axis: ast.AST) -> List[str]:
+    if isinstance(axis, ast.Constant) and isinstance(axis.value, str):
+        return [axis.value]
+    if isinstance(axis, (ast.Tuple, ast.List)):
+        out = []
+        for e in axis.elts:
+            out.extend(_literal_axes(e))
+        return out
+    return []
+
+
+def _check_pending(mod, node: ast.Call, symbol: str, leaf: str,
+                   findings: List[Finding]) -> None:
+    touches = set()
+    for arg in list(node.args) + [k.value for k in node.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Name) and sub.id in _PENDING_SLOTS:
+                touches.add(sub.id)
+            elif isinstance(sub, ast.Attribute) and \
+                    sub.attr in _PENDING_SLOTS:
+                touches.add(sub.attr)
+    if not touches:
+        return
+    func_leaf = symbol.rsplit(".", 1)[-1]
+    if func_leaf not in _MERGE_FUNCS:
+        findings.append(_f(
+            "AQP403", mod, node, symbol,
+            f"collective `{leaf}` folds cadence-pending slot(s) "
+            f"{sorted(touches)} outside the designated merge step "
+            f"(allowed: {sorted(_MERGE_FUNCS)}) — merging pending "
+            "deltas off-cadence breaks merge-then-confirm termination"))
+
+
+def _f(code: str, mod, node: ast.AST, symbol: str,
+       message: str) -> Finding:
+    return Finding(code=code, path=mod.relpath, line=node.lineno,
+                   col=node.col_offset, symbol=symbol, message=message)

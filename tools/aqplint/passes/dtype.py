@@ -1,0 +1,137 @@
+"""AQP3xx — dtype discipline.
+
+The (1-delta) guarantee math is only sound in f64: an f32 sqrt/log in a
+bound evaluation loses ~7 decimal digits and the resulting interval can
+exclude the true answer while every test that compares device-vs-host
+*in the same dtype* still passes. JAX silently demotes to f32 unless
+``jax_enable_x64`` is on, so the engine routes every device entry point
+through ``state.require_x64()``.
+
+AQP301 — f32 literal/cast (``jnp.float32``, ``np.float32``,
+  ``dtype="float32"``) inside bound-eval code: ``*_device`` functions,
+  methods of ``Bounder``/``StoppingCondition`` subclasses, and methods
+  of the ``Stats``/``StatsBatch``/``DevStatsBatch`` snapshot structs.
+  (Fold-side f32 — e.g. ``moments_of_batch`` accumulators in
+  ``state.py`` — is outside this scope by design: folds are exact
+  integer/moment sums whose f64 conversion happens at snapshot time.)
+
+AQP302 — a module under ``src/`` (outside ``core/``) that *calls*
+  bound-eval device twins must call ``require_x64`` somewhere: without
+  the guard the twins run demoted and the guarantees are silently
+  wrong.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from aqplint.core import Finding, Project
+
+_STRUCT_CLASSES = {"Stats", "StatsBatch", "DevStatsBatch", "MomentState",
+                   "HistState"}
+_BASES = {"Bounder", "StoppingCondition"}
+
+#: the modules that define the bound-eval API; every ``*_device`` name
+#: they define is a twin whose caller needs the x64 guard (packing
+#: helpers like fused_scan's pack_active_device are dtype-agnostic and
+#: deliberately not in this set)
+_CORE_STEMS = {"bounders", "count_sum", "optstop", "rangetrim", "state"}
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    _f32_in_bound_eval(project, findings)
+    _guard_coverage(project, findings)
+    return findings
+
+
+# -- AQP301 ------------------------------------------------------------------
+
+
+def _f32_in_bound_eval(project: Project, findings: List[Finding]) -> None:
+    bound_classes = {c.name for c in project.subclasses_of(_BASES)}
+    bound_classes |= _BASES | _STRUCT_CLASSES
+    for mod in project.modules.values():
+        for f in mod.functions.values():
+            in_scope = (f.name.endswith("_device")
+                        or f.parent_class in bound_classes)
+            if not in_scope:
+                continue
+            for node in ast.walk(f.node):
+                if getattr(node, "lineno", None) is None:
+                    continue
+                if mod.enclosing_function(node.lineno) != f.qualname:
+                    continue
+                hit = _f32_ref(mod, node)
+                if hit:
+                    findings.append(Finding(
+                        code="AQP301", path=mod.relpath,
+                        line=node.lineno, col=node.col_offset,
+                        symbol=f.qualname,
+                        message=(f"f32 literal/cast `{hit}` in bound-eval "
+                                 "code — interval math must stay f64 or "
+                                 "the (1-delta) guarantee is unsound")))
+    return None
+
+
+def _f32_ref(mod, node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and node.attr in (
+            "float32", "float16", "bfloat16"):
+        return f".{node.attr}"
+    if isinstance(node, ast.Constant) and node.value in (
+            "float32", "float16", "bfloat16"):
+        return f'"{node.value}"'
+    return None
+
+
+# -- AQP302 ------------------------------------------------------------------
+
+
+def _twin_names(project: Project) -> Set[str]:
+    out: Set[str] = set()
+    for mod in project.modules.values():
+        if mod.name.rsplit(".", 1)[-1] not in _CORE_STEMS:
+            continue
+        for f in mod.functions.values():
+            if f.name.endswith("_device"):
+                out.add(f.name)
+    return out
+
+
+def _guard_coverage(project: Project, findings: List[Finding]) -> None:
+    twins = _twin_names(project)
+    if not twins:
+        return
+    for mod in project.modules.values():
+        parts = mod.relpath.split("/")
+        if "src" not in parts or "core" in parts:
+            continue
+        first_call = None
+        has_guard = False
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            leaf = _leaf_name(node.func)
+            if leaf == "require_x64":
+                has_guard = True
+            elif leaf in twins:
+                if first_call is None:
+                    first_call = (node, leaf)
+        if first_call and not has_guard:
+            node, leaf = first_call
+            findings.append(Finding(
+                code="AQP302", path=mod.relpath, line=node.lineno,
+                col=node.col_offset,
+                symbol=mod.enclosing_function(node.lineno),
+                message=(f"module calls bound-eval device twin `{leaf}` "
+                         "but never calls state.require_x64() — device "
+                         "bound math would run silently demoted to f32")))
+
+
+def _leaf_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None

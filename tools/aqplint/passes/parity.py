@@ -1,0 +1,167 @@
+"""AQP2xx — triad parity.
+
+The engine keeps bound-eval logic in up to three forms: scalar host
+oracle, ``*_batch`` (numpy f64), and ``*_batch_device`` / ``*_device``
+(jittable). The device twin is the one the production
+``lax.while_loop`` actually runs — if it drifts from its host oracle
+(missing override, extra/renamed parameter) the bitwise-equivalence
+tests silently stop covering it. Three rules:
+
+AQP201 — missing device twin: a class that overrides a ``*_batch``
+  method (or ``active``) must override its ``*_device`` twin in the
+  same class; a twin-covered module's public host function must have a
+  module-level ``*_device`` sibling.
+AQP202 — signature drift: the device twin's parameter list must be the
+  host parameter list, optionally extended by the allowed device-only
+  extras (``valid`` — device paths carry a validity mask because padded
+  group slots exist on device).
+AQP203 — orphan device twin: a ``*_device`` override with no host
+  counterpart in the same class means the oracle no longer constrains
+  the production path at all.
+
+Class rules apply to (textual) subclasses of ``Bounder`` and
+``StoppingCondition``. Full module coverage applies to modules named
+``count_sum`` (every ``__all__`` function is twinned by policy);
+everywhere else module-level pairs get drift checks only — e.g.
+``state.moments_of_batch`` is fold-side f32 by design and has no twin.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from aqplint.core import ClassInfo, Finding, FunctionInfo, Project
+
+#: device-side parameters a twin may append to the host signature
+_ALLOWED_EXTRAS = ("valid",)
+
+#: (host-method predicate, device suffix) class pairing rules
+_BOUNDER_BASES = {"Bounder"}
+_STOP_BASES = {"StoppingCondition"}
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    _class_rules(project, findings)
+    _module_rules(project, findings)
+    return findings
+
+
+# -- class pairing -----------------------------------------------------------
+
+
+def _class_rules(project: Project, findings: List[Finding]) -> None:
+    for cls in project.subclasses_of(_BOUNDER_BASES | _STOP_BASES):
+        stoppish = _inherits(project, cls, _STOP_BASES)
+        for name, meth in sorted(cls.methods.items()):
+            if name.endswith("_device"):
+                host = name[: -len("_device")]
+                if _is_twinned_name(host, stoppish) \
+                        and host not in cls.methods:
+                    findings.append(_f(
+                        "AQP203", meth,
+                        f"`{cls.name}.{name}` has no host counterpart "
+                        f"`{host}` in the same class — the device path "
+                        "is no longer pinned to the host oracle"))
+                continue
+            if not _is_twinned_name(name, stoppish):
+                continue
+            twin = cls.methods.get(name + "_device")
+            if twin is None:
+                findings.append(_f(
+                    "AQP201", meth,
+                    f"`{cls.name}.{name}` overridden without its device "
+                    f"twin `{name}_device` — the jitted loop will run "
+                    "the base-class bound for this class"))
+                continue
+            drift = _signature_drift(meth, twin)
+            if drift:
+                findings.append(_f(
+                    "AQP202", twin,
+                    f"`{cls.name}.{name}_device` signature drifted from "
+                    f"`{name}`: {drift}"))
+
+
+def _is_twinned_name(host_name: str, stoppish: bool) -> bool:
+    if host_name.endswith("_batch"):
+        return True
+    return stoppish and host_name == "active"
+
+
+def _inherits(project: Project, cls: ClassInfo, bases: set) -> bool:
+    return cls in project.subclasses_of(bases)
+
+
+# -- module-level pairing ----------------------------------------------------
+
+
+def _module_rules(project: Project, findings: List[Finding]) -> None:
+    for mod in project.modules.values():
+        module_funcs = {q: f for q, f in mod.functions.items()
+                        if "." not in q}
+        full_coverage = mod.name.rsplit(".", 1)[-1] == "count_sum"
+        if full_coverage:
+            for name in _public_names(mod):
+                if name.endswith("_device") or name not in module_funcs:
+                    continue
+                if name + "_device" not in module_funcs:
+                    findings.append(_f(
+                        "AQP201", module_funcs[name],
+                        f"public function `{name}` in a fully-twinned "
+                        f"module has no `{name}_device` twin"))
+        for name, host in sorted(module_funcs.items()):
+            if name.endswith("_device"):
+                continue
+            twin = module_funcs.get(name + "_device")
+            if twin is None:
+                continue
+            drift = _signature_drift(host, twin)
+            if drift:
+                findings.append(_f(
+                    "AQP202", twin,
+                    f"`{name}_device` signature drifted from "
+                    f"`{name}`: {drift}"))
+
+
+def _public_names(mod) -> List[str]:
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    out = []
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        for e in node.value.elts:
+                            if isinstance(e, ast.Constant) and isinstance(
+                                    e.value, str):
+                                out.append(e.value)
+                    return out
+    return [q for q in mod.functions
+            if "." not in q and not q.startswith("_")]
+
+
+# -- shared ------------------------------------------------------------------
+
+
+def _signature_drift(host: FunctionInfo,
+                     twin: FunctionInfo) -> Optional[str]:
+    h = _strip_self(host.params)
+    d = _strip_self(twin.params)
+    if d == h:
+        return None
+    # the twin may append allowed extras, in order, at the tail
+    extras = d[len(h):]
+    if (d[: len(h)] == h
+            and all(e in _ALLOWED_EXTRAS for e in extras)):
+        return None
+    return (f"host has ({', '.join(h)}), device has ({', '.join(d)}); "
+            f"device may only append {_ALLOWED_EXTRAS}")
+
+
+def _strip_self(params: Tuple[str, ...]) -> Tuple[str, ...]:
+    return params[1:] if params[:1] == ("self",) else params
+
+
+def _f(code: str, fn: FunctionInfo, message: str) -> Finding:
+    return Finding(code=code, path=fn.module.relpath, line=fn.lineno,
+                   col=0, symbol=fn.qualname, message=message)

@@ -1,0 +1,102 @@
+"""AQP1xx — jit-region purity.
+
+A host sync inside a traced region either fails at trace time
+(``TracerConversionError``) or, worse, silently freezes a traced value
+at its trace-time placeholder. A ``print`` or host-RNG call runs once
+at trace time and never again. None of these fail a unit test that only
+checks values, so we flag them statically: no host-sync or
+side-effecting calls in any function reachable from a ``lax.while_loop``
+body, ``pallas_call`` kernel, ``shard_map``-wrapped loop, or jit root.
+
+AQP101 — host-sync / side-effecting call in jit-traced code.
+
+``float(x)`` / ``int(x)`` / ``bool(x)`` are only flagged when ``x`` is
+not provably static: constants and parameters declared in the jit
+root's ``static_argnames`` are fine.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from aqplint.core import Finding, Project
+
+#: method calls that force a device->host transfer
+_SYNC_ATTRS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+
+#: dotted prefixes that are host-only (after import-alias resolution);
+#: jax.numpy / jax.random resolve under "jax." and are NOT matched
+_HOST_PREFIXES = ("numpy.", "time.", "random.")
+
+#: exact host-only dotted names
+_HOST_NAMES = {"print", "input", "breakpoint",
+               "numpy.asarray", "numpy.array"}
+
+_CAST_BUILTINS = {"float", "int", "bool"}
+
+
+def _static_names(project: Project, mod, qualname: str) -> set:
+    """Static params declared anywhere up the lexical nesting chain."""
+    out = set()
+    parts = qualname.split(".")
+    for i in range(len(parts)):
+        anc = ".".join(parts[: i + 1])
+        f = mod.functions.get(anc)
+        if f is not None:
+            out.update(f.static_params)
+    return out
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules.values():
+        for f in mod.functions.values():
+            if f.fid not in project.traced:
+                continue
+            statics = _static_names(project, mod, f.qualname)
+            for node in ast.walk(f.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if mod.enclosing_function(node.lineno) != f.qualname:
+                    continue
+                hit = _classify(mod, node, statics)
+                if hit:
+                    findings.append(Finding(
+                        code="AQP101", path=mod.relpath,
+                        line=node.lineno, col=node.col_offset,
+                        symbol=f.qualname,
+                        message=(f"host-sync/side-effecting call `{hit}` "
+                                 "in jit-traced code (reachable from a "
+                                 "while_loop body, pallas kernel, "
+                                 "shard_map region, or jit root)")))
+    return findings
+
+
+def _classify(mod, node: ast.Call, statics: set):
+    """Return a display name if this call is a purity violation."""
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _SYNC_ATTRS:
+        # .copy() etc. are excluded above; receiver type is unknown, but
+        # these method names are device-array-specific in this codebase
+        return f".{func.attr}()"
+    dotted = mod.resolve_call_name(func)
+    if dotted is None:
+        return None
+    if dotted in _HOST_NAMES:
+        return dotted
+    for pref in _HOST_PREFIXES:
+        if dotted.startswith(pref):
+            # numpy.ndarray annotations etc. are not calls; anything
+            # *called* under a host-only prefix runs on the host
+            return dotted
+    if dotted in _CAST_BUILTINS:
+        if not node.args:
+            return None
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant):
+            return None
+        if isinstance(arg, ast.Name) and arg.id in statics:
+            return None
+        return f"{dotted}(<traced value>)"
+    return None

@@ -1,0 +1,50 @@
+"""Benchmark-report row matching and threshold comparison.
+
+Shared by ``tools/check_perf_regression.py`` (the CI perf guard) and
+the aqplint tooling (the retrace sanitizer's budget reports use the
+same row-keyed JSON shape). Pure functions over the committed
+``benchmarks/results/BENCH_*.json`` format::
+
+    {"rows": [{"nb": 512, "hist": true, "fused_blocks_per_s": 810.2,
+               ...}, ...]}
+
+Rows are matched across reports by a key tuple of field values; a quick
+sweep point is also a row of the full baseline sweep, so comparisons
+are like-for-like.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Sequence, Tuple
+
+
+def rows_by_key(path: Path, key_fields: Sequence[str]) -> Dict[tuple, dict]:
+    """Index a report's rows by the tuple of ``key_fields`` values."""
+    report = json.loads(Path(path).read_text())
+    return {tuple(row[k] for k in key_fields): row
+            for row in report["rows"]}
+
+
+def compare(got: float, want: float, threshold: float,
+            direction: str = "higher") -> Tuple[bool, float, str]:
+    """Threshold comparison against a baseline value.
+
+    ``direction="higher"`` (throughput): fail when ``got`` drops below
+    ``want * (1 - threshold)``. ``direction="lower"`` (latency): fail
+    when ``got`` exceeds ``want * (1 + threshold)``. Returns
+    ``(ok, bound, bound_label)`` where ``bound`` is the failing edge.
+    """
+    if direction == "lower":
+        bound = want * (1.0 + threshold)
+        return got <= bound, bound, "ceiling"
+    if direction != "higher":
+        raise ValueError(f"unknown direction {direction!r}")
+    bound = want * (1.0 - threshold)
+    return got >= bound, bound, "floor"
+
+
+def meets_floor(got: float, floor: float) -> bool:
+    """Absolute machine-independent floor — thresholds never soften it."""
+    return float(got) >= float(floor)

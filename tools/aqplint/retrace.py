@@ -1,0 +1,103 @@
+"""Dynamic retrace sanitizer — the runtime counterpart of the AQP5xx
+static pass.
+
+XLA compiles one executable per (function, shape-signature). PR 3's
+static-shape padding exists precisely so the round loop re-dispatches
+with identical signatures and never retraces in steady state; nothing
+in the value-comparing test suite would notice if that regressed — the
+results stay bitwise identical, only 100x slower. This module counts
+actual compilations (via ``jax_log_compiles``, whose "Compiling <name>"
+records land on the jax logger) against budgets committed in
+``tools/aqplint/retrace_budgets.json``.
+
+Usage in a test::
+
+    from aqplint.retrace import count_compiles, assert_within_budget
+
+    run_query(...)                       # warm-up: traces + compiles
+    with count_compiles() as counter:
+        run_query(...)                   # steady state
+    assert_within_budget("fused_scan::rerun_same_shapes", counter)
+
+Budgets are exact ceilings: lowering a count is welcome (shrink the
+budget), raising one fails until the budget file is consciously bumped
+in review.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import logging
+from pathlib import Path
+from typing import Iterator, List
+
+BUDGETS_PATH = Path(__file__).with_name("retrace_budgets.json")
+
+#: loggers that emit "Compiling <fn> with global shapes..." records
+_JAX_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class CompileCounter(logging.Handler):
+    """Collects one entry per XLA compilation observed while attached."""
+
+    def __init__(self) -> None:
+        super().__init__(level=logging.DEBUG)
+        self.names: List[str] = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith("Compiling "):
+            # "Compiling <name> with global shapes and types [...]"
+            self.names.append(msg.split(" ")[1])
+
+    @property
+    def count(self) -> int:
+        return len(self.names)
+
+
+@contextlib.contextmanager
+def count_compiles() -> Iterator[CompileCounter]:
+    """Count XLA compilations inside the ``with`` block; restores
+    ``jax_log_compiles`` and logger state on exit."""
+    import jax
+
+    counter = CompileCounter()
+    prev = jax.config.jax_log_compiles
+    jax.config.update("jax_log_compiles", True)
+    loggers = [logging.getLogger(name) for name in _JAX_LOGGERS]
+    prev_levels = [lg.level for lg in loggers]
+    for lg in loggers:
+        lg.addHandler(counter)
+        if lg.level > logging.WARNING:
+            lg.setLevel(logging.WARNING)
+    try:
+        yield counter
+    finally:
+        for lg, lvl in zip(loggers, prev_levels):
+            lg.removeHandler(counter)
+            lg.setLevel(lvl)
+        jax.config.update("jax_log_compiles", prev)
+
+
+def load_budgets() -> dict:
+    return json.loads(BUDGETS_PATH.read_text())
+
+
+def assert_within_budget(key: str, counter: CompileCounter) -> None:
+    """Fail if ``counter`` saw more compilations than the committed
+    budget for ``key`` (see ``retrace_budgets.json``)."""
+    budgets = load_budgets()
+    if key not in budgets:
+        raise KeyError(
+            f"no retrace budget for {key!r} in {BUDGETS_PATH}; add it "
+            "with the measured steady-state count")
+    budget = int(budgets[key])
+    if counter.count > budget:
+        compiled = ", ".join(counter.names[:20])
+        raise AssertionError(
+            f"retrace budget exceeded for {key!r}: {counter.count} "
+            f"compilation(s) observed, budget {budget}. Compiled: "
+            f"[{compiled}]. If this increase is intentional, bump "
+            f"{BUDGETS_PATH.name}; otherwise a shape signature is "
+            "varying per call (see docs/static_analysis.md).")

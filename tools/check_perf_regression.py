@@ -31,10 +31,13 @@ benchmark runs.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from aqplint.perfrows import compare, meets_floor, rows_by_key  # noqa: E402
 
 RESULTS = Path(__file__).resolve().parent.parent / "benchmarks" / "results"
 
@@ -149,15 +152,9 @@ CHECKS = [
 ]
 
 
-def _rows_by_key(path: Path, key_fields):
-    report = json.loads(path.read_text())
-    return {tuple(row[k] for k in key_fields): row
-            for row in report["rows"]}
-
-
-def check_one(spec, threshold: float) -> int:
-    cur_path = RESULTS / spec["current"]
-    base_path = RESULTS / spec["baseline"]
+def check_one(spec, threshold: float, results_dir: Path = RESULTS) -> int:
+    cur_path = results_dir / spec["current"]
+    base_path = results_dir / spec["baseline"]
     if not cur_path.exists():
         print(f"MISSING {spec['name']}: no quick report at "
               f"{cur_path.name} (run the quick benchmark first)")
@@ -166,10 +163,10 @@ def check_one(spec, threshold: float) -> int:
         print(f"MISSING {spec['name']}: no committed baseline "
               f"{base_path.name}")
         return 1
-    cur = _rows_by_key(cur_path, spec["key"])
-    base = _rows_by_key(base_path, spec["key"])
+    cur = rows_by_key(cur_path, spec["key"])
+    base = rows_by_key(base_path, spec["key"])
     metric = spec["metric"]
-    lower_is_better = spec.get("direction") == "lower"
+    direction = spec.get("direction", "higher")
     failures = 0
     compared = 0
     for k, row in sorted(cur.items(), key=str):
@@ -179,17 +176,10 @@ def check_one(spec, threshold: float) -> int:
         compared += 1
         got = float(row[metric])
         want = float(base[k][metric])
-        if lower_is_better:
-            ceil = want * (1.0 + threshold)
-            ok = got <= ceil
-            bound_txt = f"(ceiling {ceil:.2f})"
-        else:
-            floor = want * (1.0 - threshold)
-            ok = got >= floor
-            bound_txt = f"(floor {floor:.2f})"
+        ok, bound, label = compare(got, want, threshold, direction)
         verdict = "ok  " if ok else "FAIL"
         print(f"{verdict} {spec['name']}{k}: {metric} {got:.2f} vs "
-              f"baseline {want:.2f} {bound_txt}")
+              f"baseline {want:.2f} ({label} {bound:.2f})")
         if not ok:
             failures += 1
     for k in sorted(set(base) - set(cur), key=str):
@@ -204,16 +194,17 @@ def check_one(spec, threshold: float) -> int:
     return failures
 
 
-def check_within(spec, threshold: float) -> int:
+def check_within(spec, threshold: float,
+                 results_dir: Path = RESULTS) -> int:
     """A ``kind="within"`` check compares two rows of the SAME current
     report (machine-independent by construction): the ``faster`` config
     must not trail the ``slower`` one by more than the threshold."""
-    cur_path = RESULTS / spec["current"]
+    cur_path = results_dir / spec["current"]
     if not cur_path.exists():
         print(f"MISSING {spec['name']}: no quick report at "
               f"{cur_path.name} (run the quick benchmark first)")
         return 1
-    cur = _rows_by_key(cur_path, spec["key"])
+    cur = rows_by_key(cur_path, spec["key"])
     rows = {}
     for role in ("faster", "slower"):
         k = (spec[role],)
@@ -223,8 +214,7 @@ def check_within(spec, threshold: float) -> int:
                   "guard config")
             return 1
         rows[role] = float(cur[k][spec["metric"]])
-    floor = rows["slower"] * (1.0 - threshold)
-    ok = rows["faster"] >= floor
+    ok, floor, _ = compare(rows["faster"], rows["slower"], threshold)
     print(f"{'ok  ' if ok else 'FAIL'} {spec['name']}: "
           f"{spec['metric']}({spec['faster']}) {rows['faster']:.2f} vs "
           f"{spec['metric']}({spec['slower']}) {rows['slower']:.2f} "
@@ -232,17 +222,17 @@ def check_within(spec, threshold: float) -> int:
     return 0 if ok else 1
 
 
-def check_floor(spec) -> int:
+def check_floor(spec, results_dir: Path = RESULTS) -> int:
     """A ``kind="floor"`` check holds one row of the current report to an
     absolute metric floor — a machine-independent product claim (e.g.
     continuous batching must beat sequential serving 2x), so the
     regression threshold does not soften it."""
-    cur_path = RESULTS / spec["current"]
+    cur_path = results_dir / spec["current"]
     if not cur_path.exists():
         print(f"MISSING {spec['name']}: no quick report at "
               f"{cur_path.name} (run the quick benchmark first)")
         return 1
-    cur = _rows_by_key(cur_path, spec["key"])
+    cur = rows_by_key(cur_path, spec["key"])
     k = tuple(spec["row"])
     if k not in cur:
         print(f"FAIL {spec['name']}: row {k} missing from "
@@ -251,7 +241,7 @@ def check_floor(spec) -> int:
         return 1
     got = float(cur[k][spec["metric"]])
     floor = float(spec["floor"])
-    ok = got >= floor
+    ok = meets_floor(got, floor)
     print(f"{'ok  ' if ok else 'FAIL'} {spec['name']}{k}: "
           f"{spec['metric']} {got:.2f} (hard floor {floor:.2f})")
     return 0 if ok else 1
