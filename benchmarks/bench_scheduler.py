@@ -31,6 +31,14 @@ lower-is-better rows, and enforces the >=2x burst-speedup floor.
 Run: ``PYTHONPATH=src python benchmarks/bench_scheduler.py [--quick]``
      ``... bench_scheduler.py --trace poisson --n 64 --seed 7`` replays
      a ``tests/helpers/sim_workload`` trace through the scheduler only.
+     ``... bench_scheduler.py --faults 23`` runs the chaos-replay check:
+     a seeded Poisson trace under the seeded fault schedule 23, twice,
+     asserting the two scheduler event logs are identical.
+
+The ``burst_ckpt`` workload row is the burst trace with a checkpoint
+snapshot taken every scheduler step (``checkpoint_every=1``, the
+worst-case cadence); the perf guard's within-run check bounds its
+throughput to within 5% of plain ``burst``.
 """
 
 from __future__ import annotations
@@ -92,9 +100,10 @@ def make_trace(workload: str, n: int, seed: int):
     return poisson_trace(make_query, n=n, rate=200.0, seed=seed)
 
 
-def run_scheduler(frame: FastFrame, trace):
+def run_scheduler(frame: FastFrame, trace, checkpoint_every=None):
     sched = QueryScheduler(FrameServer(frame), SimClock(), seed=1,
-                           round_cost_s=ROUND_COST_S, max_slots=8)
+                           round_cost_s=ROUND_COST_S, max_slots=8,
+                           checkpoint_every=checkpoint_every)
     sched.submit_trace(trace)
     t0 = time.perf_counter()
     sched.run_until_idle()
@@ -114,11 +123,16 @@ def run_sequential(frame: FastFrame, trace):
 
 
 def run_workload(workload: str, nb: int, n: int, seed: int):
-    trace = make_trace(workload, n, seed)
+    # "burst_ckpt" is the burst trace with a checkpoint every scheduler
+    # step — the worst-case snapshot cadence; the perf guard holds its
+    # throughput within 5% of plain "burst" (checkpoint overhead bound)
+    ckpt = 1 if workload == "burst_ckpt" else None
+    trace = make_trace("burst" if ckpt else workload, n, seed)
     # warm-up on throwaway frames (compile cache), then timed best-of-2
-    run_scheduler(build_frame(nb), trace)
+    run_scheduler(build_frame(nb), trace, checkpoint_every=ckpt)
     run_sequential(build_frame(nb), trace)
-    wall, lats = min((run_scheduler(build_frame(nb), trace)
+    wall, lats = min((run_scheduler(build_frame(nb), trace,
+                                    checkpoint_every=ckpt)
                       for _ in range(2)), key=lambda wl: wl[0])
     t_seq = min(run_sequential(build_frame(nb), trace) for _ in range(2))
     qps_sched = n / wall
@@ -143,7 +157,39 @@ def main(argv=None):
                          "no report)")
     ap.add_argument("--n", type=int, default=N_QUERIES)
     ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--faults", type=int, metavar="SEED",
+                    help="chaos replay: run a Poisson trace twice under "
+                         "the seeded fault schedule SEED and assert the "
+                         "two event logs are identical")
     args = ap.parse_args(argv)
+
+    if args.faults is not None:
+        sys.path.insert(0, str(ROOT))
+        from tests.helpers.sim_workload import (assert_same_log,
+                                                poisson_trace)
+        from repro.testing import FaultInjector, fault_schedule
+        trace = poisson_trace(make_query, n=args.n, rate=200.0,
+                              seed=args.seed)
+        faults = fault_schedule(args.faults, 2000, rate=0.05)
+
+        def chaos_run():
+            sched = QueryScheduler(
+                FrameServer(build_frame(SWEEP_NB[0])), SimClock(),
+                seed=1, round_cost_s=ROUND_COST_S, max_slots=8,
+                checkpoint_every=2, fault_hook=FaultInjector(faults))
+            sched.submit_trace(trace)
+            sched.run_until_idle()
+            return sched
+
+        a, b = chaos_run(), chaos_run()
+        assert_same_log(a.log, b.log)
+        from collections import Counter
+        print(f"chaos replay OK: {len(a.log)} log events identical "
+              f"across two runs ({len(faults)} scheduled faults)")
+        print(json.dumps(dict(
+            statuses=dict(Counter(tk.status for tk in a.tickets)),
+            log_kinds=dict(Counter(ev[2] for ev in a.log))), indent=1))
+        return a
 
     if args.trace:
         sys.path.insert(0, str(ROOT))
@@ -165,6 +211,7 @@ def main(argv=None):
     rows = []
     for nb in (SWEEP_NB[:1] if args.quick else SWEEP_NB):
         rows.append(run_workload("burst", nb, args.n, args.seed))
+        rows.append(run_workload("burst_ckpt", nb, args.n, args.seed))
         rows.append(run_workload("poisson", nb, args.n, args.seed))
 
     print(f"{'workload':>8s} {'nb':>6s} {'seq q/s':>9s} "

@@ -401,6 +401,39 @@ class _ScanViews:
             pad_to=pad_to)
         self.seen_presence += self.presence[idx].sum(axis=0)
 
+    def export_state(self) -> Dict[str, object]:
+        """Deep-copy the mutable fold/coverage/soundness state (the scan
+        signature's derived arrays — presence, static_ok, bounds — are
+        pure functions of the frame and are NOT exported; a restored
+        slot recomputes them). Consumed by
+        :class:`repro.serve.checkpoint.PassCheckpoint`."""
+        return dict(
+            use_hist=self.use_hist, anchor=self.anchor,
+            state=MomentState(*(np.array(x) for x in self.state)),
+            hist=None if self.hist is None else np.array(self.hist),
+            seen_presence=np.array(self.seen_presence),
+            processed=np.array(self.processed),
+            exact=np.array(self.exact),
+            tainted=np.array(self.tainted),
+            blocks_fetched=int(self.blocks_fetched))
+
+    def import_state(self, snap: Dict[str, object]) -> None:
+        """Overwrite the mutable state from an :meth:`export_state`
+        snapshot (bitwise: the arrays are copied back verbatim, so a
+        restored scan continues exactly where the snapshot was taken)."""
+        if snap["use_hist"] != self.use_hist or \
+                snap["anchor"] != self.anchor:
+            raise ValueError("checkpoint does not match this slot's "
+                             "scan configuration")
+        self.state = MomentState(*(np.array(x) for x in snap["state"]))
+        self.hist = (None if snap["hist"] is None
+                     else np.array(snap["hist"]))
+        self.seen_presence = np.array(snap["seen_presence"])
+        self.processed = np.array(snap["processed"])
+        self.exact = np.array(snap["exact"])
+        self.tainted = np.array(snap["tainted"])
+        self.blocks_fetched = int(snap["blocks_fetched"])
+
     def update_exact(self, pos: Optional[int] = None) -> None:
         """Mark fully-covered views exact; on lap exhaustion
         (``pos >= lap_end``, i.e. the cursor walked one full rotation
@@ -450,6 +483,23 @@ class _QueryIntervals:
         self.refreshed = np.zeros(G, dtype=bool)
         self.active = slot.valid.copy()
         self.finished = False
+
+    def export_state(self) -> Dict[str, object]:
+        """Deep-copy the running interval state (the checkpoint twin of
+        :meth:`_ScanViews.export_state` for per-query state)."""
+        return dict(lo=np.array(self.lo), hi=np.array(self.hi),
+                    est=np.array(self.est),
+                    refreshed=np.array(self.refreshed),
+                    active=np.array(self.active),
+                    finished=bool(self.finished))
+
+    def import_state(self, snap: Dict[str, object]) -> None:
+        self.lo = np.array(snap["lo"])
+        self.hi = np.array(snap["hi"])
+        self.est = np.array(snap["est"])
+        self.refreshed = np.array(snap["refreshed"])
+        self.active = np.array(snap["active"])
+        self.finished = bool(snap["finished"])
 
     def cond_active(self) -> np.ndarray:
         """Stopping-condition activity over EXISTING views only (phantom

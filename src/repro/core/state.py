@@ -161,6 +161,23 @@ def to_host(state: MomentState) -> MomentState:
     return MomentState(*(np.asarray(f, np.float64) for f in state))
 
 
+def moments_nonfinite(state: MomentState,
+                      hist: Optional[np.ndarray] = None) -> bool:
+    """NaN/inf sentinel over a host fold state: True when the moments (or
+    the optional histogram) carry non-finite values that a poison row
+    (NaN/inf in the value column) has folded in. ``vmin``/``vmax`` are
+    legitimately ±inf for empty groups, so only NaN is poison there;
+    count/mean/m2 of real data are always finite. Used by the serving
+    layer to quarantine poison queries before their CIs collapse to NaN
+    "results" (see ``docs/robustness.md``)."""
+    count, mean, m2, vmin, vmax = (np.asarray(f) for f in state)
+    bad = (~np.isfinite(count) | ~np.isfinite(mean) | ~np.isfinite(m2)
+           | np.isnan(vmin) | np.isnan(vmax))
+    if hist is not None:
+        bad = bad | ~np.isfinite(np.asarray(hist)).all(axis=-1)
+    return bool(np.any(bad))
+
+
 def merge_hist_host(hist: Optional[np.ndarray], delta) -> np.ndarray:
     """Float64 histogram accumulation twin of :func:`merge_moments_host`:
     fold a device-side f32 ``(G, K)`` bin-count delta into the host's f64

@@ -1038,6 +1038,30 @@ def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
         pend_rounds=pend, merge_now=pend)
 
 
+def carry_nonfinite_slots(carry: PassCarry) -> Tuple[bool, ...]:
+    """Host-side NaN sentinel over a fetched pass carry: one flag per
+    slot, True when that slot's folded state is poisoned (non-finite
+    count/mean/m2, NaN min/max, or NaN histogram mass).
+
+    ``vmin``/``vmax`` are legitimately ``±inf`` for groups no row has
+    touched yet, so only NaN counts as poison there. The serving layer
+    uses this to quarantine a poison query's slot at a chunk boundary
+    without inspecting co-resident slots (membership independence)."""
+    import numpy as np
+
+    flags = []
+    for slot in carry.slots:
+        count, mean, m2, vmin, vmax = (
+            np.asarray(jax.device_get(f)) for f in slot.state)
+        bad = (~np.isfinite(count) | ~np.isfinite(mean)
+               | ~np.isfinite(m2) | np.isnan(vmin) | np.isnan(vmax))
+        if slot.hist is not None:
+            hist = np.asarray(jax.device_get(slot.hist))
+            bad = bad | ~np.isfinite(hist).all(axis=-1)
+        flags.append(bool(np.any(bad)))
+    return tuple(flags)
+
+
 def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     lookahead: int, cover_cap: int, max_rounds: int,
                     chunk: Optional[int],

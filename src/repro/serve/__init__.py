@@ -4,14 +4,19 @@
 one :class:`~repro.aqp.engine.FastFrame` into shared fused-scan passes;
 :class:`SharedPass` exposes the incremental admit/step/retire/finish
 lifecycle underneath, and :class:`QueryScheduler` turns it into a
-continuous-batching serving loop with simulated or wall clocks (see
-:mod:`repro.serve.frame_server`, :mod:`repro.serve.scheduler` and
-``docs/serving.md``).
+continuous-batching serving loop with simulated or wall clocks,
+checkpointed fault recovery and a sound degradation ladder (see
+:mod:`repro.serve.frame_server`, :mod:`repro.serve.scheduler`,
+:mod:`repro.serve.checkpoint`, ``docs/serving.md`` and
+``docs/robustness.md``).
 """
 
-from repro.serve.frame_server import FrameServer, SharedPass
+from repro.serve.checkpoint import PassCheckpoint, SlotCheckpoint
+from repro.serve.frame_server import (FrameServer, SharedPass,
+                                      UnsupportedPassConfig)
 from repro.serve.scheduler import (AdmissionQuote, QueryScheduler,
                                    QueryTicket, SimClock, WallClock)
 
 __all__ = ["FrameServer", "SharedPass", "QueryScheduler", "QueryTicket",
-           "AdmissionQuote", "SimClock", "WallClock"]
+           "AdmissionQuote", "SimClock", "WallClock", "PassCheckpoint",
+           "SlotCheckpoint", "UnsupportedPassConfig"]

@@ -89,11 +89,21 @@ from repro.aqp.engine import (FastFrame, _QueryIntervals, _ScanViews,
                               _host_copy, _make_device_refresh,
                               _restore_views_from_carry, _round_window)
 from repro.aqp.query import AggQuery, QueryResult
-from repro.core.state import MomentState
+from repro.core.state import MomentState, moments_nonfinite
 from repro.kernels import fused_scan as kfused
 from repro.kernels import ops as kops
+from repro.serve.checkpoint import PassCheckpoint, SlotCheckpoint
 
-__all__ = ["FrameServer", "SharedPass"]
+__all__ = ["FrameServer", "SharedPass", "UnsupportedPassConfig"]
+
+
+class UnsupportedPassConfig(RuntimeError):
+    """A pass configuration the serving stack cannot run — currently
+    carousel admission (anchor > 0) on a sharded device pass loop.
+    Raised by admission-time validation BEFORE any pass state mutates,
+    so a scheduler can catch it and route the queries to a fresh pass
+    instead of crashing the serving loop (the loop builder keeps its own
+    late check as a backstop)."""
 
 
 class _SlotExec:
@@ -162,7 +172,9 @@ class SharedPass:
 
     def __init__(self, frame: FastFrame, filters, sampling: str,
                  start_block: Optional[int], seed: int, max_rounds: int,
-                 chunk_rounds: Optional[int] = None):
+                 chunk_rounds: Optional[int] = None,
+                 force_host: bool = False,
+                 force_unsharded: bool = False):
         self.t0 = time.perf_counter()
         self.frame = frame
         cfg = frame.config
@@ -187,12 +199,21 @@ class SharedPass:
         self.window = _round_window(self.nb, self.lookahead,
                                     self.cover_cap)
         self.impl = kops.resolve_impl(cfg.impl)
-        self.device_pass = cfg.resolve_device_loop()
+        # the degradation ladder (docs/robustness.md) rebuilds a faulty
+        # pass from its checkpoint with these flags: force_host drops to
+        # the per-round host oracle loop, force_unsharded keeps the
+        # device loop but on a single device — both are existing oracle
+        # paths, so every rung preserves soundness.
+        self.force_host = bool(force_host)
+        self.force_unsharded = bool(force_unsharded)
+        self.device_pass = cfg.resolve_device_loop() and not force_host
         if cfg.shard_rows:
             cfg.resolve_shard_rows()  # loud guard, as in FastFrame.run
         # the sharded layout applies to the device pass loop only (the
         # host loop and the recovery pass materialize on host)
-        self.shards = frame.block_shards() if self.device_pass else None
+        self.shards = (frame.block_shards()
+                       if self.device_pass and not force_unsharded
+                       else None)
         self.chunk = (chunk_rounds if chunk_rounds is not None
                       else (cfg.sync_every or cfg.chunk_rounds))
 
@@ -219,6 +240,12 @@ class SharedPass:
         self._qc_of: Dict[int, _QueryIntervals] = {}  # id(query) -> qci
         self._t0: Dict[int, float] = {}             # id(qci) -> t0
         self._rec_rounds: Dict[int, int] = {}       # id(slot) -> rounds
+        # results restored from a checkpoint for queries whose slots no
+        # longer exist (retired before the snapshot): id(query) -> result
+        self._ext_results: Dict[int, QueryResult] = {}
+        # per-slot kernel NaN sentinel from the last device chunk
+        # (None on the host path; see quarantine())
+        self._sentinel: Optional[Tuple[bool, ...]] = None
 
     # -- coordinates -----------------------------------------------------------
 
@@ -256,6 +283,13 @@ class SharedPass:
         :class:`~repro.aqp.engine._QueryIntervals` in input order."""
         frame = self.frame
         t0 = self.t0 if t0 is None else t0
+        if self.shards is not None and (self.wrap or self.pos > 0):
+            # typed and raised BEFORE any state mutates: the scheduler
+            # catches this and opens a fresh pass for the late joiner
+            raise UnsupportedPassConfig(
+                "carousel admission (anchor > 0) is not supported on a "
+                "sharded frame's device pass loop; disable shard_rows "
+                "or step the pass on host (device_loop=False)")
         for q in queries:
             if tuple(f.key() for f in q.filters) != tuple(
                     f.key() for f in self.filters):
@@ -293,11 +327,6 @@ class SharedPass:
             self.mask_dev = frame._device_mask(queries[0].filters,
                                                self.shards)
             self.static_ok_dev = self._rep(self.slots[0].views.static_ok)
-        if self.wrap and self.shards is not None:
-            raise RuntimeError(
-                "carousel admission (anchor > 0) is not supported on a "
-                "sharded frame's device pass loop; disable shard_rows or "
-                "step the pass on host (device_loop=False)")
         return [out_qcis[id(q)] for q in queries]
 
     # -- retire ----------------------------------------------------------------
@@ -312,6 +341,155 @@ class SharedPass:
         dropped = len(self.slots) - len(keep)
         self.slots = keep
         return dropped
+
+    # -- fault tolerance: checkpoint / restore / freeze / quarantine -----------
+
+    def checkpoint(self) -> PassCheckpoint:
+        """Snapshot the complete pass state at the current round/chunk
+        boundary (see :mod:`repro.serve.checkpoint`). Every boundary is
+        fully merged, so restoring the snapshot and stepping forward is
+        bitwise-identical to never having stopped."""
+        slots = [SlotCheckpoint(
+            queries=[qc.q for qc in s.qcis],
+            anchor=s.anchor, join_round=s.join_round,
+            row_offset=s.row_offset, lap_done_round=s.lap_done_round,
+            metrics=dict(s.metrics),
+            views=s.views.export_state(),
+            qcs=[qc.export_state() for qc in s.qcis])
+            for s in self.slots]
+        results: Dict[int, QueryResult] = dict(self._ext_results)
+        t0s: Dict[int, float] = {}
+        for qid, qc in self._qc_of.items():
+            t0s[qid] = self._t0[id(qc)]
+            res = self.finished.get(id(qc))
+            if res is not None:
+                results[qid] = res
+        return PassCheckpoint(
+            filters=self.filters, sampling=self.sampling,
+            start=int(self.start), max_rounds=self.max_rounds,
+            pos=self.pos, rounds=self.rounds, n_live=self.n_live,
+            wrap=self.wrap, slots=slots, results=results, t0s=t0s)
+
+    def restore(self, cp: PassCheckpoint) -> None:
+        """Restore this pass in place from a checkpoint. The pass must
+        have been opened with the checkpoint's filters/sampling/start
+        (see :meth:`FrameServer.resume_pass`); slot execution state is
+        rebuilt from scratch (device buffers re-materialize through the
+        frame's caches) and the exported fold/interval state imported
+        over it."""
+        if tuple(f.key() for f in cp.filters) != tuple(
+                f.key() for f in self.filters):
+            raise ValueError("checkpoint filters do not match this pass")
+        if int(cp.start) != int(self.start) or cp.sampling != \
+                self.sampling:
+            raise ValueError("checkpoint scan order does not match this "
+                             "pass (start/sampling differ)")
+        if cp.wrap and self.shards is not None:
+            raise UnsupportedPassConfig(
+                "cannot restore a carousel (wrapped) checkpoint onto a "
+                "sharded device pass loop; resume with "
+                "force_unsharded/force_host")
+        self.pos, self.rounds = int(cp.pos), int(cp.rounds)
+        self.wrap = bool(cp.wrap)
+        self.slots = []
+        self.finished = {}
+        self._qc_of = {}
+        self._t0 = {}
+        self._rec_rounds = {}
+        self._ext_results = {}
+        self._sentinel = None
+        frame = self.frame
+        for sc in cp.slots:
+            slot = _SlotExec(frame, sc.queries[0], self.skipping,
+                             sc.queries, self.shards, anchor=sc.anchor,
+                             join_round=sc.join_round,
+                             row_offset=sc.row_offset)
+            slot.lap_done_round = sc.lap_done_round
+            slot.metrics = dict(sc.metrics)
+            slot.views.import_state(sc.views)
+            for qc, snap in zip(slot.qcis, sc.qcs):
+                qc.import_state(snap)
+            self.slots.append(slot)
+            for q, qc in zip(sc.queries, slot.qcis):
+                self._qc_of[id(q)] = qc
+                self._t0[id(qc)] = cp.t0s.get(id(q), self.t0)
+                if id(q) in cp.results:
+                    self.finished[id(qc)] = cp.results[id(q)]
+        live_ids = {id(q) for s in cp.slots for q in s.queries}
+        for qid, res in cp.results.items():
+            if qid not in live_ids:
+                self._ext_results[qid] = res
+        self.n_live = sum(1 for s in self.slots for qc in s.qcis
+                          if not qc.finished)
+        if self.slots and self.mask_dev is None:
+            self.mask_dev = frame._device_mask(
+                self.slots[0].qcis[0].q.filters, self.shards)
+            self.static_ok_dev = self._rep(self.slots[0].views.static_ok)
+
+    def freeze_partial(self, q: AggQuery) -> QueryResult:
+        """Finalize ``q`` NOW from its current interval state: the
+        anytime-valid CI at any round boundary is a sound answer, so a
+        deadline-expired or ladder-exhausted query returns its current
+        (wider) interval as a partial-with-guarantee result instead of
+        being dropped. Idempotent for already-finished queries."""
+        qc = self._qc_of[id(q)]
+        if id(qc) in self.finished:
+            return self.finished[id(qc)]
+        s = next(s for s in self.slots if qc in s.qcis)
+        le = s.views.lap_end
+        k_s = max(self.rounds - s.join_round, 0)
+        r_s = self._rows_at(min(self.pos, le)) - s.row_offset
+        res = qc.result(k_s, self.pos, self.cum_rows, dict(s.metrics),
+                        self._t0[id(qc)], stopped_early=True,
+                        rows_covered=r_s)
+        qc.finished = True
+        qc.active = np.zeros_like(qc.active)
+        self.finished[id(qc)] = res
+        self.n_live -= 1
+        return res
+
+    def quarantine(self) -> List[AggQuery]:
+        """Evict poisoned slots at the current round boundary: a slot
+        whose fold state or query intervals went NaN (detected by the
+        kernel sentinel on the device path, or
+        :func:`~repro.core.state.moments_nonfinite` on host state) is
+        dropped whole, its unfinished queries returned for the caller to
+        fail/quarantine. Results snapshotted BEFORE the poison appeared
+        stay valid and are kept; NaN-tainted snapshots are discarded.
+        Co-resident slots are untouched — slot membership independence
+        means their folds never saw the poison, so survivors stay
+        bitwise-identical to a run that never admitted the poison
+        query."""
+        evicted: List[AggQuery] = []
+        keep: List[_SlotExec] = []
+        for i, s in enumerate(self.slots):
+            poison = (self._sentinel is not None
+                      and i < len(self._sentinel)
+                      and bool(self._sentinel[i]))
+            poison = poison or moments_nonfinite(
+                s.views.state,
+                s.views.hist if s.views.use_hist else None)
+            if not poison:
+                poison = any(
+                    np.isnan(qc.lo).any() or np.isnan(qc.hi).any()
+                    or np.isnan(qc.est).any() for qc in s.qcis)
+            if not poison:
+                keep.append(s)
+                continue
+            for qc in s.qcis:
+                res = self.finished.get(id(qc))
+                if res is not None:
+                    if (np.isnan(res.lo).any() or np.isnan(res.hi).any()
+                            or np.isnan(res.estimate).any()):
+                        del self.finished[id(qc)]
+                        evicted.append(qc.q)
+                    continue
+                qc.finished = True
+                self.n_live -= 1
+                evicted.append(qc.q)
+        self.slots = keep
+        self._sentinel = None
+        return evicted
 
     # -- step ------------------------------------------------------------------
 
@@ -337,6 +515,7 @@ class SharedPass:
         frame = self.frame
         cfg = self.cfg
         pos0 = self.pos
+        self._sentinel = None  # host path: quarantine inspects views
         self.rounds += 1
         stacks = tuple(s.active_stack() for s in self.slots)
         kwargs = {}
@@ -426,7 +605,11 @@ class SharedPass:
                 qc.finished = True
 
     def result_of(self, q: AggQuery) -> QueryResult:
-        return self.finished[id(self._qc_of[id(q)])]
+        qc = self._qc_of.get(id(q))
+        if qc is not None and id(qc) in self.finished:
+            return self.finished[id(qc)]
+        # restored from a checkpoint after the query's slot retired
+        return self._ext_results[id(q)]
 
     # -- device-resident stepping ----------------------------------------------
 
@@ -448,7 +631,7 @@ class SharedPass:
         shards = self.shards
         wrap = self.wrap
         if wrap and shards is not None:
-            raise RuntimeError(
+            raise UnsupportedPassConfig(
                 "carousel passes do not compose with the sharded device "
                 "loop")
         horizon = self.horizon
@@ -598,6 +781,10 @@ class SharedPass:
                     or int(carry.rounds) >= self.max_rounds):
                 break
 
+        # kernel-layer NaN sentinel: per-slot poison flags over the
+        # fetched carry, consumed by quarantine() at this boundary
+        self._sentinel = kfused.carry_nonfinite_slots(carry)
+
         # -- writeback: slots' shared fold state + metrics ----------------
         self.pos, self.rounds = int(carry.pos), int(carry.rounds)
         self.n_live = int(carry.n_live)
@@ -719,6 +906,25 @@ class FrameServer:
         (admit/step/retire/finish lifecycle; see :class:`SharedPass`)."""
         return SharedPass(self.frame, filters, sampling, start_block,
                           seed, max_rounds, chunk_rounds)
+
+    def resume_pass(self, cp: PassCheckpoint,
+                    chunk_rounds: Optional[int] = None,
+                    force_host: bool = False,
+                    force_unsharded: bool = False) -> SharedPass:
+        """Rebuild a pass from a :class:`~repro.serve.checkpoint.
+        PassCheckpoint` — the retry path after a fault, and (with the
+        ``force_*`` flags or a smaller ``chunk_rounds``) the degradation
+        ladder's rung changes. The resumed pass answers ``result_of``
+        for the same query objects and, under the same config, steps
+        bitwise-identically to the uninterrupted original."""
+        p = SharedPass(self.frame, cp.filters, cp.sampling,
+                       start_block=int(cp.start), seed=0,
+                       max_rounds=cp.max_rounds,
+                       chunk_rounds=chunk_rounds,
+                       force_host=force_host,
+                       force_unsharded=force_unsharded)
+        p.restore(cp)
+        return p
 
     def run_batch(self, queries: Sequence[AggQuery],
                   sampling: str = "active_peek",

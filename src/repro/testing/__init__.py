@@ -1,0 +1,18 @@
+"""repro.testing — deterministic test harnesses (fault injection).
+
+Nothing under this package may be imported from production modules:
+aqplint's AQP104 pass enforces that ``repro.testing`` is reachable only
+from tests, benchmarks and itself. The scheduler consumes a
+:class:`~repro.testing.faults.FaultInjector` as an opaque ``fault_hook``
+object, so serving code never names this package.
+"""
+
+from repro.testing.faults import (FaultEvent, FaultInjector,
+                                  InjectedDispatchError, InjectedFault,
+                                  InjectedOOM, InjectedShardDropout,
+                                  InjectedTransferError, fault_schedule)
+
+__all__ = ["FaultEvent", "FaultInjector", "InjectedFault",
+           "InjectedDispatchError", "InjectedOOM",
+           "InjectedShardDropout", "InjectedTransferError",
+           "fault_schedule"]

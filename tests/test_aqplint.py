@@ -364,6 +364,50 @@ def test_shapes_flags_non_hashable_static_arg(tmp_path):
     assert good == []
 
 
+# -- faults (AQP104) -----------------------------------------------------------
+
+def test_faults_flags_production_import_of_testing(tmp_path):
+    found = lint(tmp_path, {
+        "repro/__init__.py": "",
+        "repro/serve/__init__.py": "",
+        "repro/serve/bad.py": """
+            from repro.testing.faults import FaultInjector
+
+            def step(pas):
+                return FaultInjector([])
+        """}, only={"faults"})
+    assert codes(found) == ["AQP104"]
+    assert found[0].path.endswith("repro/serve/bad.py")
+
+
+def test_faults_flags_plain_import_form(tmp_path):
+    found = lint(tmp_path, {"repro/worse.py": """
+        def lazy():
+            import repro.testing
+            return repro.testing
+    """}, only={"faults"})
+    assert codes(found) == ["AQP104"]
+    assert found[0].symbol == "lazy"
+
+
+def test_faults_exempts_harness_and_tests(tmp_path):
+    found = lint(tmp_path, {
+        "repro/testing/__init__.py": """
+            from repro.testing.faults import FaultInjector
+        """,
+        "repro/testing/faults.py": """
+            class FaultInjector:
+                pass
+        """,
+        "tests/test_chaos.py": """
+            from repro.testing import FaultInjector
+        """,
+        "benchmarks/bench_chaos.py": """
+            import repro.testing.faults as faults
+        """}, only={"faults"})
+    assert found == []
+
+
 # -- suppressions --------------------------------------------------------------
 
 _BAD_JIT = """

@@ -136,3 +136,34 @@ def test_guard_within_compares_same_report(tmp_path):
         {"config": "mesh2_k4", "rounds_per_s": 60.0},
         {"config": "mesh2_k1", "rounds_per_s": 100.0}])
     assert guard.check_within(spec, 0.30, results_dir=tmp_path) == 1
+
+
+def _ckpt_spec():
+    # tuple row keys + a spec-level threshold tighter than the global
+    # one (the checkpoint-overhead bound)
+    return dict(name="ckpt", kind="within", current="cur.json",
+                key=("workload", "nb"), metric="scheduler_qps",
+                faster=("burst_ckpt", 512), slower=("burst", 512),
+                threshold=0.05)
+
+
+def test_guard_within_tuple_rows_and_spec_threshold(tmp_path):
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "nb": 512, "scheduler_qps": 100.0},
+        {"workload": "burst_ckpt", "nb": 512, "scheduler_qps": 96.0}])
+    assert guard.check_within(_ckpt_spec(), 0.30,
+                              results_dir=tmp_path) == 0
+    # a 10% checkpoint overhead fails the 5% bound even though the
+    # global threshold (0.30) would have let it through
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "nb": 512, "scheduler_qps": 100.0},
+        {"workload": "burst_ckpt", "nb": 512, "scheduler_qps": 90.0}])
+    assert guard.check_within(_ckpt_spec(), 0.30,
+                              results_dir=tmp_path) == 1
+
+
+def test_guard_within_tuple_row_missing_fails(tmp_path):
+    write_report(tmp_path / "cur.json", [
+        {"workload": "burst", "nb": 512, "scheduler_qps": 100.0}])
+    assert guard.check_within(_ckpt_spec(), 0.30,
+                              results_dir=tmp_path) == 1

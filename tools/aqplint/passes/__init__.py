@@ -1,6 +1,6 @@
 """Pass registry: every pass is ``run(project) -> list[Finding]``."""
 
-from aqplint.passes import (collectives, dtype, parity, purity,
+from aqplint.passes import (collectives, dtype, faults, parity, purity,
                             shapes)
 
 #: execution order (stable so output and baselines are deterministic)
@@ -10,4 +10,5 @@ ALL_PASSES = [
     ("dtype", dtype.run),
     ("collectives", collectives.run),
     ("shapes", shapes.run),
+    ("faults", faults.run),
 ]

@@ -1,0 +1,65 @@
+"""AQP104 — fault-injection hooks unreachable from production code.
+
+``repro.testing`` (the deterministic fault-injection harness) exists so
+chaos tests can drive the scheduler through failures. If production code
+ever imported it, an injection point would sit on a real serving path —
+the exact class of bug the harness exists to catch. The scheduler takes
+its ``fault_hook`` as an opaque object precisely so serving code never
+names the package; this pass machine-checks that contract: no module
+under ``repro.`` (outside ``repro.testing`` itself) may import
+``repro.testing``. Tests and benchmarks (module names not under
+``repro.``) are exempt — that is who the harness is for.
+
+AQP104 — production module imports repro.testing.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from aqplint.core import Finding, Project
+
+_PKG = "repro.testing"
+
+
+def _is_production(name: str) -> bool:
+    inside = name == "repro" or name.startswith("repro.")
+    harness = name == _PKG or name.startswith(_PKG + ".")
+    return inside and not harness
+
+
+def _targets(node: ast.AST):
+    """Dotted import targets of an Import/ImportFrom node."""
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            yield a.name
+    elif isinstance(node, ast.ImportFrom) and node.module:
+        yield node.module
+        for a in node.names:
+            yield f"{node.module}.{a.name}"
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules.values():
+        if not _is_production(mod.name):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.Import, ast.ImportFrom)):
+                continue
+            hit = next(
+                (t for t in _targets(node)
+                 if t == _PKG or t.startswith(_PKG + ".")), None)
+            if hit is None:
+                continue
+            findings.append(Finding(
+                code="AQP104", path=mod.relpath, line=node.lineno,
+                col=node.col_offset,
+                symbol=mod.enclosing_function(node.lineno),
+                message=(f"production module `{mod.name}` imports the "
+                         f"fault-injection harness `{hit}`; injection "
+                         "hooks must stay unreachable from serving "
+                         "paths (pass them in as opaque objects from "
+                         "test code)")))
+    return findings

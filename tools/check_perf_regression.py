@@ -149,6 +149,19 @@ CHECKS = [
          metric="rounds_per_s",
          faster="mesh2_k4",
          slower="mesh2_k1"),
+    # checkpoint overhead bound: snapshotting every scheduler step
+    # (burst_ckpt) must hold burst throughput to within 5% — the
+    # snapshot is O(live state) numpy copies, never a device sync, and
+    # this row keeps it that way. Tighter than the global threshold on
+    # purpose: both rows come from the same run on the same machine.
+    dict(name="scheduler-ckpt-overhead",
+         kind="within",
+         current="BENCH_scheduler_quick.json",
+         key=("workload", "nb"),
+         metric="scheduler_qps",
+         faster=("burst_ckpt", 512),
+         slower=("burst", 512),
+         threshold=0.05),
 ]
 
 
@@ -198,16 +211,20 @@ def check_within(spec, threshold: float,
                  results_dir: Path = RESULTS) -> int:
     """A ``kind="within"`` check compares two rows of the SAME current
     report (machine-independent by construction): the ``faster`` config
-    must not trail the ``slower`` one by more than the threshold."""
+    must not trail the ``slower`` one by more than the threshold. A
+    spec-level ``threshold`` overrides the global one (within-run rows
+    share the machine and the run, so they can afford to be tighter)."""
     cur_path = results_dir / spec["current"]
     if not cur_path.exists():
         print(f"MISSING {spec['name']}: no quick report at "
               f"{cur_path.name} (run the quick benchmark first)")
         return 1
     cur = rows_by_key(cur_path, spec["key"])
+    threshold = float(spec.get("threshold", threshold))
     rows = {}
     for role in ("faster", "slower"):
-        k = (spec[role],)
+        v = spec[role]
+        k = tuple(v) if isinstance(v, (list, tuple)) else (v,)
         if k not in cur:
             print(f"FAIL {spec['name']}: row {k} missing from "
                   f"{cur_path.name} — sweep points diverged from the "
