@@ -8,13 +8,14 @@ lives in :mod:`repro.kernels.fused_scan` (the round body runs under
 everything the engine needs to *feed* that path:
 
   * :func:`make_aqp_mesh` — flatten the local devices (or an explicit
-    ``EngineConfig.mesh_shape``) into the mesh the block axis is sharded
-    over;
-  * :class:`BlockShards` — the sharded layout of a scramble's block axis:
-    contiguous equal-length shards (the tail shard zero-padded past the
-    real block count), plus the ``device_put`` helpers that place the
-    engine's device-resident column slabs (row-sharded) and its small
-    per-block metadata (replicated);
+    ``EngineConfig.mesh_shape``) into the mesh the scan is divided over;
+  * :class:`BlockShards` — the divided-scan layout: the *within-block
+    row axis* of every ``(nb, block_rows)`` column slab is split into
+    ``n_shards`` equal row slices (zero-padded so ``block_rows`` divides
+    evenly), the block axis stays whole on every device, plus the
+    ``device_put`` helpers that place the engine's device-resident
+    column slabs (row-slice-sharded) and its small per-block metadata
+    (replicated);
   * :func:`make_sharded_fold` — the standalone one-round collective fold
     (per-shard :func:`repro.kernels.ops.grouped_sums` + ``psum`` of the
     raw additive sums + ``pmin``/``pmax`` extremes), the building block
@@ -22,18 +23,22 @@ everything the engine needs to *feed* that path:
 
 The layout invariants (also asserted by ``tests/test_sharded_scan.py``):
 
-  * blocks are exchangeable post-shuffle, so contiguous sharding
-    preserves the scramble's uniformity (same argument as
-    :meth:`repro.aqp.scramble.Scramble.device_shard`);
-  * shard ``d`` owns global blocks ``[d * shard_blocks,
-    (d+1) * shard_blocks)``; the last shard is padded with zero blocks so
-    every device holds an equal-length slab (no ragged shapes inside
-    ``shard_map``). Padding blocks are never selected — the cursor is
-    clamped to the real block count — and their rows carry ``mask == 0``;
-  * the collective payload per round is O(groups) bytes (raw moment sums
-    + extremes + optional histogram) while the scan itself stays local to
-    each shard, so the engine remains scan-throughput-bound at any mesh
-    size (the paper's single-node story preserved at scale).
+  * every shard sees the FULL block axis, so block selection, the
+    cursor, and all accounting run on replicated inputs and never need
+    translation to shard-local coordinates — the round body inside
+    ``shard_map`` is the unsharded round body, applied to this shard's
+    ``block_rows / n_shards`` row slice of every block;
+  * rows within a block are exchangeable (the scramble shuffles rows
+    into blocks), so slicing the row axis preserves uniformity exactly
+    as block-axis slicing did; padding rows carry ``mask == 0`` /
+    ``values == 0`` / ``gids == 0`` and contribute exact zeros to the
+    additive fold;
+  * each shard gathers and folds only ``1 / n_shards`` of every selected
+    block's rows — the scan compute itself divides across the mesh;
+  * the collective payload per merge is O(groups) bytes (raw moment sums
+    + extremes + optional histogram), and on a cadence
+    (``merge_every=K``) there is *zero* cross-shard communication
+    between merges — no per-round rendezvous of any kind.
 """
 
 from __future__ import annotations
@@ -96,46 +101,52 @@ def make_aqp_mesh(mesh_shape: Optional[Tuple[int, ...]] = None
 
 @dataclasses.dataclass(frozen=True)
 class BlockShards:
-    """Sharded layout of a scramble's block axis over a mesh.
+    """Divided-scan layout of a scramble's column slabs over a mesh.
 
-    ``n_shards`` equal-length contiguous shards of ``shard_blocks``
-    blocks each; the global block count ``nb`` is zero-padded up to
-    ``n_shards * shard_blocks`` (tail padding is owned by the last
-    shard(s) and never selected by the scan).
+    The within-block row axis (axis 1 of every ``(nb, block_rows, ...)``
+    slab) is split into ``n_shards`` equal slices of ``shard_rows`` rows
+    each; ``block_rows`` is zero-padded up to ``n_shards * shard_rows``
+    so every device holds an equal-shape slab (padding rows carry
+    ``mask == 0`` and fold to exact zeros). The block axis is whole on
+    every shard, so selection and the cursor need no per-shard
+    translation.
     """
 
     mesh: Mesh
     axes: Tuple[str, ...]
-    nb: int               # real global block count
+    nb: int               # global block count (whole on every shard)
+    block_rows: int       # real rows per block
     n_shards: int
-    shard_blocks: int     # padded per-shard block count
+    shard_rows: int       # padded per-shard rows per block
     merge_every: int = 1  # collective cadence K (1 = merge every round)
 
     @property
-    def padded_nb(self) -> int:
-        return self.n_shards * self.shard_blocks
+    def padded_block_rows(self) -> int:
+        return self.n_shards * self.shard_rows
 
     @property
     def info(self) -> kfused.ShardInfo:
         """The kernel-layer view of this layout."""
         return kfused.ShardInfo(mesh=self.mesh, axes=self.axes,
                                 n_shards=self.n_shards,
-                                shard_blocks=self.shard_blocks,
+                                shard_rows=self.shard_rows,
                                 merge_every=self.merge_every)
 
-    def pad_blocks(self, arr: np.ndarray) -> np.ndarray:
-        """Zero-pad a ``(nb, ...)`` per-block array to ``padded_nb``."""
-        pad = self.padded_nb - arr.shape[0]
+    def pad_rows(self, arr: np.ndarray) -> np.ndarray:
+        """Zero-pad a ``(nb, block_rows, ...)`` slab's row axis to
+        ``padded_block_rows``."""
+        pad = self.padded_block_rows - arr.shape[1]
         if pad == 0:
             return arr
-        return np.concatenate(
-            [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2)
+        return np.pad(arr, widths)
 
     def put_blocks(self, arr) -> jax.Array:
-        """Pad + place a per-block array row-sharded over the mesh."""
+        """Pad + place a column slab with its row axis sharded over the
+        mesh (block axis replicated)."""
         return jax.device_put(
-            self.pad_blocks(np.asarray(arr)),
-            NamedSharding(self.mesh, P(self.axes)))
+            self.pad_rows(np.asarray(arr)),
+            NamedSharding(self.mesh, P(None, self.axes)))
 
     def put_replicated(self, arr) -> jax.Array:
         """Place an array fully replicated on every mesh device."""
@@ -153,13 +164,13 @@ def place_replicated(shards: Optional[BlockShards], arr) -> jax.Array:
     return jnp.asarray(arr)
 
 
-def build_block_shards(nb: int, mesh: Optional[Mesh],
+def build_block_shards(nb: int, mesh: Optional[Mesh], block_rows: int,
                        merge_every: int = 1) -> Optional[BlockShards]:
-    """Layout of ``nb`` scramble blocks over ``mesh`` (None passes
-    through: single-device frames carry no shard layout).
-    ``merge_every`` is the collective cadence the sharded round loops
-    run at (``EngineConfig.merge_every``; 1 = the per-round-merge
-    oracle path)."""
+    """Divided-scan layout of ``nb`` scramble blocks of ``block_rows``
+    rows each over ``mesh`` (None passes through: single-device frames
+    carry no shard layout). ``merge_every`` is the collective cadence
+    the sharded round loops run at (``EngineConfig.merge_every``; 1 =
+    the per-round-merge oracle path)."""
     if mesh is None:
         return None
     if merge_every < 1:
@@ -169,8 +180,8 @@ def build_block_shards(nb: int, mesh: Optional[Mesh],
             "over K rounds)")
     n_shards = mesh.devices.size
     return BlockShards(mesh=mesh, axes=tuple(mesh.axis_names), nb=nb,
-                       n_shards=n_shards,
-                       shard_blocks=-(-nb // n_shards),
+                       block_rows=block_rows, n_shards=n_shards,
+                       shard_rows=-(-block_rows // n_shards),
                        merge_every=merge_every)
 
 

@@ -215,9 +215,12 @@ class EngineConfig:
             batches reuse the same buffers). All four frame caches
             (materialization + compiled loops) are
             :class:`repro.core.lru.LRUCache` instances.
-        shard_rows: run the device-resident round loop SHARDED over a
-            device mesh: the value/mask/group-code slabs are row-sharded
-            (contiguous equal-length block shards, tail zero-padded),
+        shard_rows: run the device-resident round loop with the scan
+            DIVIDED over a device mesh: the within-block row axis of the
+            value/mask/group-code slabs is sliced into ``n_shards``
+            equal pieces (block axis whole on every device, rows
+            zero-padded to divide evenly), so each shard gathers and
+            folds only ``1/n_shards`` of every selected block's rows;
             selection / accounting / bound eval stay replicated, and
             each round's fold delta merges across the mesh with one
             ``psum``/``pmin``/``pmax`` set inside the ``lax.while_loop``
@@ -236,15 +239,17 @@ class EngineConfig:
             noise (~1e-6 relative — the same class of caveat as the
             fused histogram's tile-order rounding under ``fused``).
         mesh_shape: explicit device-mesh shape for ``shard_rows`` (e.g.
-            ``(8,)`` or ``(2, 4)``; the block axis is sharded over every
-            axis, flattened). ``None`` uses all visible devices as a 1-D
-            mesh.
+            ``(8,)`` or ``(2, 4)``; the within-block row axis is sharded
+            over every axis, flattened). ``None`` uses all visible
+            devices as a 1-D mesh.
         merge_every: collective cadence K of the sharded round loop:
             the cross-shard ``psum``/``pmin``/``pmax`` fold merge fires
-            every K rounds (or earlier, when any shard's local stopping
-            hint says a query might be done — merge-then-confirm, so
-            termination always reads fully-merged stats) instead of
-            every round. Between merges each shard accumulates its raw
+            every K rounds on a deterministic replicated round counter —
+            between merges there is zero cross-shard communication of
+            any kind. Termination is merge-then-confirm (it always
+            reads fully-merged stats) and is observed at most K-1
+            rounds after the round that would have stopped the K=1
+            loop. Between merges each shard accumulates its raw
             additive fold delta locally and the reported intervals stay
             frozen at their last merged values — stale by at most K
             rounds but still anytime-valid (the ``sync_every`` trick,
@@ -788,8 +793,7 @@ class _DeviceLoop:
                 pend_vmax=jnp.full((G,), -np.inf, jnp.float64),
                 pend_hist=(jnp.zeros((G, self.nbins), jnp.float64)
                            if self.use_hist else None),
-                pend_rounds=jnp.asarray(0, jnp.int32),
-                merge_now=jnp.asarray(False))
+                pend_rounds=jnp.asarray(0, jnp.int32))
         return kfused.QueryLoopCarry(
             pos=jnp.asarray(0, jnp.int32),
             rounds=jnp.asarray(0, jnp.int32),
@@ -892,6 +896,7 @@ class FastFrame:
                 mesh = adist.make_aqp_mesh(self.config.mesh_shape)
                 shards = adist.build_block_shards(
                     self.scramble.n_blocks, mesh,
+                    self.scramble.valid.shape[1],
                     merge_every=self.config.merge_every)
             self._block_shards = shards
             self._shards_resolved = True
@@ -1305,7 +1310,7 @@ class FastFrame:
             key = ("run", q.scan_signature(), q.agg, q.bounder,
                    q.rangetrim, q.delta, repr(q.stop), probe, lookahead,
                    max_rounds, cfg.sync_every or cfg.chunk_rounds,
-                   (shards.n_shards, shards.shard_blocks,
+                   (shards.n_shards, shards.shard_rows,
                     shards.merge_every)
                    if shards is not None else None)
             dloop = self.device_loops.get_or_build(

@@ -53,15 +53,22 @@ host loop they replace.
 
 **Sharded round loop** (``EngineConfig(shard_rows=True)`` /
 :class:`ShardInfo`): the same loops run under ``shard_map`` over a
-device mesh. The block axis of the value/group/mask slabs is row-sharded
-(equal-length padded shards); selection, the cursor, coverage/taint
-accounting and the bound evaluation are replicated computations over
-replicated inputs, so every scan decision is identical on every device
-and identical to the single-device loop; each round's fold delta is the
-only thing that crosses the mesh (``psum`` of the raw additive
-(count, dsum, dsq) sums + ``pmin``/``pmax`` extremes + ``psum``
-histogram inside :func:`_fold` — O(groups) bytes per round, zero host
-syncs). See ``docs/architecture.md`` ("Sharding the round loop").
+device mesh with the scan *divided*. The within-block row axis of the
+value/group/mask slabs is sliced into ``n_shards`` equal pieces (the
+block axis stays whole on every device), so the round body each shard
+traces is literally the unsharded round body applied to its own
+``block_rows / n_shards`` row slice — each shard gathers and folds only
+``1/n_shards`` of every selected block's rows. Selection, the cursor,
+coverage/taint accounting and the bound evaluation are replicated
+computations over replicated inputs, so every scan decision is
+identical on every device and identical to the single-device loop; each
+merge's fold delta is the only thing that crosses the mesh (``psum`` of
+the raw additive (count, dsum, dsq) sums + ``pmin``/``pmax`` extremes +
+``psum`` histogram inside :func:`_fold` — O(groups) bytes, zero host
+syncs). On a collective cadence (``merge_every=K``) the merge fires on
+a deterministic replicated round counter, so between merges there is
+*zero* cross-shard communication — no per-round rendezvous at all. See
+``docs/architecture.md`` ("Dividing the scan across a mesh").
 
 Backends (same selector as :mod:`repro.kernels.ops`):
 
@@ -197,45 +204,27 @@ def _pad_groups(x, mult):
 
 
 class ShardInfo(NamedTuple):
-    """Mesh geometry of the sharded round loop (see ``docs/architecture.md``
+    """Mesh geometry of the divided scan (see ``docs/architecture.md``
     and :mod:`repro.aqp.distributed`, which constructs these).
 
-    The block axis of the scramble's device-resident columns is sharded
-    over every mesh axis in ``axes`` (flattened): shard ``d`` owns the
-    contiguous global block range ``[d * shard_blocks, (d+1) *
-    shard_blocks)``, with the last shard zero-padded past the real block
-    count so every device holds an equal-length slab (padding blocks are
-    never selected — selection is clamped to the real count — and their
-    rows carry ``mask == 0``)."""
+    The within-block row axis of the scramble's device-resident columns
+    is sharded over every mesh axis in ``axes`` (flattened): shard ``d``
+    owns rows ``[d * shard_rows, (d+1) * shard_rows)`` of EVERY block,
+    with the row axis zero-padded so every device holds an equal-shape
+    slab (padding rows carry ``mask == 0`` / ``values == 0`` /
+    ``gids == 0`` and contribute exact zeros to the additive fold). The
+    block axis is whole on every shard, so global block ids index the
+    local slab directly — the gather needs no shard-local translation
+    and each shard materializes only its ``1/n_shards`` row slice of the
+    selection."""
 
     mesh: Mesh
     axes: Tuple[str, ...]
     n_shards: int
-    shard_blocks: int   # padded per-shard block count (equal on all shards)
+    shard_rows: int     # padded per-shard rows per block (equal on all)
     merge_every: int = 1  # collective cadence K: rounds between full
                           # psum/pmin/pmax merges (1 = merge every round,
                           # the bitwise oracle path)
-
-
-def _flat_shard_index(shard: ShardInfo) -> jax.Array:
-    """Row-major flattened index of this device over ``shard.axes``."""
-    idx = jnp.asarray(0, jnp.int32)
-    for ax in shard.axes:
-        idx = idx * shard.mesh.shape[ax] + jax.lax.axis_index(ax)
-    return idx
-
-
-def _shard_local_blocks(blk: jax.Array, tvalid: jax.Array,
-                        shard: ShardInfo):
-    """Global selected block ids -> this shard's local row-slab indices.
-    Blocks owned by other shards keep a clamped index with ``mine`` False
-    (their rows are masked out of the local fold; the cross-shard merge
-    restores the full selection)."""
-    base = _flat_shard_index(shard) * shard.shard_blocks
-    local = blk - base
-    mine = tvalid & (local >= 0) & (local < shard.shard_blocks)
-    lidx = jnp.clip(local, 0, shard.shard_blocks - 1)
-    return lidx, mine
 
 
 def _fold_local(v, g, m, center, a, b, num_groups, nbins, use_hist, impl):
@@ -383,23 +372,30 @@ def fused_round(values: jax.Array, gids: jax.Array, mask: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "nb", "window", "budget", "meta", "impl", "wrap"))
+    "nb", "window", "budget", "meta", "impl"))
 def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
                       static_ok: jax.Array, pos: jax.Array,
                       values, gids, words, active, *, nb: int, window: int,
-                      budget: int, meta, impl: str, wrap: bool = False,
-                      limit=None, lap_ends=None):
+                      budget: int, meta, impl: str, anchors=None):
     """One fused scan round shared by several queries (one device
     dispatch per round for a whole :class:`repro.serve.FrameServer`
-    pass). All queries share the predicate mask, static prefilter and the
-    cursor walk; each *slot* (distinct ``(column, group-by)`` over the
-    shared filters) gets its own value/group columns and fold, and each
-    *query* contributes one row of its slot's active-word stack to the
-    activity test.
+    pass). All queries share the predicate mask and static prefilter;
+    each *slot* (distinct ``(column, group-by)`` over the shared
+    filters) advances its OWN cursor through its own budgeted selection,
+    gathers its own row slice and folds its own columns — so every
+    slot's scan replays its solo run exactly, whatever else is
+    co-resident. Each *query* contributes one row of its slot's
+    active-word stack to that slot's activity test (selection within a
+    slot is the union over the slot's queries).
 
     Args (device arrays unless noted):
       mask: ``(nb, block_rows)`` shared predicate*valid mask (f32);
-      order_pad / static_ok / pos: as in :func:`fused_round`;
+      order_pad: ``(nb + window,)`` i32 scan order with a WRAP-FILLED
+        tail (``order[:window]``) — every slot slices it at its own
+        ``pos % nb``;
+      static_ok: ``(nb,)`` bool static-prefilter verdict per block;
+      pos: ``(S,)`` i32 per-slot cursors in pass coordinates (a slot's
+        lap is ``[anchors[s], anchors[s] + nb)``);
       values / gids: length-S tuples of ``(nb, block_rows)`` per-slot
         value (f32) / group-code (i32) columns;
       words: length-S tuple of ``(nb, W_s)`` uint32 bitmap words — the
@@ -407,74 +403,61 @@ def fused_round_multi(mask: jax.Array, order_pad: jax.Array,
         for slots that do not activity-skip (their queries then gate
         selection with a single engaged/finished bit);
       active: length-S tuple of ``(Q_s, W_s)`` uint32 per-query
-        active-word stacks.
+        active-word stacks;
+      anchors: ``(S,)`` i32 pass-coordinate admission positions
+        (``None`` = all zero, the static-batch case) — dynamic, so
+        admission epochs with the same shape profile hit the jit cache.
 
     Static config: ``meta`` is a length-S tuple of per-slot
     ``(num_groups, nbins, use_hist, a, b, center)`` tuples; ``nb`` /
     ``window`` / ``budget`` as in :func:`fused_round`.
 
-    Selection takes the UNION of every query's activity flags — a block
-    is skipped only when no query in the pass wants it, so each query's
-    skipped blocks contain only views inactive for that query (the taint
-    invariant holds per query). With a single slot and a single query the
-    selection and fold are the same computation as :func:`fused_round`,
-    so a served singleton stays bitwise identical to ``FastFrame.run``.
+    Because each slot selects with its own flags at its own cursor, a
+    slot's selection/fold sequence is the same computation as
+    :func:`fused_round` on the rotated order starting at its anchor —
+    a served query is bitwise identical to its solo ``FastFrame.run``
+    whatever other slots share the pass (the slot-level co-residency
+    contract; multi-query slots match the solo run of that query
+    *batch*). The caller is responsible for not advancing slots that
+    are lapped (``pos >= anchor + nb``) or fully finished; a lapped
+    slot's round is a no-op by construction (empty window), a finished
+    slot's is not (its cursor would cover ground without selecting).
 
-    Carousel mode (``wrap=True``): the cursor position runs past ``nb``
-    and wraps around the scan order — a query admitted mid-scan gets a
-    slot *anchored* at the join position whose lap covers the skipped
-    prefix at the end of the walk. ``order_pad``'s tail must then be
-    wrap-filled (``order[:window]``), ``limit`` is the traced i32 pass
-    horizon (the max live-slot lap end) bounding ``in_range`` and the
-    budget clamp, and ``lap_ends`` is a length-S tuple of traced i32 lap
-    ends: a selected block at cursor position >= a slot's lap end is
-    fetched for the other slots but gated out of that slot's fold, so
-    each slot's state covers exactly its own lap.
-
-    Returns ``(states, hists, flag_stacks, ok, new_pos)``: per-slot
+    Returns ``(states, hists, flag_stacks, oks, new_pos)``: per-slot
     mergeable deltas (``hists[s]`` is None when the slot has no
     histogram), per-slot ``(Q_s, window)`` bool per-query activity
-    verdicts, the shared static verdicts and the advanced cursor.
+    verdicts, per-slot ``(window,)`` static verdicts and the ``(S,)``
+    advanced cursors.
     """
+    if anchors is None:
+        anchors = jnp.zeros((len(meta),), jnp.int32)
     offs = jnp.arange(window, dtype=jnp.int32)
-    if wrap:
-        bound = jnp.asarray(limit, jnp.int32)
-        start = jax.lax.rem(pos, jnp.int32(nb))
-    else:
-        bound = nb
-        start = pos
-    in_range = (pos + offs) < bound
-    win = jax.lax.dynamic_slice(order_pad, (start,), (window,))
-    ok = static_ok[win] & in_range
-
-    flag_stacks = []
-    union = jnp.zeros((window,), bool)
-    for s in range(len(meta)):
+    states, hists, flag_stacks, oks, new_positions = [], [], [], [], []
+    for s, (num_groups, nbins, use_hist, a, b, center) in enumerate(meta):
+        le = anchors[s] + nb
+        p = pos[s]
+        in_range = (p + offs) < le
+        start = jax.lax.rem(p, jnp.int32(nb))
+        win = jax.lax.dynamic_slice(order_pad, (start,), (window,))
+        ok = static_ok[win] & in_range
         act = kops.active_blocks_multi(words[s][win], active[s],
                                        impl=impl) > 0
         fl = ok[None, :] & act
-        flag_stacks.append(fl)
-        union = union | fl.any(axis=0)
-
-    take, new_pos = _budget_select(union, pos, bound, window, budget)
-    blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
-    m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
-
-    states, hists = [], []
-    for s, (num_groups, nbins, use_hist, a, b, center) in enumerate(meta):
-        if wrap:
-            gate = tvalid & ((pos + take_idx) < lap_ends[s])
-            m_s = (mask[blk] * gate[:, None].astype(jnp.float32)
-                   ).reshape(-1)
-        else:
-            m_s = m
+        flags = fl.any(axis=0)
+        take, new_p = _budget_select(flags, p, le, window, budget)
+        blk, tvalid, _ = _gather_blocks(take, win, window, budget)
+        m = (mask[blk] * tvalid[:, None].astype(jnp.float32)).reshape(-1)
         v = values[s][blk].reshape(-1)
         g = gids[s][blk].reshape(-1)
-        st, h = _fold(v, g, m_s, center, a, b, num_groups, nbins,
+        st, h = _fold(v, g, m, center, a, b, num_groups, nbins,
                       use_hist, impl)
         states.append(st)
         hists.append(h)
-    return tuple(states), tuple(hists), tuple(flag_stacks), ok, new_pos
+        flag_stacks.append(fl)
+        oks.append(ok)
+        new_positions.append(new_p)
+    return (tuple(states), tuple(hists), tuple(flag_stacks), tuple(oks),
+            jnp.stack(new_positions))
 
 
 # ---------------------------------------------------------------------------
@@ -570,8 +553,8 @@ class QueryLoopCarry(NamedTuple):
     pend_vmax: Optional[jax.Array] = None    # (G,) f64
     pend_hist: Optional[jax.Array] = None    # (G, K) f64 local hist delta
     pend_rounds: Optional[jax.Array] = None  # i32 rounds since last merge
-    merge_now: Optional[jax.Array] = None    # bool: merge at next round
-                                             # start (replicated: pmax-ed)
+                                             # (replicated: the merge
+                                             # schedule is deterministic)
 
 
 def _round_scan(bufs, pos, flags_src, *, nb: int, window: int,
@@ -614,7 +597,7 @@ def _query_carry_spec(use_hist: bool, cadence: bool = False
         skipped_static=rep, skipped_active=rep, probes=rep,
         pend_sums=pend, pend_vmin=pend, pend_vmax=pend,
         pend_hist=(rep if cadence and use_hist else None),
-        pend_rounds=pend, merge_now=pend)
+        pend_rounds=pend)
 
 
 def build_query_loop(*, nb: int, window: int, budget: int, center: float,
@@ -640,14 +623,18 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     active)``.
 
     With ``shard`` the whole loop runs under ``shard_map`` on
-    ``shard.mesh``: ``bufs.values/gids/mask`` are row-sharded over the
-    mesh (equal-length padded slabs, see :class:`ShardInfo`) while every
-    other buffer AND the entire carry stay replicated. Selection, the
+    ``shard.mesh``: the within-block row axis of
+    ``bufs.values/gids/mask`` is sliced over the mesh (equal-shape
+    padded slabs, see :class:`ShardInfo`) while every other buffer AND
+    the entire carry stay replicated. Each shard runs the IDENTICAL
+    round body on its own row slice — global block ids index the local
+    slab directly, so the gather materializes and the fold touches only
+    ``1/n_shards`` of each selected block's rows. Selection, the
     cursor, coverage/taint accounting and the CI refresh are replicated
     computations over replicated inputs — identical on every device and
-    identical to the single-device loop — and only the per-round fold
-    delta crosses the mesh (``psum``/``pmin``/``pmax`` inside
-    :func:`_fold`, one collective set per round, no host sync).
+    identical to the single-device loop — and only the fold delta
+    crosses the mesh (``psum``/``pmin``/``pmax`` inside :func:`_fold`,
+    one collective set per round, no host sync).
 
     ``shard.merge_every = K > 1`` amortizes that collective set over K
     rounds (the *collective cadence*; see ``docs/architecture.md``).
@@ -659,15 +646,17 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
     trick the host uses with ``sync_every``). The full merge fires at
     the START of a round — on data the current round's scan does not
     depend on, so XLA can overlap the collective with the gather/fold —
-    when either (a) K rounds of delta are pending, or (b) any shard's
-    local stopping hint (merged stats + its own pending delta) says the
-    query *might* be done (merge-then-confirm: termination decisions
-    only ever read fully-merged stats; the hint costs one scalar
-    ``pmax`` per round). Every dispatch flushes its pending delta on
-    exit, so host syncs, ``on_sync`` snapshots and termination always
-    observe fully-merged state. With ``merge_every=1`` (default) this
-    path is not even traced — the per-round-merge loop above survives
-    bitwise as the oracle.
+    on a DETERMINISTIC schedule: exactly when K rounds of delta are
+    pending, decided from the replicated ``pend_rounds`` counter. No
+    per-round hint, no scalar ``pmax`` — between merges there is zero
+    cross-shard communication. Termination is merge-then-confirm
+    (decisions only ever read fully-merged stats) and is observed at
+    most K-1 rounds after the round that would have stopped the K=1
+    loop. Every dispatch flushes its pending delta on exit, so host
+    syncs, ``on_sync`` snapshots and termination always observe
+    fully-merged state. With ``merge_every=1`` (default) this path is
+    not even traced — the per-round-merge loop above survives bitwise
+    as the oracle.
     """
     cadence = shard is not None and shard.merge_every > 1
 
@@ -684,8 +673,9 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
         win, ok, flags, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
         blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
-        if shard is not None:
-            blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
+        # Under shard_map the local slab is this shard's row slice of
+        # every block, so the global block ids gather exactly the
+        # shard's 1/n_shards of the selection — no translation needed.
         v = bufs.values[blk].reshape(-1)
         g = bufs.gids[blk].reshape(-1)
         m = (bufs.mask[blk]
@@ -774,18 +764,19 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
             pend_vmax=jnp.full_like(c.pend_vmax, -jnp.inf),
             pend_hist=(jnp.zeros_like(c.pend_hist) if use_hist
                        else None),
-            pend_rounds=jnp.asarray(0, jnp.int32),
-            merge_now=jnp.asarray(False))
+            pend_rounds=jnp.asarray(0, jnp.int32))
 
     def cadence_body(bufs, c: QueryLoopCarry) -> QueryLoopCarry:
         # Selection runs on the PRE-merge active mask, so this round's
         # scan/gather/fold has no data dependence on the merge and XLA
         # is free to overlap the collective with the compute (the merge
-        # gates round k+1). merge_now is replicated (pmax-ed below), so
-        # every shard takes the same branch and the collectives inside
-        # the cond rendezvous.
+        # gates round k+1). The merge schedule is deterministic — fire
+        # exactly when K rounds of delta are pending — and pend_rounds
+        # is replicated, so every shard takes the same branch and the
+        # collectives inside the cond rendezvous; between merges no
+        # cross-shard communication happens at all.
         sel_active = c.active
-        c = jax.lax.cond(c.merge_now,
+        c = jax.lax.cond(c.pend_rounds >= shard.merge_every,
                          functools.partial(_merge_refresh, bufs),
                          lambda x: x, c)
         k = c.rounds + 1
@@ -800,7 +791,6 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
         win, ok, flags, take, new_pos, covmask = _round_scan(
             bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
         blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
-        blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
         v = bufs.values[blk].reshape(-1)
         g = bufs.gids[blk].reshape(-1)
         m = (bufs.mask[blk]
@@ -838,27 +828,6 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
         cov = cov | ((new_pos >= nb) & ~tainted)
         exact = c.exact | cov
 
-        # -- local stopping hint: merged stats + this shard's own
-        # pending delta. Per-shard (divergent) by design — it never
-        # touches the reported intervals or the active mask, only
-        # whether the next round opens with a full merge, and that
-        # decision is re-replicated by the scalar pmax. The hint's
-        # delta-schedule index consumes no budget (its output is only
-        # this boolean).
-        hstate = merge_moments(c.state, kops.moments_from_sums(
-            pend_sums, pend_vmin, pend_vmax, center))
-        hhist = c.hist + pend_hist if use_hist else c.hist
-        r = jnp.where(new_pos > 0,
-                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
-                      0).astype(jnp.float64)
-        _, _, _, _, hint_active = refresh_fn(
-            k, r, hstate, hhist, tainted, exact, c.lo, c.hi, c.est,
-            c.refreshed, c.active)
-        might_stop = ~hint_active.any()
-        merge_now = jax.lax.pmax(
-            (might_stop | (pend_rounds >= shard.merge_every)
-             ).astype(jnp.int32), shard.axes) > 0
-
         return c._replace(
             pos=new_pos, rounds=k, it=c.it + 1, processed=processed,
             seen_presence=seen_presence, tainted=tainted, exact=exact,
@@ -866,13 +835,13 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
             skipped_active=skipped_active, probes=probes_m,
             pend_sums=pend_sums, pend_vmin=pend_vmin,
             pend_vmax=pend_vmax, pend_hist=pend_hist,
-            pend_rounds=pend_rounds, merge_now=merge_now)
+            pend_rounds=pend_rounds)
 
     def flush(bufs, carry: QueryLoopCarry) -> QueryLoopCarry:
         # every dispatch exits fully merged: termination / sync_every
         # snapshots never see stale stats, and the pending slots leave
         # the shard_map as replicated zeros. pend_rounds == 0 implies
-        # the pending slots are already zero and merge_now is False.
+        # the pending slots are already zero.
         return jax.lax.cond(carry.pend_rounds > 0,
                             functools.partial(_merge_refresh, bufs),
                             lambda x: x, carry)
@@ -899,7 +868,7 @@ def build_query_loop(*, nb: int, window: int, budget: int, center: float,
         return jax.jit(chunk_body)
 
     rep = P()
-    data = P(shard.axes)
+    data = P(None, shard.axes)  # row-axis sliced, block axis whole
     bufs_spec = QueryLoopBuffers(
         values=data, gids=data, mask=data, words=rep, order_pad=rep,
         static_ok=rep, presence=rep, presence_total=rep, cum_rows=rep)
@@ -942,13 +911,26 @@ class PassLoopBuffers(NamedTuple):
 
 
 class SlotCarry(NamedTuple):
-    """Per-slot shared-fold state inside the pass carry."""
+    """Per-slot scan state inside the pass carry. Every slot owns its
+    cursor, selection, fold, coverage and metrics — the device twin of a
+    solo query-loop carry — so a slot's scan replays its solo run
+    exactly regardless of what else is co-resident in the pass (the
+    slot-level bitwise co-residency contract; see docs/serving.md)."""
 
+    pos: jax.Array             # i32 slot cursor (pass coordinates; the
+                               # slot's lap is [anchor, anchor + nb))
     state: MomentState         # f64 (G_s,)
     hist: Optional[jax.Array]  # f64 (G_s, K) or None
     seen_presence: jax.Array   # (G_s,) i32
     tainted: jax.Array         # (G_s,) bool
     exact: jax.Array           # (G_s,) bool
+    processed: jax.Array       # (nb,) bool blocks this slot fetched
+    blocks_fetched: jax.Array  # i64 scan metrics (slot-local)
+    skipped_static: jax.Array  # i64
+    skipped_active: jax.Array  # i64
+    probes: jax.Array          # i64
+    lap_rounds: jax.Array      # i32 round the slot's lap ended (-1 while
+                               # still inside the lap)
     # collective-cadence pending slots (merge_every > 1 only, else None;
     # see QueryLoopCarry — this shard's raw additive delta since the
     # last full merge, zeroed by every merge)
@@ -956,17 +938,6 @@ class SlotCarry(NamedTuple):
     pend_vmin: Optional[jax.Array] = None    # (G_s,) f64
     pend_vmax: Optional[jax.Array] = None    # (G_s,) f64
     pend_hist: Optional[jax.Array] = None    # (G_s, K) f64
-    # carousel-mode per-slot coverage/metrics (``lap_ends`` builds only,
-    # else None): slots anchored at different join positions fold — and
-    # therefore process, fetch and skip — different subsets of the
-    # union selection, so the shared pass-level counters cannot stand in
-    # for any one slot's bookkeeping.
-    processed: Optional[jax.Array] = None       # (nb,) bool
-    blocks_fetched: Optional[jax.Array] = None  # i64
-    skipped_static: Optional[jax.Array] = None  # i64
-    skipped_active: Optional[jax.Array] = None  # i64
-    probes: Optional[jax.Array] = None          # i64
-    lap_rounds: Optional[jax.Array] = None      # i32 round the lap ended
 
 
 class PassQueryCarry(NamedTuple):
@@ -994,22 +965,19 @@ class PassQueryCarry(NamedTuple):
 
 
 class PassCarry(NamedTuple):
-    """``lax.while_loop`` carry of the multi-query pass loop."""
+    """``lax.while_loop`` carry of the multi-query pass loop. All
+    per-scan state lives in the per-slot :class:`SlotCarry` entries —
+    the pass itself only keeps the shared round clock and liveness."""
 
-    pos: jax.Array             # i32
-    rounds: jax.Array          # i32
-    it: jax.Array              # i32
+    rounds: jax.Array          # i32 pass rounds (shared clock)
+    it: jax.Array              # i32 rounds inside the current dispatch
     n_live: jax.Array          # i32 unfinished queries across slots
-    processed: jax.Array       # (nb,) bool (selection is shared)
-    blocks_fetched: jax.Array  # i64 (shared: selection is the union)
-    skipped_static: jax.Array  # i64
-    skipped_active: jax.Array  # i64
-    probes: jax.Array          # i64 (probing slots share union flags)
     slots: Tuple[SlotCarry, ...]
     queries: Tuple[Tuple[PassQueryCarry, ...], ...]  # [slot][query]
     # collective-cadence shared state (merge_every > 1 only, else None)
     pend_rounds: Optional[jax.Array] = None  # i32 rounds since last merge
-    merge_now: Optional[jax.Array] = None    # bool (replicated: pmax-ed)
+                                             # (replicated: the merge
+                                             # schedule is deterministic)
 
 
 def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
@@ -1022,12 +990,14 @@ def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
     pend = rep if cadence else None
     qspec = PassQueryCarry(*([rep] * len(PassQueryCarry._fields)))
     return PassCarry(
-        pos=rep, rounds=rep, it=rep, n_live=rep, processed=rep,
-        blocks_fetched=rep, skipped_static=rep, skipped_active=rep,
-        probes=rep,
-        slots=tuple(SlotCarry(state=MomentState(rep, rep, rep, rep, rep),
+        rounds=rep, it=rep, n_live=rep,
+        slots=tuple(SlotCarry(pos=rep,
+                              state=MomentState(rep, rep, rep, rep, rep),
                               hist=(rep if spec.use_hist else None),
                               seen_presence=rep, tainted=rep, exact=rep,
+                              processed=rep, blocks_fetched=rep,
+                              skipped_static=rep, skipped_active=rep,
+                              probes=rep, lap_rounds=rep,
                               pend_sums=pend, pend_vmin=pend,
                               pend_vmax=pend,
                               pend_hist=(rep if cadence and spec.use_hist
@@ -1035,7 +1005,7 @@ def _pass_carry_spec(slot_specs: Sequence[SlotSpec],
                     for spec in slot_specs),
         queries=tuple(tuple(qspec for _ in range(nq))
                       for nq in n_queries),
-        pend_rounds=pend, merge_now=pend)
+        pend_rounds=pend)
 
 
 def carry_nonfinite_slots(carry: PassCarry) -> Tuple[bool, ...]:
@@ -1067,226 +1037,219 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     chunk: Optional[int],
                     slot_specs: Sequence[SlotSpec],
                     refresh_fns: Sequence[Sequence[Callable]],
-                    any_probe: bool,
                     shard: Optional[ShardInfo] = None,
-                    horizon: Optional[int] = None, wrap: bool = False,
-                    lap_ends: Optional[Sequence[int]] = None,
+                    anchors: Optional[Sequence[int]] = None,
                     round_offsets: Optional[Sequence[int]] = None,
                     row_offsets: Optional[Sequence[int]] = None
                     ) -> Callable:
     """Build the jitted device-resident loop for one FrameServer pass
-    (S slots, each with its own queries, sharing one cursor walk).
+    (S slots, each with its own queries and its OWN cursor walk).
 
-    The per-round computation is the exact device twin of the host pass:
-    per-query activity stacks -> union selection -> shared gather ->
-    per-slot folds -> shared skip accounting with per-slot taint ->
-    per-query CI refresh / stop test, with finish-time snapshots recorded
-    in the carry (the host builds each query's result the moment it
-    finishes; the device loop records the same snapshot and the host
-    materializes it after the loop). ``refresh_fns[s][q]`` has the
+    Every slot advances independently each pass round: its own window
+    slice at its own cursor, its own activity flags (the union over the
+    slot's queries only), its own budgeted selection, gather, fold and
+    coverage/taint/metric accounting — the exact device twin of a solo
+    :func:`build_query_loop` run on the scan order rotated to the slot's
+    anchor. Per-query CI refresh / stop tests use slot-local round/row
+    counts, with finish-time snapshots recorded in the carry (the host
+    materializes each query's result after the loop from the snapshot
+    taken the round it finished). ``refresh_fns[s][q]`` has the
     :func:`build_query_loop` ``refresh_fn`` signature.
 
-    ``shard`` shards the pass exactly like :func:`build_query_loop`:
-    every slot's value/group columns and the shared mask are row-sharded
-    slabs, the union selection / accounting / per-query refreshes stay
-    replicated, and each slot's per-round fold delta merges across the
-    mesh inside :func:`_fold` (one collective set per slot per round).
-    ``shard.merge_every = K > 1`` applies the collective cadence of
-    :func:`build_query_loop` to the whole pass: one shared ``pend_rounds``
-    / ``merge_now`` schedule, per-slot pending delta slots, per-query
-    intervals / finished flags frozen between merges (selection gates on
-    the stale flags — at most K rounds of extra blocks for a query that
-    just finished), the merge-then-confirm hint OR-ed over every
-    unfinished query, and finish-time snapshots recorded at merges (a
-    query's result reflects exactly the merged rounds that terminated
-    it).
+    Because nothing is shared between slots but the round clock, a
+    slot's selection/fold/refresh sequence is bitwise identical to its
+    solo run whatever else is co-resident — including probe slots,
+    whose activity words never leak into another slot's selection (the
+    slot-level bitwise co-residency contract, docs/serving.md). A slot
+    whose lap ended (``pos >= anchor + nb``) or whose queries all
+    finished is frozen in place; the loop exits when no slot can make
+    progress.
 
-    **Carousel mode** (``lap_ends`` given): the pass is a wrapped-cursor
-    "carousel" whose slots were admitted at different scan positions
-    (:class:`repro.serve.FrameServer` continuous batching). The cursor
-    runs in unwrapped pass coordinates up to the static ``horizon`` (the
-    max live ``lap_end``), the order pad is wrap-filled so the window
-    slice at ``pos % nb`` is a rotation of the scan order, and every
-    slot replays its solo scan exactly inside its own lap
-    ``[anchor, lap_ends[s])``: folds / coverage / taint / metrics gate
-    each selected lane on ``pos + lane < lap_ends[s]`` (per-slot carry
-    fields in :class:`SlotCarry`), CI refreshes of a slot that already
-    finished its lap are suppressed (its queries wait for the host
-    recovery pass, like a solo run exiting its loop at exhaustion), and
-    refreshes use slot-local round/row counts via the static
+    ``anchors[s]`` is the slot's static admission position in pass
+    coordinates (``None`` = all zero, the static-batch case): the slot's
+    lap is ``[anchor, anchor + nb)``, the order pad must be wrap-filled
+    (``order[:window]``) so the window slice at ``pos % nb`` is a
+    rotation of the scan order, and refreshes subtract the static
     ``round_offsets[s]`` (pass rounds already elapsed at admission) and
-    ``row_offsets[s]`` (rows before the slot's anchor, in pass
-    coordinates; per-position rows are periodic with period ``nb`` so
-    ``cum_rows`` needs no extension). Not composable with ``shard``.
+    ``row_offsets[s]`` (rows before the anchor, in pass coordinates;
+    per-position rows are periodic with period ``nb`` so ``cum_rows``
+    needs no extension). Mid-scan admission is therefore just another
+    anchor — carousel passes, sharded or not, run this same loop.
+
+    ``shard`` shards the pass exactly like :func:`build_query_loop`:
+    every slot's value/group columns and the shared mask are
+    row-slice-sharded slabs, each slot's selection / accounting /
+    refreshes stay replicated, each shard gathers and folds only its
+    ``1/n_shards`` row slice of the slot's selected blocks, and the
+    per-round fold delta merges across the mesh inside :func:`_fold`
+    (one collective set per slot per round). ``shard.merge_every = K >
+    1`` applies the deterministic collective cadence of
+    :func:`build_query_loop` to the whole pass: one shared
+    ``pend_rounds`` schedule (merges fire at a round start exactly when
+    K rounds of delta are pending — zero cross-shard communication
+    between merges), per-slot pending delta slots, per-query intervals /
+    finished flags frozen between merges (selection gates on the stale
+    flags — at most K rounds of extra blocks for a query that just
+    finished), and finish-time snapshots recorded at merges. The cadence
+    requires all anchors at zero: a mid-lap joiner's observable round
+    boundaries would be merge boundaries, up to K rounds apart, so its
+    delta schedule could not match its solo run.
     """
+    S = len(slot_specs)
+    anchors = tuple(anchors) if anchors is not None else (0,) * S
+    round_offsets = (tuple(round_offsets) if round_offsets is not None
+                     else (0,) * S)
+    row_offsets = (tuple(row_offsets) if row_offsets is not None
+                   else (0,) * S)
     cadence = shard is not None and shard.merge_every > 1
-    gated = lap_ends is not None
-    bound = nb if horizon is None else horizon
-    if (gated or wrap) and shard is not None:
+    if cadence and any(a != 0 for a in anchors):
         raise ValueError(
-            "carousel pass loops (anchored slots) do not compose with "
-            "the sharded device loop; step anchored passes on host")
+            "mid-scan admission (anchor > 0) does not compose with the "
+            "collective cadence (merge_every > 1): a joiner's refresh "
+            "schedule would be quantized to merge boundaries, up to K "
+            "rounds apart from its solo run's; admit onto a fresh pass "
+            "or a merge_every=1 pass")
+    lap_ends = tuple(a + nb for a in anchors)
     i32 = jnp.int32
     i64 = jnp.int64
 
-    def body(bufs, c: PassCarry) -> PassCarry:
-        k = c.rounds + 1
-        offs = jnp.arange(window, dtype=i32)
+    def _slot_select(bufs, sc, s, spec, sel_queries):
+        """One slot's round selection at its own cursor: window slice,
+        the slot's activity flags (union over its queries), budgeted
+        take. Returns ``_round_scan``'s tuple."""
 
         def flags_src(ok, win):
-            union = jnp.zeros((window,), bool)
-            for s, spec in enumerate(slot_specs):
-                if spec.probe:
-                    rows = [pack_active_device(qc.active, spec.n_words)
-                            for qc in c.queries[s]]
-                else:
-                    rows = [(~qc.finished).astype(jnp.uint32).reshape(1)
-                            for qc in c.queries[s]]
-                stack = jnp.stack(rows)
-                act = kops.active_blocks_multi(bufs.words[s][win], stack,
-                                               impl=impl) > 0
-                union = union | (ok[None, :] & act).any(axis=0)
-            return union
+            if spec.probe:
+                rows = [pack_active_device(qc.active, spec.n_words)
+                        for qc in sel_queries[s]]
+            else:
+                rows = [(~qc.finished).astype(jnp.uint32).reshape(1)
+                        for qc in sel_queries[s]]
+            stack = jnp.stack(rows)
+            act = kops.active_blocks_multi(bufs.words[s][win], stack,
+                                           impl=impl) > 0
+            return (ok[None, :] & act).any(axis=0)
 
-        win, ok, union, take, new_pos, covmask = _round_scan(
-            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget,
-            bound=None if horizon is None else bound, wrap=wrap)
-        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
-        if shard is not None:
-            blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
-        m = (bufs.mask[blk]
-             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+        return _round_scan(bufs, sc.pos, flags_src, nb=nb, window=window,
+                           budget=budget, bound=lap_ends[s], wrap=True)
 
-        if gated:
-            # carousel: all coverage/metric accounting is per-slot (each
-            # slot only owns the selection inside its own lap); the
-            # shared pass-level counters just ride along unchanged
-            skipped_static = c.skipped_static
-            skipped_active = c.skipped_active
-            probes = c.probes
-            processed = c.processed
-            blocks_fetched = c.blocks_fetched
-            act_skip = None
-            r = None
-            R_total = bufs.cum_rows[nb - 1]
-        else:
-            # -- shared accounting (union flags; twin of the host pass) --
-            okc = ok & covmask
-            unionc = union & covmask
-            act_skip = okc & ~unionc
-            skipped_static = (c.skipped_static
-                              + (~ok & covmask).sum(dtype=i64))
-            skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
-            probes = c.probes
-            if any_probe:
-                probes = probes + _probe_cost(union, c.pos, nb, window,
-                                              budget, lookahead,
-                                              cover_cap)
-            processed = c.processed.at[win].max(take)
-            blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
+    def _slot_account(bufs, sc, s, spec, k, scan):
+        """Slot-local coverage / taint / metric accounting for one round
+        (twin of the solo loop's accounting block); returns the updated
+        SlotCarry fields as a dict."""
+        win, ok, flags, take, new_pos, covmask = scan
+        le = lap_ends[s]
+        okc = ok & covmask
+        act_skip = okc & ~(flags & covmask)
+        pres_win = bufs.presence[s][win]
+        tainted = sc.tainted | (pres_win & act_skip[:, None]).any(axis=0)
+        seen_presence = sc.seen_presence + (
+            pres_win & take[:, None]).sum(axis=0, dtype=i32)
+        cov = seen_presence >= bufs.presence_total[s]
+        cov = cov | ((new_pos >= le) & ~tainted)
+        probes = sc.probes
+        if spec.probe:
+            probes = probes + _probe_cost(flags, sc.pos, le, window,
+                                          budget, lookahead, cover_cap)
+        return dict(
+            seen_presence=seen_presence, tainted=tainted,
+            exact=sc.exact | cov,
+            processed=sc.processed.at[win].max(take),
+            blocks_fetched=sc.blocks_fetched + take.sum(dtype=i64),
+            skipped_static=(sc.skipped_static
+                            + (~ok & covmask).sum(dtype=i64)),
+            skipped_active=sc.skipped_active + act_skip.sum(dtype=i64),
+            probes=probes,
+            lap_rounds=jnp.where((sc.pos < le) & (new_pos >= le), k,
+                                 sc.lap_rounds))
 
-            r = jnp.where(new_pos > 0,
-                          bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
-                          0).astype(jnp.float64)
+    def _slot_rows(bufs, s, p_end):
+        """Rows the slot's cursor has covered, as the f64 ``r`` of its
+        refresh: rows over pass positions are periodic with period
+        ``nb`` (one lap = the whole scramble), so laps + ``cum_rows``
+        suffice; ``row_offsets[s]`` rebases to the slot's own lap."""
+        p_end = jnp.minimum(p_end, lap_ends[s])
+        pm1 = p_end - 1
+        rows_abs = jnp.where(
+            p_end > 0,
+            (pm1 // nb).astype(i64) * bufs.cum_rows[nb - 1]
+            + bufs.cum_rows[pm1 % nb],
+            jnp.asarray(0, i64))
+        return (rows_abs - row_offsets[s]).astype(jnp.float64)
 
+    def body(bufs, c: PassCarry) -> PassCarry:
+        k = c.rounds + 1
         new_slots = []
         new_queries = []
         n_live = c.n_live
         for s, spec in enumerate(slot_specs):
             sc = c.slots[s]
-            if gated:
-                le = lap_ends[s]
-                in_lap = c.pos < le
-                gate = tvalid & ((c.pos + take_idx) < le)
-                lane_in = (c.pos + offs) < le
-                covmask_s = covmask & lane_in
-                take_s = take & lane_in
-                m_s = (bufs.mask[blk]
-                       * gate[:, None].astype(jnp.float32)).reshape(-1)
-                act_skip_s = (ok & covmask_s) & ~union
-            else:
-                le = nb
-                covmask_s, take_s, m_s = covmask, take, m
-                act_skip_s = act_skip
+            le = lap_ends[s]
+            any_unfin = functools.reduce(
+                jnp.logical_or, [~qc.finished for qc in c.queries[s]])
+            # a slot whose lap ended or whose queries all finished is
+            # frozen in place: its solo twin would have exited its loop,
+            # so letting the cursor run on would diverge the slot's
+            # metrics (and, with every query finished, cover ground
+            # without selecting — spuriously tainting the views)
+            slot_live = (sc.pos < le) & any_unfin
+            scan = _slot_select(bufs, sc, s, spec, c.queries)
+            win, ok, flags, take, new_pos, covmask = scan
+            blk, tvalid, _ = _gather_blocks(take, win, window, budget)
+            # Under shard_map the local slab is this shard's row slice
+            # of every block, so the slot's global block ids gather
+            # exactly the shard's 1/n_shards of its selection.
             v = bufs.values[s][blk].reshape(-1)
             g = bufs.gids[s][blk].reshape(-1)
-            dstate, dhist = _fold(v, g, m_s, spec.center, spec.a, spec.b,
+            m = (bufs.mask[blk]
+                 * tvalid[:, None].astype(jnp.float32)).reshape(-1)
+            dstate, dhist = _fold(v, g, m, spec.center, spec.a, spec.b,
                                   spec.num_groups, spec.nbins,
                                   spec.use_hist, impl,
                                   shard_axes=shard.axes if shard else None)
             state = _merge_f64(sc.state, dstate)
             hist = (sc.hist + jnp.asarray(dhist, jnp.float64)
                     if spec.use_hist else sc.hist)
-            pres_win = bufs.presence[s][win]
-            tainted = sc.tainted | (pres_win
-                                    & act_skip_s[:, None]).any(axis=0)
-            seen_presence = sc.seen_presence + (
-                pres_win & take_s[:, None]).sum(axis=0, dtype=i32)
-            cov = seen_presence >= bufs.presence_total[s]
-            cov = cov | ((new_pos >= le) & ~tainted)
-            exact = sc.exact | cov
-            if gated:
-                # per-slot metrics: exactly the blocks/probes the slot's
-                # solo run would have paid inside its lap
-                s_probes = sc.probes
-                if spec.probe:
-                    s_probes = s_probes + _probe_cost(
-                        union, c.pos, le, window, budget, lookahead,
-                        cover_cap)
-                slot_extra = dict(
-                    processed=sc.processed.at[win].max(take_s),
-                    blocks_fetched=(sc.blocks_fetched
-                                    + take_s.sum(dtype=i64)),
-                    skipped_static=(sc.skipped_static
-                                    + (~ok & covmask_s).sum(dtype=i64)),
-                    skipped_active=(sc.skipped_active
-                                    + act_skip_s.sum(dtype=i64)),
-                    probes=s_probes,
-                    lap_rounds=jnp.where(in_lap & (new_pos >= le), k,
-                                         sc.lap_rounds))
-                s_blocks_fetched = slot_extra["blocks_fetched"]
-                s_skipped_static = slot_extra["skipped_static"]
-                s_skipped_active = slot_extra["skipped_active"]
-                # slot-local round index and row coverage: rows over pass
-                # positions are periodic with period nb (one lap = the
-                # whole scramble), so rows(p) needs only cum_rows + laps
-                p_end = jnp.minimum(new_pos, le)
-                pm1 = p_end - 1
-                rows_abs = jnp.where(
-                    p_end > 0,
-                    (pm1 // nb).astype(i64) * R_total
-                    + bufs.cum_rows[pm1 % nb],
-                    jnp.asarray(0, i64))
-                r_s = (rows_abs - row_offsets[s]).astype(jnp.float64)
-                k_s = k - round_offsets[s]
-            else:
-                slot_extra = {}
-                s_blocks_fetched = blocks_fetched
-                s_skipped_static = skipped_static
-                s_skipped_active = skipped_active
-                s_probes = probes
-                r_s = r
-                k_s = k
-            new_slots.append(SlotCarry(
-                state=state, hist=hist, seen_presence=seen_presence,
-                tainted=tainted, exact=exact, **slot_extra))
+            acct = _slot_account(bufs, sc, s, spec, k, scan)
+            tainted, exact = acct["tainted"], acct["exact"]
 
+            frz = lambda new, old: jnp.where(slot_live, new, old)
+            new_slots.append(SlotCarry(
+                pos=frz(new_pos, sc.pos),
+                state=jax.tree.map(frz, state, sc.state),
+                hist=(frz(hist, sc.hist) if spec.use_hist else None),
+                seen_presence=frz(acct["seen_presence"],
+                                  sc.seen_presence),
+                tainted=frz(tainted, sc.tainted),
+                exact=frz(exact, sc.exact),
+                processed=frz(acct["processed"], sc.processed),
+                blocks_fetched=frz(acct["blocks_fetched"],
+                                   sc.blocks_fetched),
+                skipped_static=frz(acct["skipped_static"],
+                                   sc.skipped_static),
+                skipped_active=frz(acct["skipped_active"],
+                                   sc.skipped_active),
+                probes=frz(acct["probes"], sc.probes),
+                lap_rounds=frz(acct["lap_rounds"], sc.lap_rounds)))
+
+            r_s = _slot_rows(bufs, s, new_pos)
+            k_s = k - round_offsets[s]
             slot_queries = []
             for qi, qc in enumerate(c.queries[s]):
                 nlo, nhi, nest, nrefr, nact = refresh_fns[s][qi](
                     k_s, r_s, state, hist, tainted, exact, qc.lo, qc.hi,
                     qc.est, qc.refreshed, qc.active)
                 fin = qc.finished
-                # a lapped carousel slot stops refreshing (its solo twin
-                # exited the loop at exhaustion); queries still active
-                # there await the host recovery pass
-                skip = fin if not gated else (fin | ~in_lap)
+                # frozen slots stop refreshing (a lapped slot's solo
+                # twin exited the loop at exhaustion); queries still
+                # active there await the host recovery pass
+                skip = fin | ~slot_live
                 lo = jnp.where(skip, qc.lo, nlo)
                 hi = jnp.where(skip, qc.hi, nhi)
                 est = jnp.where(skip, qc.est, nest)
                 refreshed = jnp.where(skip, qc.refreshed, nrefr)
                 active = jnp.where(skip, qc.active, nact)
-                now_fin = ~fin & ~active.any()
+                now_fin = slot_live & ~fin & ~active.any()
                 n_live = n_live - now_fin.astype(i32)
                 snap = lambda new, old: jnp.where(now_fin, new, old)
                 slot_queries.append(PassQueryCarry(
@@ -1296,23 +1259,23 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                     finish_rounds=snap(k_s, qc.finish_rounds),
                     finish_pos=snap(new_pos, qc.finish_pos),
                     finish_blocks_fetched=snap(
-                        s_blocks_fetched, qc.finish_blocks_fetched),
+                        acct["blocks_fetched"],
+                        qc.finish_blocks_fetched),
                     finish_skipped_static=snap(
-                        s_skipped_static, qc.finish_skipped_static),
+                        acct["skipped_static"],
+                        qc.finish_skipped_static),
                     finish_skipped_active=snap(
-                        s_skipped_active, qc.finish_skipped_active),
-                    finish_probes=snap(s_probes, qc.finish_probes),
+                        acct["skipped_active"],
+                        qc.finish_skipped_active),
+                    finish_probes=snap(acct["probes"], qc.finish_probes),
                     snap_counts=snap(state.count, qc.snap_counts),
                     snap_exact=snap(exact, qc.snap_exact),
                     snap_tainted=snap(tainted, qc.snap_tainted)))
             new_queries.append(tuple(slot_queries))
 
         return PassCarry(
-            pos=new_pos, rounds=k, it=c.it + 1, n_live=n_live,
-            processed=processed, blocks_fetched=blocks_fetched,
-            skipped_static=skipped_static, skipped_active=skipped_active,
-            probes=probes, slots=tuple(new_slots),
-            queries=tuple(new_queries))
+            rounds=k, it=c.it + 1, n_live=n_live,
+            slots=tuple(new_slots), queries=tuple(new_queries))
 
     # -- collective cadence (shard.merge_every = K > 1) ------------------
 
@@ -1321,10 +1284,10 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
         collective set per slot on the pending multi-round deltas, then
         every unfinished query's CI refresh / stop test on fully-merged
         stats (delta-schedule index ``c.rounds``), with finish-time
-        snapshots taken from the merged values."""
-        r = jnp.where(c.pos > 0,
-                      bufs.cum_rows[jnp.maximum(c.pos - 1, 0)],
-                      0).astype(jnp.float64)
+        snapshots taken from the merged values. Frozen slots carry
+        zeroed pending deltas (they stopped folding when they froze),
+        so their collectives are no-ops and their queries are already
+        finished or awaiting the dispatch-exit flush."""
         new_slots = []
         new_queries = []
         n_live = c.n_live
@@ -1345,10 +1308,12 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                 pend_vmax=jnp.full_like(sc.pend_vmax, -jnp.inf),
                 pend_hist=(jnp.zeros_like(sc.pend_hist)
                            if spec.use_hist else None)))
+            r_s = _slot_rows(bufs, s, sc.pos)
+            k_s = c.rounds - round_offsets[s]
             slot_queries = []
             for qi, qc in enumerate(c.queries[s]):
                 nlo, nhi, nest, nrefr, nact = refresh_fns[s][qi](
-                    c.rounds, r, state, hist, sc.tainted, sc.exact,
+                    k_s, r_s, state, hist, sc.tainted, sc.exact,
                     qc.lo, qc.hi, qc.est, qc.refreshed, qc.active)
                 fin = qc.finished
                 lo = jnp.where(fin, qc.lo, nlo)
@@ -1362,16 +1327,17 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                 slot_queries.append(qc._replace(
                     lo=lo, hi=hi, est=est, refreshed=refreshed,
                     active=active, finished=fin | now_fin,
-                    stopped_early=snap(c.pos < nb, qc.stopped_early),
-                    finish_rounds=snap(c.rounds, qc.finish_rounds),
-                    finish_pos=snap(c.pos, qc.finish_pos),
+                    stopped_early=snap(sc.pos < lap_ends[s],
+                                       qc.stopped_early),
+                    finish_rounds=snap(k_s, qc.finish_rounds),
+                    finish_pos=snap(sc.pos, qc.finish_pos),
                     finish_blocks_fetched=snap(
-                        c.blocks_fetched, qc.finish_blocks_fetched),
+                        sc.blocks_fetched, qc.finish_blocks_fetched),
                     finish_skipped_static=snap(
-                        c.skipped_static, qc.finish_skipped_static),
+                        sc.skipped_static, qc.finish_skipped_static),
                     finish_skipped_active=snap(
-                        c.skipped_active, qc.finish_skipped_active),
-                    finish_probes=snap(c.probes, qc.finish_probes),
+                        sc.skipped_active, qc.finish_skipped_active),
+                    finish_probes=snap(sc.probes, qc.finish_probes),
                     snap_counts=snap(state.count, qc.snap_counts),
                     snap_exact=snap(sc.exact, qc.snap_exact),
                     snap_tainted=snap(sc.tainted, qc.snap_tainted)))
@@ -1379,64 +1345,34 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
         return c._replace(
             n_live=n_live, slots=tuple(new_slots),
             queries=tuple(new_queries),
-            pend_rounds=jnp.asarray(0, i32),
-            merge_now=jnp.asarray(False))
+            pend_rounds=jnp.asarray(0, i32))
 
     def cadence_body(bufs, c: PassCarry) -> PassCarry:
-        # see build_query_loop.cadence_body: selection gates on the
-        # PRE-merge per-query flags so the merge collective overlaps the
-        # scan; intervals / finished flags only change at merges.
+        # see build_query_loop.cadence_body: the merge fires at the
+        # round start on the replicated pend_rounds counter (a
+        # deterministic schedule — no per-round hint, no pmax, zero
+        # cross-shard communication between merges); selection gates on
+        # the PRE-merge per-query flags so the merge collective overlaps
+        # the scan, and intervals / finished flags only change at
+        # merges.
         sel_queries = c.queries
-        c = jax.lax.cond(c.merge_now,
+        c = jax.lax.cond(c.pend_rounds >= shard.merge_every,
                          functools.partial(_merge_refresh_pass, bufs),
                          lambda x: x, c)
         k = c.rounds + 1
-
-        def flags_src(ok, win):
-            union = jnp.zeros((window,), bool)
-            for s, spec in enumerate(slot_specs):
-                if spec.probe:
-                    rows = [pack_active_device(qc.active, spec.n_words)
-                            for qc in sel_queries[s]]
-                else:
-                    rows = [(~qc.finished).astype(jnp.uint32).reshape(1)
-                            for qc in sel_queries[s]]
-                stack = jnp.stack(rows)
-                act = kops.active_blocks_multi(bufs.words[s][win], stack,
-                                               impl=impl) > 0
-                union = union | (ok[None, :] & act).any(axis=0)
-            return union
-
-        win, ok, union, take, new_pos, covmask = _round_scan(
-            bufs, c.pos, flags_src, nb=nb, window=window, budget=budget)
-        blk, tvalid, take_idx = _gather_blocks(take, win, window, budget)
-        blk, tvalid = _shard_local_blocks(blk, tvalid, shard)
-        m = (bufs.mask[blk]
-             * tvalid[:, None].astype(jnp.float32)).reshape(-1)
-
-        # -- shared accounting: replicated, every round ------------------
-        okc = ok & covmask
-        unionc = union & covmask
-        act_skip = okc & ~unionc
-        skipped_static = (c.skipped_static
-                          + (~ok & covmask).sum(dtype=i64))
-        skipped_active = c.skipped_active + act_skip.sum(dtype=i64)
-        probes = c.probes
-        if any_probe:
-            probes = probes + _probe_cost(union, c.pos, nb, window,
-                                          budget, lookahead, cover_cap)
-        processed = c.processed.at[win].max(take)
-        blocks_fetched = c.blocks_fetched + take.sum(dtype=i64)
-        r = jnp.where(new_pos > 0,
-                      bufs.cum_rows[jnp.maximum(new_pos - 1, 0)],
-                      0).astype(jnp.float64)
-
         new_slots = []
-        might_stop = jnp.asarray(False)
         for s, spec in enumerate(slot_specs):
             sc = c.slots[s]
+            any_unfin = functools.reduce(
+                jnp.logical_or, [~qc.finished for qc in c.queries[s]])
+            slot_live = (sc.pos < lap_ends[s]) & any_unfin
+            scan = _slot_select(bufs, sc, s, spec, sel_queries)
+            win, ok, flags, take, new_pos, covmask = scan
+            blk, tvalid, _ = _gather_blocks(take, win, window, budget)
             v = bufs.values[s][blk].reshape(-1)
             g = bufs.gids[s][blk].reshape(-1)
+            m = (bufs.mask[blk]
+                 * tvalid[:, None].astype(jnp.float32)).reshape(-1)
             dsums, dvmin, dvmax, dhist = _fold_local(
                 v, g, m, spec.center, spec.a, spec.b, spec.num_groups,
                 spec.nbins, spec.use_hist, impl)
@@ -1447,40 +1383,33 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
                 sc.pend_vmax, jnp.asarray(dvmax, jnp.float64).reshape(-1))
             pend_hist = (sc.pend_hist + jnp.asarray(dhist, jnp.float64)
                          if spec.use_hist else None)
-            pres_win = bufs.presence[s][win]
-            tainted = sc.tainted | (pres_win
-                                    & act_skip[:, None]).any(axis=0)
-            seen_presence = sc.seen_presence + (
-                pres_win & take[:, None]).sum(axis=0, dtype=i32)
-            cov = seen_presence >= bufs.presence_total[s]
-            cov = cov | ((new_pos >= nb) & ~tainted)
-            exact = sc.exact | cov
+            acct = _slot_account(bufs, sc, s, spec, k, scan)
+
+            frz = lambda new, old: jnp.where(slot_live, new, old)
             new_slots.append(sc._replace(
-                seen_presence=seen_presence, tainted=tainted, exact=exact,
-                pend_sums=pend_sums, pend_vmin=pend_vmin,
-                pend_vmax=pend_vmax, pend_hist=pend_hist))
+                pos=frz(new_pos, sc.pos),
+                seen_presence=frz(acct["seen_presence"],
+                                  sc.seen_presence),
+                tainted=frz(acct["tainted"], sc.tainted),
+                exact=frz(acct["exact"], sc.exact),
+                processed=frz(acct["processed"], sc.processed),
+                blocks_fetched=frz(acct["blocks_fetched"],
+                                   sc.blocks_fetched),
+                skipped_static=frz(acct["skipped_static"],
+                                   sc.skipped_static),
+                skipped_active=frz(acct["skipped_active"],
+                                   sc.skipped_active),
+                probes=frz(acct["probes"], sc.probes),
+                lap_rounds=frz(acct["lap_rounds"], sc.lap_rounds),
+                pend_sums=frz(pend_sums, sc.pend_sums),
+                pend_vmin=frz(pend_vmin, sc.pend_vmin),
+                pend_vmax=frz(pend_vmax, sc.pend_vmax),
+                pend_hist=(frz(pend_hist, sc.pend_hist)
+                           if spec.use_hist else None)))
 
-            # local stopping hint over the slot's unfinished queries
-            # (see build_query_loop.cadence_body)
-            hstate = merge_moments(sc.state, kops.moments_from_sums(
-                pend_sums, pend_vmin, pend_vmax, spec.center))
-            hhist = (sc.hist + pend_hist) if spec.use_hist else sc.hist
-            for qi, qc in enumerate(c.queries[s]):
-                _, _, _, _, hact = refresh_fns[s][qi](
-                    k, r, hstate, hhist, tainted, exact, qc.lo, qc.hi,
-                    qc.est, qc.refreshed, qc.active)
-                might_stop = might_stop | (~qc.finished & ~hact.any())
-
-        pend_rounds = c.pend_rounds + 1
-        merge_now = jax.lax.pmax(
-            (might_stop | (pend_rounds >= shard.merge_every)
-             ).astype(i32), shard.axes) > 0
         return c._replace(
-            pos=new_pos, rounds=k, it=c.it + 1, processed=processed,
-            blocks_fetched=blocks_fetched, skipped_static=skipped_static,
-            skipped_active=skipped_active, probes=probes,
-            slots=tuple(new_slots), pend_rounds=pend_rounds,
-            merge_now=merge_now)
+            rounds=k, it=c.it + 1, slots=tuple(new_slots),
+            pend_rounds=c.pend_rounds + 1)
 
     def flush(bufs, carry: PassCarry) -> PassCarry:
         # see build_query_loop.flush
@@ -1491,7 +1420,13 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
     loop_body = cadence_body if cadence else body
 
     def cond(c: PassCarry):
-        go = (c.pos < bound) & (c.rounds < max_rounds) & (c.n_live > 0)
+        progressable = jnp.asarray(False)
+        for s in range(S):
+            unfin = functools.reduce(
+                jnp.logical_or, [~qc.finished for qc in c.queries[s]])
+            progressable = progressable | (
+                (c.slots[s].pos < lap_ends[s]) & unfin)
+        go = progressable & (c.rounds < max_rounds) & (c.n_live > 0)
         if chunk is not None:
             go = go & (c.it < chunk)
         return go
@@ -1509,7 +1444,7 @@ def build_pass_loop(*, nb: int, window: int, budget: int, impl: str,
         return jax.jit(chunk_body)
 
     rep = P()
-    data = P(shard.axes)
+    data = P(None, shard.axes)  # row-axis sliced, block axis whole
     ns = len(slot_specs)
     bufs_spec = PassLoopBuffers(
         mask=data, order_pad=rep, static_ok=rep, cum_rows=rep,

@@ -55,6 +55,11 @@ class SlotCheckpoint:
     metrics: Dict[str, int]
     views: Dict[str, object]
     qcs: List[Dict[str, object]]
+    # per-slot cursor (pass coordinates). ``None`` = pre-per-slot-cursor
+    # snapshot: restore falls back to the shared pass cursor clamped to
+    # the slot's lap end, which is exactly where the shared-cursor loop
+    # had this slot.
+    pos: object = None              # Optional[int]
 
 
 @dataclass

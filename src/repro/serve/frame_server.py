@@ -12,11 +12,14 @@ the same scramble. :class:`FrameServer` amortizes it three ways:
      group-by)`` scan signature, so repeat queries (within a batch and
      across batches) never re-upload columns.
   2. **Shared fused-scan passes** — queries with the same filters are
-     planned into one *pass*: a single cursor walk whose per-round device
-     dispatch (:func:`repro.kernels.fused_scan.fused_round_multi`) folds
-     every distinct ``(column, group-by)`` *slot* of the pass at once,
-     with per-query active-word stacks driving the activity test and
-     selection taking the union across queries.
+     planned into one *pass*: one per-round device dispatch
+     (:func:`repro.kernels.fused_scan.fused_round_multi`) advances every
+     distinct ``(column, group-by)`` *slot* of the pass at once. Each
+     slot walks its OWN cursor with its OWN activity flags (the union
+     over the slot's queries), so a slot's selection/fold sequence is
+     the solo run's, whatever else is co-resident; what is amortized is
+     the dispatch, the shared mask/prefilter buffers and the
+     materialization, not the selection.
   3. **Fold sharing** — queries with bitwise-equal scan signatures map to
      the same slot and share one :class:`~repro.aqp.engine._ScanViews`
      fold state; each keeps its own :class:`~repro.aqp.engine.
@@ -29,19 +32,18 @@ lifecycle as **admit / step / retire / finish**, so a serving loop
 walk continuously:
 
   * ``admit`` at any round boundary anchors a new slot at the current
-    cursor position. The pass cursor then runs past ``n_blocks`` in
-    unwrapped *pass coordinates* — a "carousel": each slot's lap is
+    cursor frontier. Slot cursors run past ``n_blocks`` in unwrapped
+    *pass coordinates* — a "carousel": each slot's lap is
     ``[anchor, anchor + n_blocks)``, the block under cursor position
-    ``p`` is ``order[p % n_blocks]``, and a late joiner pays only the
-    blocks it missed (its skipped prefix comes around at the end of its
-    lap; fetches are shared with whatever other slots select meanwhile).
-    Because the scan order is a rotation for every anchor, a slot's lap
-    replays the solo scan ``engine.run(start_block=(start + anchor) %
-    n_blocks)`` — for slots whose selection is membership-independent
-    (non-probe slots, or probe slots whose queries share one activity
-    evolution) the fold/coverage/taint sequence, and therefore every
-    finished query's :class:`~repro.aqp.query.QueryResult`, is bitwise
-    identical to that solo run.
+    ``p`` is ``order[p % n_blocks]``, and a late joiner starts
+    immediately (its skipped prefix comes around at the end of its
+    lap). Because the scan order is a rotation for every anchor and
+    every slot selects with its own flags at its own cursor, a slot's
+    lap replays the solo scan ``engine.run(start_block=(start + anchor)
+    % n_blocks)`` — the fold/coverage/taint sequence, and therefore
+    every finished query's :class:`~repro.aqp.query.QueryResult`, is
+    bitwise identical to that solo run, probe slots included (the
+    slot-level bitwise co-residency contract, docs/serving.md).
   * ``step`` runs one round (host) or one dispatch chunk (device loop),
     snapshotting each query's result the moment it finishes.
   * ``retire`` drops slots whose queries have all finished, freeing fold
@@ -52,21 +54,26 @@ walk continuously:
 
 Under the device-resident pass loop, a frame with a sharded block
 layout (``EngineConfig.shard_rows``; :mod:`repro.aqp.distributed`) runs
-the whole pass SHARDED over the device mesh: each slot's value/group
-slabs are row-sharded, selection and per-query interval state stay
-replicated, and every slot's per-round fold delta merges across the
-mesh inside the ``lax.while_loop`` carry (see ``docs/architecture.md``).
-Anchored (carousel) passes do not compose with the sharded loop; a
-scheduler over a sharded frame steps its passes on host.
+the whole pass SHARDED over the device mesh: the divided scan — each
+slot's value/group slabs are row-slice-sharded, each shard gathers and
+folds only its ``1/n_shards`` row slice of each slot's selection, and
+per-slot cursors / interval state stay replicated (see
+``docs/architecture.md``). Carousel (anchored) passes compose with the
+sharded loop — mid-scan admission is just another static anchor. The
+one exception is the collective cadence: on a ``merge_every > 1`` pass
+a mid-lap joiner's refresh schedule would be quantized to merge
+boundaries, so mid-scan admission and wrapped restores there raise the
+typed :class:`UnsupportedPassConfig` for the scheduler to reroute.
 
-Soundness: a pass skips a block only when NO query in it has an active
-view there, so each query's skipped blocks contain only views inactive
-for that query — exactly the single-query taint invariant, enforced per
-query by the shared accounting. Every query keeps its own delta schedule
-(evaluated at its slot-local OptStop round number, a valid schedule),
-and the recovery pass finishes any view left active at lap exhaustion.
-A late-joining slot is never marked exact before its own lap covers the
-prefix it skipped (`_ScanViews.lap_end` gates exhaustion-exactness).
+Soundness: each slot skips a block only when none of ITS queries has an
+active view there, so each query's skipped blocks contain only views
+inactive for that query — exactly the single-query taint invariant
+(within a slot, queries share the fold and the slot-level selection
+union). Every query keeps its own delta schedule (evaluated at its
+slot-local OptStop round number, a valid schedule), and the recovery
+pass finishes any view left active at lap exhaustion. A late-joining
+slot is never marked exact before its own lap covers the prefix it
+skipped (`_ScanViews.lap_end` gates exhaustion-exactness).
 
 A batch containing a single query (or a pass whose slots reduce to one
 query) runs the same selection/fold computation as ``FastFrame.run`` and
@@ -99,21 +106,27 @@ __all__ = ["FrameServer", "SharedPass", "UnsupportedPassConfig"]
 
 class UnsupportedPassConfig(RuntimeError):
     """A pass configuration the serving stack cannot run — currently
-    carousel admission (anchor > 0) on a sharded device pass loop.
-    Raised by admission-time validation BEFORE any pass state mutates,
-    so a scheduler can catch it and route the queries to a fresh pass
-    instead of crashing the serving loop (the loop builder keeps its own
-    late check as a backstop)."""
+    mid-scan admission (anchor > 0) or a wrapped restore on a sharded
+    pass running the collective cadence (``merge_every > 1``): a
+    mid-lap joiner's observable round boundaries would be merge
+    boundaries, up to K rounds apart from its solo run's refresh
+    schedule. Raised by admission-time validation BEFORE any pass state
+    mutates, so a scheduler can catch it and route the queries to a
+    fresh pass instead of crashing the serving loop (the loop builder
+    keeps its own late check as a backstop)."""
 
 
 class _SlotExec:
     """One (filters, column, group-by) signature inside a pass: the shared
     fold state plus the device buffers and per-query interval states.
 
-    ``anchor`` is the pass-cursor position where the slot was admitted
-    (its lap is ``[anchor, anchor + n_blocks)``; 0 for a static batch)
-    and ``join_round`` the pass round count at admission, so slot-local
-    OptStop rounds are ``pass_rounds - join_round``.
+    ``anchor`` is the pass-coordinate position where the slot was
+    admitted (its lap is ``[anchor, anchor + n_blocks)``; 0 for a static
+    batch) and ``join_round`` the pass round count at admission, so
+    slot-local OptStop rounds are ``pass_rounds - join_round``. ``pos``
+    is the slot's OWN cursor (every slot advances independently; the
+    pass tracks only the frontier ``max(pos)`` for anchoring new
+    admissions).
 
     ``shards`` (a :class:`repro.aqp.distributed.BlockShards`) row-shards
     the slot's value/group slabs over the mesh for the sharded device
@@ -131,6 +144,7 @@ class _SlotExec:
         self.anchor = anchor
         self.join_round = join_round
         self.row_offset = row_offset   # rows before anchor, pass coords
+        self.pos = anchor              # this slot's cursor, pass coords
         self.lap_done_round = None     # pass round when the lap completed
         v = self.views
         # probe slots activity-test their real group bitmap; non-probe
@@ -231,7 +245,9 @@ class SharedPass:
         self.mask_dev = None      # set on first admit (needs a query)
         self.static_ok_dev = None
 
-        self.pos = 0
+        self.pos = 0              # cursor frontier: max over slot cursors
+                                  # (anchors new admissions; each slot
+                                  # advances its own _SlotExec.pos)
         self.rounds = 0
         self.n_live = 0
         self.wrap = False         # sticky: any slot anchored past 0
@@ -258,18 +274,13 @@ class SharedPass:
         return laps * self.R_total + int(self.cum_rows[rem])
 
     @property
-    def horizon(self) -> int:
-        """Static cursor limit: the furthest live lap end."""
-        return max((s.views.lap_end for s in self.slots), default=self.nb)
-
-    @property
     def can_step(self) -> bool:
         """True while stepping can still progress some unfinished query
         (queries stuck active past their lap end wait for the recovery
         pass in :meth:`finish`)."""
         if self.rounds >= self.max_rounds or self.n_live == 0:
             return False
-        return any(not qc.finished and self.pos < s.views.lap_end
+        return any(not qc.finished and s.pos < s.views.lap_end
                    for s in self.slots for qc in s.qcis)
 
     # -- admit -----------------------------------------------------------------
@@ -283,13 +294,18 @@ class SharedPass:
         :class:`~repro.aqp.engine._QueryIntervals` in input order."""
         frame = self.frame
         t0 = self.t0 if t0 is None else t0
-        if self.shards is not None and (self.wrap or self.pos > 0):
+        if (self.shards is not None and self.shards.merge_every > 1
+                and (self.wrap or self.pos > 0)):
             # typed and raised BEFORE any state mutates: the scheduler
-            # catches this and opens a fresh pass for the late joiner
+            # catches this and opens a fresh pass for the late joiner.
+            # Plain sharded carousels compose (anchors are static in the
+            # trace); only the collective cadence cannot host a mid-lap
+            # joiner — its refresh schedule would be quantized to merge
+            # boundaries, up to K rounds off its solo run's.
             raise UnsupportedPassConfig(
-                "carousel admission (anchor > 0) is not supported on a "
-                "sharded frame's device pass loop; disable shard_rows "
-                "or step the pass on host (device_loop=False)")
+                "mid-scan admission (anchor > 0) is not supported on a "
+                "sharded pass with merge_every > 1; admit to a fresh "
+                "pass or run the frame at merge_every=1")
         for q in queries:
             if tuple(f.key() for f in q.filters) != tuple(
                     f.key() for f in self.filters):
@@ -355,7 +371,8 @@ class SharedPass:
             row_offset=s.row_offset, lap_done_round=s.lap_done_round,
             metrics=dict(s.metrics),
             views=s.views.export_state(),
-            qcs=[qc.export_state() for qc in s.qcis])
+            qcs=[qc.export_state() for qc in s.qcis],
+            pos=int(s.pos))
             for s in self.slots]
         results: Dict[int, QueryResult] = dict(self._ext_results)
         t0s: Dict[int, float] = {}
@@ -384,11 +401,12 @@ class SharedPass:
                 self.sampling:
             raise ValueError("checkpoint scan order does not match this "
                              "pass (start/sampling differ)")
-        if cp.wrap and self.shards is not None:
+        if (cp.wrap and self.shards is not None
+                and self.shards.merge_every > 1):
             raise UnsupportedPassConfig(
                 "cannot restore a carousel (wrapped) checkpoint onto a "
-                "sharded device pass loop; resume with "
-                "force_unsharded/force_host")
+                "sharded pass with merge_every > 1; resume with "
+                "force_unsharded/force_host or merge_every=1")
         self.pos, self.rounds = int(cp.pos), int(cp.rounds)
         self.wrap = bool(cp.wrap)
         self.slots = []
@@ -406,6 +424,11 @@ class SharedPass:
                              row_offset=sc.row_offset)
             slot.lap_done_round = sc.lap_done_round
             slot.metrics = dict(sc.metrics)
+            # pre-per-slot-cursor snapshots carry no slot pos: fall back
+            # to the shared cursor clamped to the slot's lap end, which
+            # is where the shared-cursor loop had this slot
+            slot.pos = (int(sc.pos) if sc.pos is not None
+                        else min(int(cp.pos), slot.views.lap_end))
             slot.views.import_state(sc.views)
             for qc, snap in zip(slot.qcis, sc.qcs):
                 qc.import_state(snap)
@@ -438,8 +461,8 @@ class SharedPass:
         s = next(s for s in self.slots if qc in s.qcis)
         le = s.views.lap_end
         k_s = max(self.rounds - s.join_round, 0)
-        r_s = self._rows_at(min(self.pos, le)) - s.row_offset
-        res = qc.result(k_s, self.pos, self.cum_rows, dict(s.metrics),
+        r_s = self._rows_at(min(s.pos, le)) - s.row_offset
+        res = qc.result(k_s, s.pos, self.cum_rows, dict(s.metrics),
                         self._t0[id(qc)], stopped_early=True,
                         rows_covered=r_s)
         qc.finished = True
@@ -514,52 +537,50 @@ class SharedPass:
     def _step_host(self) -> List[AggQuery]:
         frame = self.frame
         cfg = self.cfg
-        pos0 = self.pos
         self._sentinel = None  # host path: quarantine inspects views
         self.rounds += 1
+        # frozen slots — lapped, or every query finished — must not
+        # advance (their solo twin exited its loop; a finished slot's
+        # empty flags would cover ground without selecting). The jitted
+        # round computes all S slots (static shapes); frozen slots'
+        # outputs are simply discarded.
+        live = [s.pos < s.views.lap_end
+                and any(not qc.finished for qc in s.qcis)
+                for s in self.slots]
         stacks = tuple(s.active_stack() for s in self.slots)
-        kwargs = {}
-        if self.wrap:
-            kwargs = dict(
-                wrap=True,
-                limit=jnp.asarray(self.horizon, jnp.int32),
-                lap_ends=tuple(jnp.asarray(s.views.lap_end, jnp.int32)
-                               for s in self.slots))
-        states, hists, flag_stacks, ok_d, new_pos_d = \
+        pos_vec = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+        states, hists, flag_stacks, oks, new_pos_d = \
             kfused.fused_round_multi(
                 self.mask_dev, self.order_pad_dev, self.static_ok_dev,
-                jnp.asarray(pos0, jnp.int32),
+                pos_vec,
                 tuple(s.values for s in self.slots),
                 tuple(s.gids for s in self.slots),
                 tuple(s.words for s in self.slots), stacks,
                 nb=self.nb, window=self.window,
                 budget=cfg.round_blocks,
                 meta=tuple(s.meta for s in self.slots), impl=self.impl,
-                **kwargs)
-        ok = np.asarray(ok_d)
-        new_pos = int(new_pos_d)
-        union = np.logical_or.reduce(
-            [np.asarray(fl).any(axis=0) for fl in flag_stacks])
-        for s, st, h in zip(self.slots, states, hists):
+                anchors=jnp.asarray([s.anchor for s in self.slots],
+                                    jnp.int32))
+        new_pos_v = np.asarray(new_pos_d)
+        newly: List[AggQuery] = []
+        for i, (s, st, h) in enumerate(zip(self.slots, states, hists)):
+            if not live[i]:
+                continue
             le = s.views.lap_end
-            if pos0 >= le:
-                continue  # lapped: no selection lane belongs to it
+            pos0 = s.pos
+            new_pos = int(new_pos_v[i])
+            ok = np.asarray(oks[i])
+            flags = np.asarray(flag_stacks[i]).any(axis=0)
             idx = frame._fused_accounting(
-                self.order, pos0, new_pos, ok, union, s.views.presence,
+                self.order, pos0, new_pos, ok, flags, s.views.presence,
                 s.views.tainted, self.lookahead, cfg.round_blocks,
-                self.cover_cap, s.probe, s.metrics,
-                lap_end=None if not self.wrap else le)
+                self.cover_cap, s.probe, s.metrics, lap_end=le)
             if len(idx):
                 s.views.ingest_delta(idx, st, h)
             s.views.update_exact(new_pos)
+            s.pos = new_pos
             if new_pos >= le and s.lap_done_round is None:
                 s.lap_done_round = self.rounds
-        self.pos = new_pos
-        newly: List[AggQuery] = []
-        for s in self.slots:
-            le = s.views.lap_end
-            if pos0 >= le:
-                continue  # a lapped slot's solo twin exited its loop
             k_s = self.rounds - s.join_round
             r_s = self._rows_at(min(new_pos, le)) - s.row_offset
             for qc in s.qcis:
@@ -574,6 +595,7 @@ class SharedPass:
                         self._t0[id(qc)], stopped_early=new_pos < le,
                         rows_covered=r_s)
                     newly.append(qc.q)
+        self.pos = max([self.pos] + [s.pos for s in self.slots])
         return newly
 
     # -- finish ----------------------------------------------------------------
@@ -596,11 +618,11 @@ class SharedPass:
                     continue
                 qc.collapse_exact()
                 le = s.views.lap_end
-                r_s = self._rows_at(min(self.pos, le)) - s.row_offset
+                r_s = self._rows_at(min(s.pos, le)) - s.row_offset
                 local = self._rec_rounds.get(
                     id(s), self.rounds - s.join_round)
                 self.finished[id(qc)] = qc.result(
-                    local, self.pos, self.cum_rows, s.metrics,
+                    local, s.pos, self.cum_rows, s.metrics,
                     self._t0[id(qc)], False, rows_covered=r_s)
                 qc.finished = True
 
@@ -622,20 +644,13 @@ class SharedPass:
         behavior). ``until_done=False`` runs ONE chunk dispatch and
         writes the carry back to host so admission/retirement can change
         the slot membership before the next step; the loop is rebuilt
-        (and LRU-cached) per membership epoch — anchors, lap ends and
-        round offsets are static in the trace."""
+        (and LRU-cached) per membership epoch — anchors and round
+        offsets are static in the trace."""
         frame = self.frame
         cfg = self.cfg
         nb = self.nb
         slots = self.slots
         shards = self.shards
-        wrap = self.wrap
-        if wrap and shards is not None:
-            raise UnsupportedPassConfig(
-                "carousel passes do not compose with the sharded device "
-                "loop")
-        horizon = self.horizon
-        bound = horizon if wrap else nb
         f64 = lambda x: jnp.asarray(x, jnp.float64)
         i32 = lambda v: jnp.asarray(v, jnp.int32)
         i64 = lambda v: jnp.asarray(v, jnp.int64)
@@ -651,11 +666,10 @@ class SharedPass:
                tuple((len(s.qcis), s.probe, s.views.use_hist)
                      for s in slots),
                self.lookahead, self.max_rounds, self.chunk,
-               (shards.n_shards, shards.shard_blocks, shards.merge_every)
+               (shards.n_shards, shards.shard_rows, shards.merge_every)
                if shards is not None else None,
-               (wrap, horizon,
-                tuple(s.anchor for s in slots),
-                tuple(s.join_round for s in slots)) if wrap else None)
+               tuple(s.anchor for s in slots),
+               tuple(s.join_round for s in slots))
 
         def build():
             slot_specs = tuple(
@@ -677,15 +691,10 @@ class SharedPass:
                 cover_cap=self.cover_cap, max_rounds=self.max_rounds,
                 chunk=self.chunk, slot_specs=slot_specs,
                 refresh_fns=refresh_fns,
-                any_probe=any(s.probe for s in slots),
                 shard=shards.info if shards is not None else None,
-                horizon=horizon if wrap else None, wrap=wrap,
-                lap_ends=(tuple(s.views.lap_end for s in slots)
-                          if wrap else None),
-                round_offsets=(tuple(s.join_round for s in slots)
-                               if wrap else None),
-                row_offsets=(tuple(s.row_offset for s in slots)
-                             if wrap else None))
+                anchors=tuple(s.anchor for s in slots),
+                round_offsets=tuple(s.join_round for s in slots),
+                row_offsets=tuple(s.row_offset for s in slots))
             presence = tuple(rep(s.views.presence) for s in slots)
             presence_total = tuple(
                 rep(s.views.presence_total.astype(np.int32))
@@ -717,28 +726,25 @@ class SharedPass:
                 pend_hist=(jnp.zeros((G, cfg.hist_bins), jnp.float64)
                            if s.views.use_hist else None))
 
-        def _slot_wrap(s):
-            # carousel per-slot coverage/metrics, held ABSOLUTE in the
-            # carry (initialized from host state, written back as-is)
-            if not wrap:
-                return {}
-            return dict(
-                processed=jnp.asarray(s.views.processed),
-                blocks_fetched=i64(s.views.blocks_fetched),
-                skipped_static=i64(s.metrics["skipped_static"]),
-                skipped_active=i64(s.metrics["skipped_active"]),
-                probes=i64(s.metrics["probes"]),
-                lap_rounds=i32(s.lap_done_round or 0))
-
+        # per-slot cursor + coverage/metrics, held ABSOLUTE in the carry
+        # (initialized from host state, written back as-is)
         slot_carries = tuple(
             kfused.SlotCarry(
+                pos=i32(s.pos),
                 state=MomentState(*(f64(x) for x in s.views.state)),
                 hist=(f64(s.views.hist) if s.views.use_hist else None),
                 seen_presence=jnp.asarray(
                     s.views.seen_presence.astype(np.int32)),
                 tainted=jnp.asarray(s.views.tainted),
                 exact=jnp.asarray(s.views.exact),
-                **_slot_pend(s), **_slot_wrap(s))
+                processed=jnp.asarray(s.views.processed),
+                blocks_fetched=i64(s.views.blocks_fetched),
+                skipped_static=i64(s.metrics["skipped_static"]),
+                skipped_active=i64(s.metrics["skipped_active"]),
+                probes=i64(s.metrics["probes"]),
+                lap_rounds=i32(s.lap_done_round
+                               if s.lap_done_round is not None else -1),
+                **_slot_pend(s))
             for s in slots)
         query_carries = tuple(
             tuple(kfused.PassQueryCarry(
@@ -757,58 +763,48 @@ class SharedPass:
                 snap_tainted=jnp.zeros(s.views.G, bool))
                 for qc in s.qcis)
             for s in slots)
-        pend = (dict(pend_rounds=i32(0), merge_now=jnp.asarray(False))
-                if cadence else {})
-        # per-dispatch bases for the shared delta counters (the trivial
-        # pass accumulates skip/probe metrics as deltas in the carry)
-        base_ss = {id(s): s.metrics["skipped_static"] for s in slots}
-        base_sa = {id(s): s.metrics["skipped_active"] for s in slots}
-        base_pr = {id(s): s.metrics["probes"] for s in slots}
+        pend = dict(pend_rounds=i32(0)) if cadence else {}
         carry = kfused.PassCarry(
-            pos=i32(self.pos), rounds=i32(self.rounds), it=i32(0),
+            rounds=i32(self.rounds), it=i32(0),
             n_live=i32(self.n_live),
-            processed=jnp.asarray(slots[0].views.processed),
-            blocks_fetched=i64(slots[0].views.blocks_fetched),
-            skipped_static=i64(0),
-            skipped_active=i64(0), probes=i64(0),
             slots=slot_carries, queries=query_carries, **pend)
 
         while True:
             carry = chunk_fn(bufs, carry)
             if not until_done:
                 break
-            if (int(carry.n_live) == 0 or int(carry.pos) >= bound
+            if (int(carry.n_live) == 0
                     or int(carry.rounds) >= self.max_rounds):
+                break
+            progressable = any(
+                int(sc.pos) < s.views.lap_end
+                and any(not bool(qcar.finished) for qcar in qcars)
+                for s, sc, qcars in zip(slots, carry.slots,
+                                        carry.queries))
+            if not progressable:
                 break
 
         # kernel-layer NaN sentinel: per-slot poison flags over the
         # fetched carry, consumed by quarantine() at this boundary
         self._sentinel = kfused.carry_nonfinite_slots(carry)
 
-        # -- writeback: slots' shared fold state + metrics ----------------
-        self.pos, self.rounds = int(carry.pos), int(carry.rounds)
+        # -- writeback: slots' cursor + shared fold state + metrics -------
+        self.rounds = int(carry.rounds)
         self.n_live = int(carry.n_live)
         host = _host_copy
         for s, scarry in zip(slots, carry.slots):
-            if wrap:
-                _restore_views_from_carry(
-                    s.views, scarry.state, scarry.hist, scarry.processed,
-                    scarry.seen_presence, scarry.tainted, scarry.exact,
-                    scarry.blocks_fetched, s.metrics, 0, 0)
-                s.metrics["skipped_static"] = int(scarry.skipped_static)
-                s.metrics["skipped_active"] = int(scarry.skipped_active)
-                s.metrics["probes"] = int(scarry.probes)
-                if (self.pos >= s.views.lap_end
-                        and s.lap_done_round is None):
-                    s.lap_done_round = int(scarry.lap_rounds)
-            else:
-                _restore_views_from_carry(
-                    s.views, scarry.state, scarry.hist, carry.processed,
-                    scarry.seen_presence, scarry.tainted, scarry.exact,
-                    carry.blocks_fetched, s.metrics, carry.skipped_static,
-                    carry.skipped_active)
-                if s.probe:
-                    s.metrics["probes"] += int(carry.probes)
+            _restore_views_from_carry(
+                s.views, scarry.state, scarry.hist, scarry.processed,
+                scarry.seen_presence, scarry.tainted, scarry.exact,
+                scarry.blocks_fetched, s.metrics, 0, 0)
+            s.metrics["skipped_static"] = int(scarry.skipped_static)
+            s.metrics["skipped_active"] = int(scarry.skipped_active)
+            s.metrics["probes"] = int(scarry.probes)
+            s.pos = int(scarry.pos)
+            if (s.pos >= s.views.lap_end
+                    and s.lap_done_round is None):
+                s.lap_done_round = int(scarry.lap_rounds)
+        self.pos = max([self.pos] + [s.pos for s in slots])
 
         # -- per-query interval state + finish-time snapshot results ------
         newly: List[AggQuery] = []
@@ -827,22 +823,10 @@ class SharedPass:
                     continue
                 snap_counts = host(qcar.snap_counts, np.float64)
                 fpos = int(qcar.finish_pos)
-                if wrap:
-                    rows_cov = (self._rows_at(min(fpos, le))
-                                - s.row_offset)
-                    skipped_static = int(qcar.finish_skipped_static)
-                    skipped_active = int(qcar.finish_skipped_active)
-                    probes = int(qcar.finish_probes)
-                else:
-                    rows_cov = (int(self.cum_rows[fpos - 1])
-                                if fpos else 0)
-                    skipped_static = (base_ss[id(s)]
-                                      + int(qcar.finish_skipped_static))
-                    skipped_active = (base_sa[id(s)]
-                                      + int(qcar.finish_skipped_active))
-                    probes = (base_pr[id(s)]
-                              + (int(qcar.finish_probes)
-                                 if s.probe else 0))
+                rows_cov = self._rows_at(min(fpos, le)) - s.row_offset
+                skipped_static = int(qcar.finish_skipped_static)
+                skipped_active = int(qcar.finish_skipped_active)
+                probes = int(qcar.finish_probes)
                 self.finished[id(qc)] = QueryResult(
                     group_codes=np.arange(s.views.G),
                     estimate=host(qcar.est, np.float64),

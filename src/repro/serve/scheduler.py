@@ -39,6 +39,11 @@ the checkpoint and retries with bounded exponential backoff; after
 config instead — smaller ``chunk_rounds`` on OOM, sharded →
 single-device, device loop → host oracle loop — each rung an existing
 oracle path, so soundness never depends on the failing configuration.
+A rung that changes the per-round work (unsharding puts the divided
+scan back on one device: ~``n_shards`` x the gather/fold per round)
+scales the pass's effective round cost, and every SLO-bearing ticket
+still attached to the pass is immediately re-quoted at the degraded
+rate (``requote`` log event) — deadline budgets never go stale.
 When the ladder is exhausted, running queries are frozen at their
 current sound CI and returned as partial-with-guarantee results
 (``ticket.partial``); the same freeze fires on SLO deadline expiry.
@@ -188,6 +193,14 @@ class _PassState:
         self.chunk: Optional[int] = None  # ladder override (OOM rung)
         self.force_host = False
         self.force_unsharded = False
+        # effective per-round service-time multiplier for THIS pass.
+        # Degradation rungs change what one round costs — unsharding a
+        # mesh-n pass puts the whole divided scan back on one device,
+        # ~n x the per-round work — and both the SLO quotes and the
+        # simulated service time must price rounds at the degraded
+        # rate, not the admission-time one (stale budgets would admit
+        # infeasible deadlines and under-advance the clock).
+        self.cost_mult = 1.0
 
 
 class QueryScheduler:
@@ -298,12 +311,18 @@ class QueryScheduler:
     # -- SLO quoting -----------------------------------------------------------
 
     def quote(self, query: AggQuery, now: Optional[float] = None,
-              deadline: Optional[float] = None) -> AdmissionQuote:
+              deadline: Optional[float] = None,
+              round_cost: Optional[float] = None) -> AdmissionQuote:
         """Price a query's stopping width in rounds (Hoeffding-style
         width projection on the catalog bounds — distribution-free, so
         the quote is an upper-bound planning estimate, not a guarantee)
-        and test it against the deadline's round budget."""
+        and test it against the deadline's round budget. ``round_cost``
+        is the effective per-round service time to price against — the
+        degraded pass rate when quoting against a degraded pass
+        (default: the scheduler's base ``round_cost_s``)."""
         now = self.clock.now() if now is None else now
+        round_cost = (self.round_cost_s if round_cost is None
+                      else float(round_cost))
         frame = self.frame
         cfg = frame.config
         R = frame.scramble.n_rows
@@ -312,7 +331,7 @@ class QueryScheduler:
         target = getattr(query.stop, "eps", None)
         budget = None
         if deadline is not None:
-            budget = int(max(0.0, deadline - now) / self.round_cost_s)
+            budget = int(max(0.0, deadline - now) / round_cost)
         if target is None:
             # no width target (ordering/threshold conditions): admit;
             # the deadline budget is still recorded for observability
@@ -330,7 +349,7 @@ class QueryScheduler:
 
         n_needed = span * span * ln_term / (2.0 * target * target)
         est_rounds = max(1, math.ceil(n_needed / rows_per_round))
-        est_seconds = est_rounds * self.round_cost_s
+        est_seconds = est_rounds * round_cost
         if budget is None:
             return AdmissionQuote(
                 feasible=True, target_width=float(target),
@@ -428,7 +447,8 @@ class QueryScheduler:
         rerouted: List[QueryTicket] = []
         blocked = False
         for tk in ps.pending:
-            q = (self.quote(tk.query, now=t, deadline=tk.deadline)
+            q = (self.quote(tk.query, now=t, deadline=tk.deadline,
+                            round_cost=self._round_cost(ps))
                  if tk.deadline is not None else None)
             if q is not None and not q.feasible:
                 tk.status, tk.quote, tk.finish_t = "rejected", q, t
@@ -522,6 +542,11 @@ class QueryScheduler:
 
     # -- stepping + failure handling -------------------------------------------
 
+    def _round_cost(self, ps: _PassState) -> float:
+        """Effective per-round service time of THIS pass: the base rate
+        times the pass's degradation multiplier."""
+        return self.round_cost_s * ps.cost_mult
+
     def _step_pass(self, t: float, ps: _PassState) -> None:
         r0 = ps.pas.rounds
         hook = self.fault_hook
@@ -539,7 +564,7 @@ class QueryScheduler:
             return
         ps.fails = 0
         ps.steps_since_ckpt += 1
-        t_done = t + (ps.pas.rounds - r0) * self.round_cost_s
+        t_done = t + (ps.pas.rounds - r0) * self._round_cost(ps)
         if skew:
             self._log(t, "skew", round(float(skew), 9))
             t_done += float(skew)
@@ -602,6 +627,7 @@ class QueryScheduler:
             ps.fails = 0
             self._log(t, "degrade", action)
             self._rebuild(ps)
+            self._requote(t, ps)
             self._push(t + backoff, "round", ps.key)
             return
         self._restore(ps)
@@ -637,12 +663,34 @@ class QueryScheduler:
             if qc is not None:
                 tk._qc = qc
 
+    def _requote(self, t: float, ps: _PassState) -> None:
+        """A degrade changed the pass's effective round cost: re-price
+        every SLO-bearing ticket still attached to it so no budget is
+        stale. Running tickets keep running — an infeasible requote just
+        means the deadline freeze will fire later — but their quotes
+        (and the replayable log) now reflect the degraded rate; pending
+        tickets are re-tested by :meth:`_admit` at the next boundary
+        with the same degraded cost."""
+        for tk in ps.running + ps.pending:
+            if tk.deadline is None or tk.status not in ("running",
+                                                        "queued"):
+                continue
+            q = self.quote(tk.query, now=t, deadline=tk.deadline,
+                           round_cost=self._round_cost(ps))
+            tk.quote = q
+            self._log(t, "requote", q.feasible, q.est_rounds,
+                      q.round_budget)
+
     def _degrade_action(self, ps: _PassState,
                         kind: str) -> Optional[str]:
         """Pick the next ladder rung for a repeatedly-failing pass:
         OOM first shrinks the dispatch chunk, then any failure falls
         back sharded -> single device -> host oracle loop. Returns a
-        log label, or None when no rung is left."""
+        log label, or None when no rung is left. Rungs that change the
+        per-round work also scale ``ps.cost_mult`` — the divided scan
+        put back on one device does ``n_shards`` x the gather/fold per
+        round — so quotes and service time re-price afterwards
+        (:meth:`_requote`)."""
         pas = ps.pas
         if kind == "oom":
             cur = ps.chunk if ps.chunk is not None else pas.chunk
@@ -651,6 +699,7 @@ class QueryScheduler:
                 return f"chunk_rounds={ps.chunk}"
         if pas.shards is not None and not ps.force_unsharded:
             ps.force_unsharded = True
+            ps.cost_mult *= float(pas.shards.n_shards)
             return "unsharded"
         if pas.device_pass and not ps.force_host:
             ps.force_host = True

@@ -181,8 +181,8 @@ def scenario_uneven_tail():
 
 
 def scenario_server_pass():
-    """A mixed FrameServer batch through the sharded pass loop (shared
-    cursor, per-slot collective folds, finish-time snapshots)."""
+    """A mixed FrameServer batch through the sharded pass loop (per-slot
+    cursors, per-slot collective folds, finish-time snapshots)."""
     sc = flights_scramble()
     queries = [
         AggQuery(agg="avg", column="dep_delay", group_by="origin",
@@ -205,6 +205,41 @@ def scenario_server_pass():
                                              seed=1)
     for r_sh, r_or in zip(res_sh, res_or):
         assert_sharded_matches_oracle(r_sh, r_or)
+
+
+def scenario_carousel_sharded_lap():
+    """Carousel lap on a sharded merge_every=1 pass: a query admitted
+    mid-scan advances its own slot cursor through the divided scan, wraps
+    past the last block, and its full lap must be BITWISE identical to a
+    single-device solo run rotated to its admission anchor — intervals
+    included (exactly-representable data), probe slot included (the
+    per-slot-cursor contract covers GROUP BY probes too)."""
+    sc = _integer_scramble()          # nb = 196 at block_rows=256
+    nb = sc.n_blocks
+    frame = FastFrame(sc, EngineConfig(shard_rows=True, **CFG))
+    p = FrameServer(frame).open_pass((), seed=1, start_block=0,
+                                     chunk_rounds=2)
+    q0 = AggQuery(agg="avg", column="v", group_by="g",
+                  stop=AbsoluteWidth(eps=1e-9), delta=1e-9)  # probe slot
+    q1 = AggQuery(agg="sum", column="v",
+                  stop=AbsoluteWidth(eps=1e-9), delta=1e-9)
+    (qc0,) = p.admit([q0])
+    for _ in range(2):                # 2 chunks x 2 rounds
+        p.step()
+    (qc1,) = p.admit([q1])            # late joiner, mid-scan
+    assert qc1.slot.anchor > 0 and p.wrap, (qc1.slot.anchor, p.wrap)
+    p.run_to_completion()
+    p.finish()
+    r0 = p.result_of(q0)
+    r1 = p.result_of(q1)
+    oracle = FastFrame(sc, EngineConfig(shard_rows=False, **CFG))
+    assert_sharded_matches_oracle(
+        r0, oracle.run(q0, seed=1, start_block=0), bitwise_ci=True)
+    assert_sharded_matches_oracle(
+        r1, FastFrame(sc, EngineConfig(shard_rows=False, **CFG)).run(
+            q1, seed=1, start_block=qc1.slot.anchor % nb),
+        bitwise_ci=True)
+    assert r0.exact.all() and r1.exact.all()
 
 
 # -- collective cadence (merge_every > 1) ------------------------------------
@@ -280,44 +315,43 @@ def scenario_cadence_superset_sync():
 def scenario_cadence_merge_confirm():
     """A query can never terminate on unmerged stats.
 
-    Adversarial layout: every block is constant 49 or 51, assigned so
-    each shard only ever folds ONE of the two values while every round's
-    global selection mixes them equally (running mean exactly 50, the
-    threshold — globally the CI straddles forever and the scan must run
-    to exhaustion). A loop that terminated on a shard's local hint view
-    (all-49 or all-51 => one-sided CI) would stop in the very first
-    cadence window with estimate ~49; merge-then-confirm must instead
-    fire the collective and keep going."""
+    Adversarial layout for the ROW-SLICE divided scan: within every
+    block, the rows of shard d's slice are constant 49 (even d) or 51
+    (odd d), so each shard's local fold only ever sees ONE of the two
+    values no matter which blocks the cursor picks, while every block's
+    true mean is exactly 50 — the threshold. Globally the CI straddles
+    forever and the scan must run to exhaustion. Between merges the
+    cadence loop runs ZERO collectives, so a shard's local partials are
+    one-sided (all-49 or all-51 => CI clear of the threshold); a loop
+    that consulted that local view would stop inside the very first
+    cadence window with estimate ~49. Termination may only be evaluated
+    at the deterministic merge boundary, AFTER the pooled deltas fold
+    in."""
     import jax
     n_dev = jax.device_count()
     assert n_dev >= 2 and n_dev % 2 == 0, n_dev
-    shard_blocks, block_rows = 4, 128
-    nb = n_dev * shard_blocks
+    nb, block_rows = 16, 128
+    assert block_rows % n_dev == 0, (block_rows, n_dev)
+    slice_rows = block_rows // n_dev
     n = nb * block_rows
     g = np.zeros(n, np.int32)
-    v = np.empty(n, np.float32)
-    for b in range(nb):
-        owner = b // shard_blocks
-        v[b * block_rows:(b + 1) * block_rows] = \
-            49.0 if owner % 2 == 0 else 51.0
+    owner = (np.arange(n) % block_rows) // slice_rows
+    v = np.where(owner % 2 == 0, np.float32(49.0), np.float32(51.0))
     sc = build_scramble({"g": g, "v": v}, catalog={"v": (49.0, 51.0)},
                         block_rows=block_rows, seed=1)
-    # build_scramble shuffles blocks; restore the adversarial layout
+    # build_scramble shuffles blocks, but every block carries the same
+    # row pattern — restore anyway so the layout is assignment-exact
     sc.columns["v"][:] = v.reshape(sc.columns["v"].shape)
     q = AggQuery(agg="avg", column="v", group_by="g",
                  stop=ThresholdSide(threshold=50.0), delta=1e-6)
-    # two shards per round: one all-49, one all-51
-    r_k, r_1 = run_cadence_pair(sc, q, merge_every=4,
-                                round_blocks=2 * shard_blocks,
-                                lookahead_blocks=nb,
-                                sync_lookahead_blocks=nb)
+    r_k, r_1 = run_cadence_pair(sc, q, merge_every=4, round_blocks=2)
     for r in (r_k, r_1):
         assert not r.stopped_early, r.rounds
         assert r.exact.all()
         # center = catalog midpoint 50 => dsum is exactly 0 on the full
         # scan, so the mean is bitwise 50.0 on both paths
         np.testing.assert_array_equal(r.estimate, np.float64(50.0))
-    assert r_k.rounds == r_1.rounds == nb // (2 * shard_blocks)
+    assert r_k.rounds == r_1.rounds == nb // 2
     np.testing.assert_array_equal(r_k.count_seen, r_1.count_seen)
 
 
@@ -350,9 +384,9 @@ def scenario_cadence_early_stop():
 
 
 def scenario_cadence_server_pass():
-    """FrameServer batch through the cadence pass loop (shared
-    pend_rounds/merge_now, per-slot pending folds, flush before the
-    dispatch returns). Exhaustion queries keep the shared cursor
+    """FrameServer batch through the cadence pass loop (replicated
+    pend_rounds counter, per-slot pending folds, flush before the
+    dispatch returns). Exhaustion queries keep every slot's cursor
     schedule identical to the merge_every=1 oracle."""
     sc = flights_scramble()
     queries = [
@@ -385,6 +419,7 @@ ALL = [
     scenario_early_stop_bitwise,
     scenario_uneven_tail,
     scenario_server_pass,
+    scenario_carousel_sharded_lap,
     scenario_cadence_superset_sync,
     scenario_cadence_merge_confirm,
     scenario_cadence_exhaustion,

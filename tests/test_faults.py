@@ -338,6 +338,48 @@ def test_oom_chunk_halving_recovers(scramble):
         assert not tk.partial
 
 
+def test_degrade_requotes_slo_tickets(scramble, x64):
+    """Regression (stale SLO budgets): a degrade must re-price every
+    SLO-bearing ticket at the pass's post-degrade round cost — a
+    ``requote`` event per ticket, the fresh quote on the ticket."""
+    faults = [FaultEvent(0, "dispatch", 0.0),
+              FaultEvent(1, "dispatch", 0.0)]
+    frame = fresh_frame(scramble, device_loop=True)
+    sched = make_scheduler(scramble, frame=frame, chunk_rounds=4,
+                           fault_hook=FaultInjector(faults),
+                           max_retries=1, checkpoint_every=1)
+    rng = np.random.default_rng(3)
+    tk = sched.submit(make_query(rng), deadline=60.0, at=0.0)
+    sched.run_until_idle()
+    kinds = [ev[2] for ev in sched.log]
+    assert "degrade" in kinds
+    assert "requote" in kinds
+    assert tk.status == "done"
+    assert tk.quote is not None
+    # the requoted budget is priced from the degrade time, so it is
+    # strictly below the admission-time budget of the full deadline
+    assert tk.quote.round_budget < int(60.0 / sched.round_cost_s)
+
+
+def test_unsharded_rung_scales_round_cost(scramble):
+    """The unsharded rung puts the divided scan back on one device —
+    ~n_shards x the per-round gather/fold — so the ladder scales the
+    pass's effective round cost by n_shards; the host-loop rung keeps
+    per-round work unchanged."""
+    import types
+    from repro.serve.scheduler import _PassState
+    sched = make_scheduler(scramble)
+    fake_pas = types.SimpleNamespace(
+        shards=types.SimpleNamespace(n_shards=4), device_pass=True,
+        chunk=None)
+    ps = _PassState(("k",), fake_pas, (("k",), 0))
+    assert sched._degrade_action(ps, "dispatch") == "unsharded"
+    assert ps.cost_mult == 4.0
+    assert sched._round_cost(ps) == sched.round_cost_s * 4.0
+    assert sched._degrade_action(ps, "dispatch") == "host-loop"
+    assert ps.cost_mult == 4.0      # host loop: same per-round work
+
+
 # -- quarantine (tentpole part 4) ----------------------------------------------
 
 
@@ -389,15 +431,19 @@ def test_admit_shape_error_isolated(scramble):
 
 
 def test_unsupported_pass_config_raises_before_mutation(scramble):
-    """The sharded-carousel check fires at the top of admit(): a typed
-    error, no slot/live-count mutation."""
+    """The cadence-mid-scan-join check fires at the top of admit(): a
+    typed error, no slot/live-count mutation. (Plain sharded carousels
+    compose since the divided-scan rewrite — only the merge_every > 1
+    collective cadence rejects a mid-lap joiner.)"""
+    import types
     rng = np.random.default_rng(51)
     srv = FrameServer(fresh_frame(scramble))
     p = srv.open_pass([])
     p.admit([make_query(rng)])
     p.step()
     assert p.pos > 0
-    p.shards = object()               # pretend the frame is sharded
+    # pretend the frame is sharded on a collective cadence
+    p.shards = types.SimpleNamespace(merge_every=2)
     n_slots, n_live = len(p.slots), p.n_live
     with pytest.raises(UnsupportedPassConfig):
         p.admit([make_query(rng)])
@@ -532,11 +578,13 @@ def test_chaos_soak_sound_and_replayable(ds, scramble):
 # -- probe-slot co-residency contract (satellite 4 pinning test) ---------------
 
 
-def test_probe_coresidency_sound_not_bitwise(ds, scramble):
+def test_probe_coresidency_bitwise(ds, scramble):
     """Pin the documented contract (docs/serving.md): a GROUP BY probe
-    slot sharing a pass with other queries is SOUND — every group CI
-    brackets its true aggregate — but not promised bitwise-to-solo
-    (selection depends on co-resident membership)."""
+    slot sharing a pass with other queries is BITWISE identical to its
+    solo run — every slot advances its own cursor with its own activity
+    flags, so a co-resident's engagement bits never perturb the probe's
+    selection. (Before per-slot cursors this was only promised sound,
+    not bitwise.)"""
     probe = AggQuery(agg="avg", column="dep_delay", group_by="airline",
                      stop=AbsoluteWidth(eps=2.0), delta=1e-9)
     other = AggQuery(agg="count", column="dep_delay",
@@ -546,6 +594,10 @@ def test_probe_coresidency_sound_not_bitwise(ds, scramble):
     sched.submit(other, at=0.0)
     sched.run_until_idle()
     assert tp.status == "done"
+    solo = fresh_frame(scramble).run(probe, sampling="active_peek",
+                                     start_block=0)
+    assert_bitwise_equal(tp.result, solo)
+    # and the interval is still sound against ground truth per group
     res = tp.result
     col = np.asarray(ds.columns["dep_delay"], dtype=np.float64)
     gid = np.asarray(ds.columns["airline"])

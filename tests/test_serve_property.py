@@ -5,12 +5,14 @@ bounders, stopping conditions and ``device_loop`` on/off.
 
 Scope: every query in the generated batch carries a distinct filter set,
 so each serving pass is a singleton. That is the regime where the server
-GUARANTEES bitwise identity (a shared pass union-selects blocks across
-its queries, which is sound — intervals stay valid — but intentionally
-not bitwise: queries see extra blocks their solo scan would have
-skipped; ``tests/test_serve.py`` covers shared-pass soundness). The
-property fuzzes the singleton guarantee over a much wider space than the
-parametrized suites.
+GUARANTEES bitwise identity (a multi-query SLOT union-selects blocks
+across its same-signature queries, which is sound — intervals stay
+valid — but intentionally not bitwise: queries see extra blocks their
+solo scan would have skipped; ``tests/test_serve.py`` covers
+shared-slot soundness; slot-vs-slot co-residency within a pass is
+bitwise by the per-slot cursor contract). The property fuzzes the
+singleton guarantee over a much wider space than the parametrized
+suites.
 
 A second property covers the carousel regime underneath the scheduler:
 shared-signature non-probe queries joining an in-flight pass mid-scan
@@ -116,9 +118,11 @@ def test_shared_pass_any_admission_retirement_schedule_bitwise(
     slot's admission anchor — the scan order is a rotation, so a late
     joiner's lap IS a solo scan that started where it joined.
 
-    Non-probe (no GROUP BY) keeps slot selection membership-independent,
-    which is exactly the regime where the server guarantees bitwise
-    identity (probe slots union activity across co-resident queries)."""
+    Non-probe (no GROUP BY) keeps each slot's selection independent of
+    which queries share the SLOT — the bitwise contract is slot-level
+    (probe slots with private cursors/flags are bitwise too, pinned by
+    ``test_faults.py::test_probe_coresidency_bitwise``; only queries
+    co-resident in one slot union their activity flags)."""
     days = data.draw(
         st.frozensets(st.integers(0, 6), min_size=2, max_size=7),
         label="days")

@@ -37,6 +37,7 @@ def _scenarios():
     "scenario_groupby_topk", "scenario_filtered_sum", "scenario_taint",
     "scenario_exhaustion_bitwise", "scenario_early_stop_bitwise",
     "scenario_uneven_tail", "scenario_server_pass",
+    "scenario_carousel_sharded_lap",
     "scenario_cadence_superset_sync", "scenario_cadence_merge_confirm",
     "scenario_cadence_exhaustion", "scenario_cadence_early_stop",
     "scenario_cadence_server_pass",
@@ -84,15 +85,15 @@ def test_merge_every_must_be_positive(bad):
     with pytest.raises(ValueError, match="merge_every"):
         EngineConfig(merge_every=bad)
     with pytest.raises(ValueError, match="merge_every"):
-        build_block_shards(64, _FakeMesh(4), merge_every=bad)
+        build_block_shards(64, _FakeMesh(4), 256, merge_every=bad)
 
 
 def test_merge_every_threads_through_layout():
-    shards = build_block_shards(64, _FakeMesh(4), merge_every=4)
+    shards = build_block_shards(64, _FakeMesh(4), 256, merge_every=4)
     assert shards.merge_every == 4
     assert shards.info.merge_every == 4
     # default stays the per-round-merge oracle
-    assert build_block_shards(64, _FakeMesh(4)).info.merge_every == 1
+    assert build_block_shards(64, _FakeMesh(4), 256).info.merge_every == 1
 
 
 # -- block-shard layout (single-device safe) ---------------------------------
@@ -104,30 +105,34 @@ class _FakeMesh:
         self.axis_names = ("shards",)
 
 
-@pytest.mark.parametrize("nb,n_shards", [(157, 8), (61, 4), (8, 8),
-                                         (5, 8), (64, 8)])
-def test_block_shards_layout(nb, n_shards):
-    """Equal-length contiguous shards covering [0, nb) exactly once;
-    padding only past nb."""
-    shards = build_block_shards(nb, _FakeMesh(n_shards))
-    S = shards.shard_blocks
-    assert S == -(-nb // n_shards)
-    assert shards.padded_nb >= nb
-    # padding is strictly less than one block per shard
-    assert shards.padded_nb - nb < n_shards
-    # every real block owned by exactly one shard
-    owner = np.full(nb, -1)
+@pytest.mark.parametrize("block_rows,n_shards", [(157, 8), (61, 4), (8, 8),
+                                                 (5, 8), (64, 8)])
+def test_block_shards_layout(block_rows, n_shards):
+    """Row-slice layout: equal-length contiguous row slices covering
+    [0, block_rows) exactly once; padding only past block_rows; the
+    block axis whole on every shard."""
+    nb = 16
+    shards = build_block_shards(nb, _FakeMesh(n_shards), block_rows)
+    assert shards.nb == nb            # block axis is never split
+    R = shards.shard_rows
+    assert R == -(-block_rows // n_shards)
+    assert shards.padded_block_rows >= block_rows
+    # padding is strictly less than one row slice per shard
+    assert shards.padded_block_rows - block_rows < n_shards
+    # every real row owned by exactly one shard
+    owner = np.full(block_rows, -1)
     for d in range(n_shards):
-        lo, hi = d * S, min((d + 1) * S, nb)
+        lo, hi = d * R, min((d + 1) * R, block_rows)
         assert (owner[lo:hi] == -1).all()
         owner[lo:hi] = d
     assert (owner >= 0).all()
-    # pad_blocks appends zeros only
-    arr = np.arange(nb, dtype=np.float32) + 1.0
-    padded = shards.pad_blocks(arr)
-    assert padded.shape[0] == shards.padded_nb
-    np.testing.assert_array_equal(padded[:nb], arr)
-    assert (padded[nb:] == 0).all()
+    # pad_rows appends zeros only, on the row axis; blocks untouched
+    arr = np.arange(nb * block_rows, dtype=np.float32).reshape(
+        nb, block_rows) + 1.0
+    padded = shards.pad_rows(arr)
+    assert padded.shape == (nb, shards.padded_block_rows)
+    np.testing.assert_array_equal(padded[:, :block_rows], arr)
+    assert (padded[:, block_rows:] == 0).all()
 
 
 # -- Scramble.device_shard uneven-tail regression ----------------------------

@@ -129,6 +129,17 @@ CHECKS = [
          row=("burst", 512),
          metric="speedup",
          floor=2.0),
+    # hard scaling floor, the divided-scan product claim: each shard
+    # gathers+folds only its own row slice, so on parallel hardware
+    # (the *_par projection rows: serialized one-core time / n_shards)
+    # 2 shards must beat one device outright
+    dict(name="sharded_scan-parallel-floor",
+         kind="floor",
+         current="BENCH_sharded_scan_quick.json",
+         key=("config",),
+         row=("mesh2_k1_par",),
+         metric="speedup_vs_single",
+         floor=1.0),
     # per-shard scaling floor: efficiency = speedup_vs_single / n_shards
     dict(name="sharded_scan-efficiency",
          current="BENCH_sharded_scan_quick.json",
